@@ -1,0 +1,102 @@
+"""Ablations over the DRT construction's knobs (paper §II/§IV choices).
+
+Fast MLP-scale sweeps on the non-IID quickstart task (8 agents, ring):
+  * N (clip factor, eq. 13)          — paper uses N = 2K
+  * weight_mode                      — eq. (14) as printed vs exact gradient
+  * consensus_steps per round        — paper uses 3 (after [12])
+Reported: IID test accuracy, final local loss, parameter disagreement.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DecentralizedTrainer, TrainerConfig, ring
+from repro.core.drt import DRTConfig
+from repro.optim import momentum
+
+K, DIM, CLASSES = 8, 16, 4
+
+
+def _data(seed=0, n=256):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(CLASSES, DIM)) * 0.8
+    xs, ys = [], []
+    for k in range(K):
+        cls = np.array([k % CLASSES, (k + 1) % CLASSES])
+        y = rng.choice(cls, size=n)
+        x = centers[y] + rng.normal(size=(n, DIM)) * 1.2
+        xs.append(x.astype(np.float32))
+        ys.append(y.astype(np.int32))
+    yt = rng.integers(0, CLASSES, size=512)
+    xt = centers[yt] + rng.normal(size=(512, DIM)) * 1.2
+    return (jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys))), (
+        jnp.asarray(xt.astype(np.float32)), jnp.asarray(yt.astype(np.int32)),
+    )
+
+
+def _init(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "embed": {"w": jax.random.normal(k1, (DIM, 32)) * 0.3, "b": jnp.zeros((32,))},
+        "blocks": {"w": jax.random.normal(k2, (2, 32, 32)) * 0.3, "b": jnp.zeros((2, 32))},
+        "head": {"w": jnp.zeros((32, CLASSES)), "b": jnp.zeros((CLASSES,))},
+    }
+
+
+def _fwd(p, x):
+    h = jax.nn.relu(x @ p["embed"]["w"] + p["embed"]["b"])
+    for i in range(2):
+        h = jax.nn.relu(h @ p["blocks"]["w"][i] + p["blocks"]["b"][i]) + h
+    return h @ p["head"]["w"] + p["head"]["b"]
+
+
+def _loss(p, batch, rng):
+    x, y = batch
+    return -jnp.mean(
+        jnp.take_along_axis(jax.nn.log_softmax(_fwd(p, x)), y[:, None], axis=1)
+    )
+
+
+def _run(tcfg: TrainerConfig, steps=120):
+    (xs, ys), (xt, yt) = _data()
+    tr = DecentralizedTrainer(_loss, _init, momentum(0.1, 0.9), ring(K), tcfg)
+    st = tr.init(jax.random.key(0))
+    step = jax.jit(tr.local_step)
+    cons = jax.jit(tr.consensus)
+    t0 = time.time()
+    for i in range(steps):
+        idx = jax.random.randint(jax.random.key(i), (K, 64), 0, xs.shape[1])
+        batch = (
+            jnp.take_along_axis(xs, idx[..., None], axis=1),
+            jnp.take_along_axis(ys, idx, axis=1),
+        )
+        st, m = step(st, batch, jax.random.key(i))
+        st, _ = cons(st)
+    p0 = jax.tree.map(lambda v: v[0], st.params)
+    acc = float(jnp.mean((jnp.argmax(_fwd(p0, xt), -1) == yt).astype(jnp.float32)))
+    return dict(
+        acc=acc,
+        loss=float(m["loss"]),
+        disagreement=float(tr.disagreement(st.params)),
+        us_per_call=(time.time() - t0) * 1e6 / steps,
+    )
+
+
+def run():
+    rows = []
+    for N_mult, tag in [(0.5, "K/2"), (2.0, "2K"), (8.0, "8K")]:
+        r = _run(TrainerConfig(algorithm="drt", consensus_steps=3,
+                               drt=DRTConfig(N=N_mult * K)))
+        rows.append(dict(name=f"ablate/N={tag}", **r))
+    for mode in ("paper", "exact_grad"):
+        r = _run(TrainerConfig(algorithm="drt", consensus_steps=3,
+                               drt=DRTConfig(weight_mode=mode)))
+        rows.append(dict(name=f"ablate/weight_mode={mode}", **r))
+    for cs in (1, 3):
+        r = _run(TrainerConfig(algorithm="drt", consensus_steps=cs))
+        rows.append(dict(name=f"ablate/consensus_steps={cs}", **r))
+    return rows

@@ -1,0 +1,67 @@
+"""Combine-step microbenchmark: the communication/compute cost of one
+consensus round, classical vs DRT, gather vs neighbour-permute engines.
+
+Measures wall-time of the local compute pieces on CPU and reports the
+ANALYTIC per-agent collective volume (bytes received) for both exchange
+engines across topologies — the quantity the §Perf hillclimb drives down
+(ring: 2x params via ppermute vs 15x via all-gather at K=16).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import DRTConfig, gather_consensus_step, make_topology
+from repro.core.consensus import collective_bytes_per_step
+from repro.utils.pytree import LayerPartition
+from repro.utils import tree_bytes
+
+
+def _model_stack(key, K: int, n_layers: int = 8, width: int = 256):
+    def one(k):
+        ks = jax.random.split(k, 3)
+        return {
+            "embed": {"w": jax.random.normal(ks[0], (width, width))},
+            "blocks": {"w": jax.random.normal(ks[1], (n_layers, width, width))},
+            "head": {"w": jax.random.normal(ks[2], (width, width))},
+        }
+
+    return jax.vmap(one)(jax.random.split(key, K))
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].get("embed", None) if False else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(K: int = 16):
+    pK = _model_stack(jax.random.key(0), K)
+    part = LayerPartition.build(jax.tree.map(lambda x: x[0], pK))
+    param_bytes = tree_bytes(jax.tree.map(lambda x: x[0], pK))
+    rows = []
+    for topo_name in ("ring", "hypercube", "full"):
+        topo = make_topology(topo_name, K)
+        C = jnp.asarray(topo.c_matrix(), jnp.float32)
+        metro = jnp.asarray(topo.metropolis(), jnp.float32)
+        for algo in ("classical", "drt"):
+            fn = jax.jit(
+                lambda pK, algo=algo: gather_consensus_step(
+                    part, pK, C, DRTConfig(), algorithm=algo, metropolis=metro
+                )[0]
+            )
+            dt = _time(fn, pK)
+            gather = collective_bytes_per_step(topo, param_bytes, "gather")
+            perm = collective_bytes_per_step(topo, param_bytes, "permute")
+            rows.append(dict(
+                topology=topo_name, algorithm=algo, us_per_call=dt * 1e6,
+                gather_recv_mb=gather["recv_bytes"] / 1e6,
+                permute_recv_mb=perm["recv_bytes"] / 1e6,
+                saving=gather["recv_bytes"] / max(perm["recv_bytes"], 1),
+            ))
+    return rows

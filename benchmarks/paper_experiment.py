@@ -1,0 +1,124 @@
+"""Shared harness for the paper's §IV experiments (Table I, Fig. 1, Fig. 2).
+
+One training run per (topology x algorithm) produces everything the three
+artifacts need: steady-state test accuracy (Table I), per-epoch learning
+curves (Fig. 1) and generalization gaps (Fig. 2).  Results are cached to
+JSON so ``benchmarks.run`` executes the sweep once.
+
+Scale: CPU-budgeted reduction of the paper's protocol (16 agents kept; model
+width / samples / epochs reduced; synthetic CIFAR-like data per DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import DecentralizedTrainer, TrainerConfig, make_topology
+from repro.core.topology import PAPER_ER_SEED
+from repro.data import CifarLike, CifarLikeConfig, agent_minibatches
+from repro.models.resnet import init_resnet20, resnet20_accuracy, resnet20_loss
+from repro.optim import adamw
+
+DEFAULTS = dict(
+    agents=16,
+    width=8,
+    image_size=16,
+    epochs=8,
+    batch=32,
+    lr=2e-3,
+    noise=0.1,
+    min_samples=192,
+    max_samples=256,
+    consensus_steps=3,
+)
+TOPOLOGIES = ("ring", "erdos_renyi", "hypercube")
+ALGORITHMS = ("classical", "drt")
+
+CACHE = os.path.join(os.path.dirname(__file__), "..", "results", "paper_experiment.json")
+
+
+def _make_topology(name: str, K: int):
+    if name == "erdos_renyi":
+        return make_topology(name, K, p=0.1, seed=PAPER_ER_SEED)
+    return make_topology(name, K)
+
+
+def run_all(cfg: dict | None = None, cache: str | None = CACHE, verbose: bool = True):
+    cfg = {**DEFAULTS, **(cfg or {})}
+    if cache and os.path.exists(cache):
+        with open(cache) as f:
+            blob = json.load(f)
+        if blob.get("cfg") == cfg:
+            return blob["results"]
+
+    data = CifarLike(CifarLikeConfig(image_size=cfg["image_size"], noise=cfg["noise"], max_shift=0))
+    shards = data.paper_partition(
+        num_agents=cfg["agents"],
+        min_classes=5, max_classes=8,
+        min_samples=cfg["min_samples"], max_samples=cfg["max_samples"],
+        seed=1,
+    )
+    tx, ty = data.test_set(512)
+    test = (jnp.asarray(tx), jnp.asarray(ty))
+
+    results = []
+    for topo_name in TOPOLOGIES:
+        topo = _make_topology(topo_name, cfg["agents"])
+        for algo in ALGORITHMS:
+            t0 = time.time()
+            tr = DecentralizedTrainer(
+                lambda p, b, rng: resnet20_loss(p, b),
+                lambda key: init_resnet20(key, width=cfg["width"]),
+                adamw(cfg["lr"]),
+                topo,
+                TrainerConfig(algorithm=algo, consensus_steps=cfg["consensus_steps"]),
+            )
+            st = tr.init(jax.random.key(0))
+            epoch_fn = jax.jit(tr.epoch)
+            hist = []
+            for e in range(cfg["epochs"]):
+                b = agent_minibatches(shards, batch_size=cfg["batch"], epoch_seed=e)
+                batches = {
+                    "images": jnp.asarray(b["images"]),
+                    "labels": jnp.asarray(b["labels"]),
+                }
+                st, m = epoch_fn(st, batches, jax.random.key(e))
+                p0 = jax.tree.map(lambda x: x[0], st.params)
+                test_acc = float(
+                    resnet20_accuracy(p0, {"images": test[0], "labels": test[1]})
+                )
+                n_ev = min(512, len(shards[0][0]))
+                train_acc = float(resnet20_accuracy(p0, {
+                    "images": jnp.asarray(shards[0][0][:n_ev]),
+                    "labels": jnp.asarray(shards[0][1][:n_ev]),
+                }))
+                hist.append(dict(
+                    epoch=e, loss=float(m["loss"]), test_acc=test_acc,
+                    train_acc=train_acc, gen_gap=train_acc - test_acc,
+                    disagreement=float(m["disagreement"]),
+                ))
+            row = dict(
+                topology=topo_name,
+                lambda2=topo.lambda2(),
+                algorithm=algo,
+                seconds=time.time() - t0,
+                history=hist,
+                steady_test_acc=sum(h["test_acc"] for h in hist[-2:]) / 2,
+                steady_gen_gap=sum(h["gen_gap"] for h in hist[-2:]) / 2,
+            )
+            results.append(row)
+            if verbose:
+                print(
+                    f"  {topo_name:12s} {algo:10s} acc={row['steady_test_acc']:.3f} "
+                    f"gap={row['steady_gen_gap']:.3f} ({row['seconds']:.0f}s)",
+                    flush=True,
+                )
+    if cache:
+        os.makedirs(os.path.dirname(cache), exist_ok=True)
+        with open(cache, "w") as f:
+            json.dump({"cfg": cfg, "results": results}, f, indent=1)
+    return results

@@ -1,0 +1,99 @@
+"""Quickstart: DRT diffusion vs classical diffusion in ~60 seconds on CPU.
+
+Eight agents, a tiny MLP classifier, non-IID shards of a synthetic 2-D task.
+Shows the paper's core effect: DRT diffusion reaches the same (or better)
+consensus solution while *permitting* larger parameter-space disagreement —
+consensus happens in function space.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DecentralizedTrainer, TrainerConfig, ring
+from repro.optim import momentum
+
+K = 8
+DIM, CLASSES = 16, 4
+
+
+def make_data(seed=0, n_per_agent=256):
+    """Non-IID: each agent sees only 2 of the 4 classes."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(CLASSES, DIM)) * 0.8
+    shards = []
+    for k in range(K):
+        cls = np.array([k % CLASSES, (k + 1) % CLASSES])
+        y = rng.choice(cls, size=n_per_agent)
+        x = centers[y] + rng.normal(size=(n_per_agent, DIM)) * 1.2
+        shards.append((x.astype(np.float32), y.astype(np.int32)))
+    # IID test set
+    yt = rng.integers(0, CLASSES, size=512)
+    xt = centers[yt] + rng.normal(size=(512, DIM)) * 1.2
+    return shards, (jnp.asarray(xt.astype(np.float32)), jnp.asarray(yt.astype(np.int32)))
+
+
+def init_fn(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "embed": {"w": jax.random.normal(k1, (DIM, 32)) * 0.3, "b": jnp.zeros((32,))},
+        "blocks": {"w": jax.random.normal(k2, (2, 32, 32)) * 0.3, "b": jnp.zeros((2, 32))},
+        "head": {"w": jnp.zeros((32, CLASSES)), "b": jnp.zeros((CLASSES,))},
+    }
+
+
+def forward(p, x):
+    h = jax.nn.relu(x @ p["embed"]["w"] + p["embed"]["b"])
+    for i in range(2):
+        h = jax.nn.relu(h @ p["blocks"]["w"][i] + p["blocks"]["b"][i]) + h
+    return h @ p["head"]["w"] + p["head"]["b"]
+
+
+def loss_fn(p, batch, rng):
+    x, y = batch
+    logits = forward(p, x)
+    return -jnp.mean(
+        jnp.take_along_axis(jax.nn.log_softmax(logits), y[:, None], axis=1)
+    )
+
+
+def accuracy(p, x, y):
+    return float(jnp.mean((jnp.argmax(forward(p, x), -1) == y).astype(jnp.float32)))
+
+
+def main():
+    shards, (xt, yt) = make_data()
+    xs = jnp.stack([jnp.asarray(x) for x, _ in shards])
+    ys = jnp.stack([jnp.asarray(y) for _, y in shards])
+
+    print(f"{'algorithm':12s} {'test acc':>9s} {'local loss':>11s} {'disagreement':>13s}  time")
+    for algo in ("classical", "drt"):
+        tr = DecentralizedTrainer(
+            loss_fn, init_fn, momentum(0.1, 0.9), ring(K),
+            TrainerConfig(algorithm=algo, consensus_steps=3),
+        )
+        st = tr.init(jax.random.key(0))
+        step = jax.jit(tr.local_step)
+        cons = jax.jit(tr.consensus)
+        t0 = time.time()
+        for i in range(150):
+            idx = jax.random.randint(jax.random.key(i), (K, 64), 0, xs.shape[1])
+            batch = (
+                jnp.take_along_axis(xs, idx[..., None], axis=1),
+                jnp.take_along_axis(ys, idx, axis=1),
+            )
+            st, m = step(st, batch, jax.random.key(i))
+            st, _ = cons(st)
+        p0 = jax.tree.map(lambda v: v[0], st.params)
+        acc = accuracy(p0, xt, yt)
+        dis = float(tr.disagreement(st.params))
+        print(f"{algo:12s} {acc:9.3f} {float(m['loss']):11.4f} {dis:13.4f}  {time.time()-t0:.0f}s")
+    print("\nDRT keeps agents' *functions* aligned while their parameters drift —")
+    print("the disagreement column is the paper's §II story in one number.")
+
+
+if __name__ == "__main__":
+    main()

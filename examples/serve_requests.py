@@ -1,0 +1,12 @@
+"""Batched serving example: prefill a batch of prompts, decode new tokens.
+
+Exercises the full serving stack (prefill -> KV caches incl. SWA ring
+buffers / SSM state -> jit'd decode loop) on a smoke-scale model; the full
+configs run the same code path via the multi-pod dry-run.
+
+Run:  PYTHONPATH=src python examples/serve_requests.py --arch gemma3-27b-smoke
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

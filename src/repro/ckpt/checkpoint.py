@@ -1,0 +1,87 @@
+"""Checkpointing: flat-keyed npz shards of arbitrary pytrees.
+
+Agent-sharded trees (leading K axis) round-trip unchanged; the manifest
+records the tree structure via the flattened key paths, so restore does not
+need a template tree.  Atomic via write-to-tmp + rename.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    return str(p)
+
+
+def _unflatten(flat: dict[str, np.ndarray]):
+    tree: dict = {}
+    for key, val in flat.items():
+        parts = key.split(_SEP)
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return _lists(tree)
+
+
+def _lists(node):
+    """Convert {'#0': .., '#1': ..} dicts back into lists/tuples."""
+    if not isinstance(node, dict):
+        return node
+    node = {k: _lists(v) for k, v in node.items()}
+    if node and all(re.fullmatch(r"#\d+", k) for k in node):
+        return [node[f"#{i}"] for i in range(len(node))]
+    return node
+
+
+def save_checkpoint(directory: str, step: int, tree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    tmp = os.path.join(directory, f".tmp_step_{step:08d}.npz")
+    final = os.path.join(directory, f"step_{step:08d}.npz")
+    np.savez(tmp, **flat)
+    os.replace(tmp, final)
+    manifest = os.path.join(directory, "manifest.json")
+    meta = {"latest": step}
+    if os.path.exists(manifest):
+        meta = json.load(open(manifest))
+        meta["latest"] = max(meta.get("latest", -1), step)
+    json.dump(meta, open(manifest, "w"))
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    manifest = os.path.join(directory, "manifest.json")
+    if not os.path.exists(manifest):
+        return None
+    return json.load(open(manifest)).get("latest")
+
+
+def restore_checkpoint(directory: str, step: int | None = None):
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    return _unflatten(flat), step

@@ -1,0 +1,60 @@
+"""gemma3-27b [dense] — 62L d_model=5376 32H (GQA kv=16) d_ff=21504
+vocab=262144, 5:1 local:global attention, 128k context.
+[hf:google/gemma-3-1b-pt]
+
+Layer pattern is encoded structurally for scan-over-layers: 10 units of
+(5 x local SWA-1024 + 1 x global) + a 2-layer local tail = 62 layers.
+A DRT "layer" is one pattern unit (see DESIGN.md).  Single rope_theta=1e6
+(the real model uses 10k local / 1M global — simplification noted).
+"""
+from repro.models.config import AttnCfg, GroupCfg, LayerCfg, ModelConfig
+from repro.models.registry import register
+
+LOCAL_WINDOW = 1024
+
+
+def full() -> ModelConfig:
+    local = LayerCfg("attn_mlp", window=LOCAL_WINDOW)
+    glob = LayerCfg("attn_mlp", window=None)
+    return ModelConfig(
+        name="gemma3-27b",
+        family="dense",
+        d_model=5376,
+        vocab=262144,
+        d_ff=21504,
+        attn=AttnCfg(n_heads=32, n_kv_heads=16, head_dim=128, qk_norm=True, rope_theta=1e6),
+        groups=(
+            GroupCfg(name="main", repeat=10, unit=(local,) * 5 + (glob,)),
+            GroupCfg(name="tail", repeat=2, unit=(local,)),
+        ),
+        tie_embeddings=True,
+        param_dtype="bfloat16",
+        num_agents=16,
+        source="hf:google/gemma-3-1b-pt",
+    )
+
+
+def reduced() -> ModelConfig:
+    local = LayerCfg("attn_mlp", window=16)
+    glob = LayerCfg("attn_mlp", window=None)
+    return ModelConfig(
+        name="gemma3-27b-smoke",
+        family="dense",
+        d_model=128,
+        vocab=512,
+        d_ff=256,
+        attn=AttnCfg(n_heads=4, n_kv_heads=2, head_dim=32, qk_norm=True, rope_theta=1e6),
+        groups=(
+            GroupCfg(name="main", repeat=1, unit=(local, glob)),
+            GroupCfg(name="tail", repeat=1, unit=(local,)),
+        ),
+        tie_embeddings=True,
+        param_dtype="float32",
+        compute_dtype="float32",
+        num_agents=4,
+        remat=False,
+    )
+
+
+register("gemma3-27b", full)
+register("gemma3-27b-smoke", reduced)

@@ -1,0 +1,46 @@
+"""h2o-danube-3-4b [dense] — 24L d_model=3840 32H (GQA kv=8) d_ff=10240
+vocab=32000, llama+mistral mix with sliding-window attention.
+[arXiv:2401.16818]
+
+SWA window 4096 on every layer (mistral-style) — this makes the arch
+eligible for the long_500k decode shape (KV ring buffers stay at 4096).
+"""
+from repro.models.config import AttnCfg, GroupCfg, LayerCfg, ModelConfig
+from repro.models.registry import register
+
+WINDOW = 4096
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="h2o-danube-3-4b",
+        family="dense",
+        d_model=3840,
+        vocab=32000,
+        d_ff=10240,
+        attn=AttnCfg(n_heads=32, n_kv_heads=8, head_dim=120, qk_norm=False, rope_theta=1e4),
+        groups=(GroupCfg(name="main", repeat=24, unit=(LayerCfg("attn_mlp", window=WINDOW),)),),
+        param_dtype="float32",
+        num_agents=16,
+        source="arXiv:2401.16818",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="h2o-danube-3-4b-smoke",
+        family="dense",
+        d_model=128,
+        vocab=512,
+        d_ff=384,
+        attn=AttnCfg(n_heads=4, n_kv_heads=2, head_dim=32, rope_theta=1e4),
+        groups=(GroupCfg(name="main", repeat=2, unit=(LayerCfg("attn_mlp", window=16),)),),
+        param_dtype="float32",
+        compute_dtype="float32",
+        num_agents=4,
+        remat=False,
+    )
+
+
+register("h2o-danube-3-4b", full)
+register("h2o-danube-3-4b-smoke", reduced)

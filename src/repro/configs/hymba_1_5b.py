@@ -1,0 +1,50 @@
+"""hymba-1.5b [hybrid] — 32L d_model=1600 25H (GQA kv=5) d_ff=5504
+vocab=32001, ssm_state=16, parallel attention + mamba heads.
+[arXiv:2411.13676]
+
+Every block runs attention (SWA-1024) and a mamba mixer in parallel on the
+same normalized input, combined with per-path norms and learnable betas.
+Hymba's three full-attention layers are folded into the SWA+SSM scheme (the
+SSM path carries global context) — simplification noted in DESIGN.md.
+"""
+from repro.models.config import AttnCfg, GroupCfg, LayerCfg, ModelConfig, SSMCfg
+from repro.models.registry import register
+
+WINDOW = 1024
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="hymba-1.5b",
+        family="hybrid",
+        d_model=1600,
+        vocab=32001,
+        d_ff=5504,
+        attn=AttnCfg(n_heads=25, n_kv_heads=5, head_dim=64, qk_norm=False, rope_theta=1e4),
+        ssm=SSMCfg(d_state=16, d_conv=4, expand=2),
+        groups=(GroupCfg(name="main", repeat=32, unit=(LayerCfg("hymba", window=WINDOW),)),),
+        param_dtype="float32",
+        num_agents=16,
+        source="arXiv:2411.13676",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="hymba-1.5b-smoke",
+        family="hybrid",
+        d_model=128,
+        vocab=512,
+        d_ff=256,
+        attn=AttnCfg(n_heads=5, n_kv_heads=1, head_dim=32, rope_theta=1e4),
+        ssm=SSMCfg(d_state=8, d_conv=4, expand=2),
+        groups=(GroupCfg(name="main", repeat=2, unit=(LayerCfg("hymba", window=16),)),),
+        param_dtype="float32",
+        compute_dtype="float32",
+        num_agents=4,
+        remat=False,
+    )
+
+
+register("hymba-1.5b", full)
+register("hymba-1.5b-smoke", reduced)

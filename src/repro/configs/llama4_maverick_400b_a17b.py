@@ -1,0 +1,62 @@
+"""llama4-maverick-400b-a17b [moe] — 48L d_model=5120 40H (GQA kv=8)
+d_ff=8192 vocab=202048, MoE 128 experts top-1, early fusion.
+[hf:meta-llama/Llama-4-Scout-17B-16E]
+
+Maverick interleaves dense and MoE layers (every other layer routed): the
+unit is (dense attn_mlp, MoE attn+128e-top-1+shared-expert) x 24 = 48 layers,
+~400B total / ~17B active.  Decentralized-training memory note (DESIGN.md
+§4): K=4 agents; the agent axis is replicated while the expert dimension
+shards over the mesh ``data`` axis (expert parallelism) and heads/ffn over
+``model``.
+"""
+from repro.models.config import AttnCfg, GroupCfg, LayerCfg, ModelConfig, MoECfg
+from repro.models.registry import register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-maverick-400b-a17b",
+        family="moe",
+        d_model=5120,
+        vocab=202048,
+        d_ff=8192,
+        attn=AttnCfg(n_heads=40, n_kv_heads=8, head_dim=128, qk_norm=False, rope_theta=5e5),
+        moe=MoECfg(
+            n_experts=128,
+            top_k=1,
+            d_ff_expert=8192,
+            shared_d_ff=8192,
+            capacity_factor=1.25,
+            group_size=4096,
+        ),
+        groups=(
+            GroupCfg(name="main", repeat=24, unit=(LayerCfg("attn_mlp"), LayerCfg("moe"))),
+        ),
+        param_dtype="bfloat16",
+        num_agents=4,
+        expert_axis="data",
+        source="hf:meta-llama/Llama-4-Scout-17B-16E",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-maverick-400b-a17b-smoke",
+        family="moe",
+        d_model=128,
+        vocab=512,
+        d_ff=256,
+        attn=AttnCfg(n_heads=4, n_kv_heads=2, head_dim=32, rope_theta=5e5),
+        moe=MoECfg(n_experts=4, top_k=1, d_ff_expert=256, shared_d_ff=256, group_size=64),
+        groups=(
+            GroupCfg(name="main", repeat=1, unit=(LayerCfg("attn_mlp"), LayerCfg("moe"))),
+        ),
+        param_dtype="float32",
+        compute_dtype="float32",
+        num_agents=4,
+        remat=False,
+    )
+
+
+register("llama4-maverick-400b-a17b", full)
+register("llama4-maverick-400b-a17b-smoke", reduced)

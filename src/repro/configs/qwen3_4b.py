@@ -1,0 +1,39 @@
+"""qwen3-4b [dense] — 36L d_model=2560 32H (GQA kv=8) d_ff=9728 vocab=151936,
+qk_norm, GQA.  [hf:Qwen/Qwen3-8B]"""
+from repro.models.config import AttnCfg, GroupCfg, LayerCfg, ModelConfig
+from repro.models.registry import register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-4b",
+        family="dense",
+        d_model=2560,
+        vocab=151936,
+        d_ff=9728,
+        attn=AttnCfg(n_heads=32, n_kv_heads=8, head_dim=128, qk_norm=True, rope_theta=1e6),
+        groups=(GroupCfg(name="main", repeat=36, unit=(LayerCfg("attn_mlp"),)),),
+        param_dtype="float32",
+        num_agents=16,
+        source="hf:Qwen/Qwen3-8B",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-4b-smoke",
+        family="dense",
+        d_model=128,
+        vocab=512,
+        d_ff=384,
+        attn=AttnCfg(n_heads=4, n_kv_heads=2, head_dim=32, qk_norm=True, rope_theta=1e6),
+        groups=(GroupCfg(name="main", repeat=2, unit=(LayerCfg("attn_mlp"),)),),
+        param_dtype="float32",
+        compute_dtype="float32",
+        num_agents=4,
+        remat=False,
+    )
+
+
+register("qwen3-4b", full)
+register("qwen3-4b-smoke", reduced)

@@ -1,0 +1,47 @@
+"""The four assigned input shapes, plus per-arch applicability rules."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+Mode = Literal["train", "prefill", "decode"]
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: Mode
+
+
+TRAIN_4K = InputShape("train_4k", 4_096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32_768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524_288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+# archs eligible for long_500k: sub-quadratic context handling (SSM state or
+# sliding-window KV).  Everything else is a documented SKIP (DESIGN.md §4).
+LONG_CONTEXT_OK = {
+    "falcon-mamba-7b",  # attn-free SSM
+    "hymba-1.5b",  # hybrid: SSM + SWA
+    "h2o-danube-3-4b",  # SWA everywhere
+    "gemma3-27b",  # 5:1 local:global — local ring buffers; global full-KV
+}
+
+SKIP_NOTES = {
+    ("llava-next-34b", "long_500k"): "full attention; 500k KV infeasible",
+    ("llama4-maverick-400b-a17b", "long_500k"): "full attention",
+    ("qwen3-8b", "long_500k"): "full attention",
+    ("qwen3-4b", "long_500k"): "full attention",
+    ("kimi-k2-1t-a32b", "long_500k"): "full attention",
+    ("whisper-large-v3", "long_500k"): "decoder context 448; encoder fixed 1500",
+}
+
+
+def applicable(arch: str, shape: InputShape) -> tuple[bool, str]:
+    if shape.name == "long_500k" and arch not in LONG_CONTEXT_OK:
+        return False, SKIP_NOTES.get((arch, shape.name), "full attention")
+    return True, ""

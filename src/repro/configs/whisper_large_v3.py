@@ -1,0 +1,51 @@
+"""whisper-large-v3 [audio] — enc-dec, 32L each, d_model=1280 20H (kv=20)
+d_ff=5120 vocab=51866, conv frontend stubbed.  [arXiv:2212.04356]
+
+The mel-spectrogram + conv feature extractor is a STUB per the assignment
+carve-out: input_specs provides frame embeddings (B, 1500, 1280).  The
+32-layer bidirectional encoder, 32-layer causal decoder with cross-attention,
+loss and serving paths are fully implemented.  Note: the real decoder caps
+context at 448 tokens — decode_32k is lowered mechanically and flagged in
+EXPERIMENTS.md; long_500k is skipped.
+"""
+from repro.models.config import AttnCfg, EncoderCfg, GroupCfg, LayerCfg, ModelConfig
+from repro.models.registry import register
+
+N_FRAMES = 1500
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-large-v3",
+        family="audio",
+        d_model=1280,
+        vocab=51866,
+        d_ff=5120,
+        attn=AttnCfg(n_heads=20, n_kv_heads=20, head_dim=64, qk_norm=False, rope_theta=1e4),
+        groups=(GroupCfg(name="dec", repeat=32, unit=(LayerCfg("attn_mlp"),)),),
+        encoder=EncoderCfg(n_layers=32, n_frames=N_FRAMES),
+        param_dtype="float32",
+        num_agents=16,
+        source="arXiv:2212.04356",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-large-v3-smoke",
+        family="audio",
+        d_model=128,
+        vocab=512,
+        d_ff=256,
+        attn=AttnCfg(n_heads=4, n_kv_heads=4, head_dim=32, rope_theta=1e4),
+        groups=(GroupCfg(name="dec", repeat=2, unit=(LayerCfg("attn_mlp"),)),),
+        encoder=EncoderCfg(n_layers=2, n_frames=32),
+        param_dtype="float32",
+        compute_dtype="float32",
+        num_agents=4,
+        remat=False,
+    )
+
+
+register("whisper-large-v3", full)
+register("whisper-large-v3-smoke", reduced)

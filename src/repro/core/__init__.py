@@ -1,0 +1,62 @@
+"""The paper's primary contribution: DRT diffusion for decentralized learning."""
+from repro.core.topology import (
+    Topology,
+    make_topology,
+    ring,
+    hypercube,
+    erdos_renyi,
+    full,
+    star,
+    chain,
+    torus2d,
+)
+from repro.core.drt import (
+    DRTConfig,
+    drt_mixing_matrices,
+    drt_weights_from_params,
+    drt_distance,
+    drt_sq_bound,
+)
+from repro.core.diffusion import (
+    classical_mixing_matrices,
+    classical_combine,
+    metropolis_matrix,
+)
+from repro.core.consensus import (
+    gather_consensus_step,
+    PermuteConsensus,
+    permutation_decomposition,
+    collective_bytes_per_step,
+)
+from repro.core.decentralized import (
+    DecentralizedTrainer,
+    DecentralizedState,
+    TrainerConfig,
+)
+
+__all__ = [
+    "Topology",
+    "make_topology",
+    "ring",
+    "hypercube",
+    "erdos_renyi",
+    "full",
+    "star",
+    "chain",
+    "torus2d",
+    "DRTConfig",
+    "drt_mixing_matrices",
+    "drt_weights_from_params",
+    "drt_distance",
+    "drt_sq_bound",
+    "classical_mixing_matrices",
+    "classical_combine",
+    "metropolis_matrix",
+    "gather_consensus_step",
+    "PermuteConsensus",
+    "permutation_decomposition",
+    "collective_bytes_per_step",
+    "DecentralizedTrainer",
+    "DecentralizedState",
+    "TrainerConfig",
+]

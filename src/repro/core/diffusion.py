@@ -1,0 +1,29 @@
+"""Classical diffusion baseline (paper eqs. 3a/3b with Metropolis weights).
+
+This is the algorithm DRT diffusion is compared against in the paper's Table I
+/ Figures 1-2.  The combine step uses a *static* (K, K) mixing matrix applied
+uniformly to every layer; we reuse the per-layer combine machinery by
+broadcasting it to (L, K, K).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.topology import Topology
+from repro.utils.pytree import LayerPartition
+
+
+def metropolis_matrix(topology: Topology) -> np.ndarray:
+    return topology.metropolis()
+
+
+def classical_mixing_matrices(topology: Topology, num_layers: int) -> jnp.ndarray:
+    """Static Metropolis A broadcast over DRT layers: (L, K, K)."""
+    A = jnp.asarray(topology.metropolis(), jnp.float32)
+    return jnp.broadcast_to(A, (num_layers, *A.shape))
+
+
+def classical_combine(partition: LayerPartition, topology: Topology, psi_K):
+    A = classical_mixing_matrices(topology, partition.num_layers)
+    return partition.combine(A, psi_K)

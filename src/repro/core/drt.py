@@ -1,0 +1,177 @@
+"""DRT diffusion combination weights (paper §II, eqs. 8-14).
+
+Everything runs in log space: with L >= 30 layers the raw product
+``2^(L+1) * prod_p (1 + d2_p / (n2_p + kappa))`` overflows float32, so we carry
+``log( a~ )`` and normalize with a shifted exponential (softmax-style).  This
+is mathematically identical to the paper's construction — the normalization
+(12) is scale invariant per (k, p) column.
+
+Index conventions (matching the paper):
+  d2[p, l, k] = || w_k^(p) - w_l^(p) ||^2   (symmetric in l, k)
+  n2[p, l]    = || w_l^(p) ||^2
+  A[p, l, k]  = weight that agent k applies to psi_l for layer p.
+Columns (fixed k, summing over l) are stochastic: sum_l A[p, l, k] = 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_NEG_INF = -1e30
+
+WeightMode = Literal["paper", "exact_grad"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DRTConfig:
+    """Hyper-parameters of the DRT mixing-matrix construction.
+
+    ``N``: clip factor of eq. (13); the paper's experiments use N = 2K (set
+    N=None to get that default).  Guarantees min positive entry
+    >= 1/((K-1)N+1) (Lemma 1).
+    ``kappa``: numerical-stability constant of eq. (10).
+    ``weight_mode``: 'paper' implements eq. (14) exactly as printed
+    (denominator d2_{p*} + kappa); 'exact_grad' uses the true gradient of the
+    penalty in (10) (denominator (n2 + kappa + d2_{p*})).
+    """
+
+    N: float | None = None
+    kappa: float = 1e-6
+    weight_mode: WeightMode = "paper"
+
+    def resolve_N(self, K: int) -> float:
+        return float(2 * K) if self.N is None else float(self.N)
+
+
+def drt_log_unnormalized(
+    d2: jax.Array,
+    n2: jax.Array,
+    C: jax.Array,
+    kappa: float,
+    weight_mode: WeightMode = "paper",
+) -> jax.Array:
+    """log a~_{lk}^{(p)} for l != k (eq. 14), -inf on non-edges and diagonal.
+
+    d2: (L, K, K), n2: (L, K), C: (K, K) with C[l, k] > 0 iff l in N_k.
+    Returns (L, K, K).
+    """
+    L = d2.shape[0]
+    d2 = d2.astype(jnp.float32)
+    n2 = n2.astype(jnp.float32)
+    # ratio[p, l, k] = d2[p, l, k] / (||w_l^(p)||^2 + kappa)
+    ratio = d2 / (n2[:, :, None] + kappa)
+    # log prod_p (1 + ratio) + (L+1) log 2, per (l, k)
+    log_prod = jnp.sum(jnp.log1p(ratio), axis=0) + (L + 1) * jnp.log(2.0)  # (K, K)
+    if weight_mode == "paper":
+        log_denom = jnp.log(d2 + kappa)  # (L, K, K)
+    elif weight_mode == "exact_grad":
+        # d/dw_k of the (10) penalty pulls a 1/((1 + ratio_{p*}) (n2 + kappa))
+        # factor = 1 / (n2 + kappa + d2_{p*}).
+        log_denom = jnp.log(n2[:, :, None] + kappa + d2)
+    else:
+        raise ValueError(f"unknown weight_mode {weight_mode!r}")
+    log_a = log_prod[None, :, :] - log_denom + jnp.log(C)[None, :, :]
+    K = d2.shape[1]
+    eye = jnp.eye(K, dtype=bool)
+    edge_mask = (C > 0) & ~eye
+    return jnp.where(edge_mask[None], log_a, _NEG_INF)
+
+
+def drt_clip_and_self(
+    log_a: jax.Array,
+    C: jax.Array,
+    N: float,
+) -> jax.Array:
+    """Eq. (13): clip off-diagonal entries at N x (smallest positive entry of
+    the column), then set the self weight to c_kk/(n_k - 1) x sum of the rest.
+
+    All in log space.  Returns (L, K, K) log a~ including the diagonal.
+    """
+    K = log_a.shape[1]
+    eye = jnp.eye(K, dtype=bool)
+    edge_mask = ((C > 0) & ~eye)[None]  # (1, K, K)
+    # smallest positive entry per (p, k) column (over l), i.e. min over edges
+    log_min = jnp.min(jnp.where(edge_mask, log_a, -_NEG_INF), axis=1, keepdims=True)
+    log_clipped = jnp.minimum(log_a, jnp.log(N) + log_min)
+    log_clipped = jnp.where(edge_mask, log_clipped, _NEG_INF)
+    # self weight: a~_kk = c_kk / (n_k - 1) * sum_{l != k} a~_lk  (logsumexp)
+    n_k = jnp.sum(C > 0, axis=0).astype(jnp.float32)  # includes self loop
+    c_kk = jnp.diagonal(C).astype(jnp.float32)
+    denom = jnp.maximum(n_k - 1.0, 1.0)
+    log_sum = jax.nn.logsumexp(jnp.where(edge_mask, log_clipped, _NEG_INF), axis=1)
+    log_self = jnp.log(c_kk / denom)[None, :] + log_sum  # (L, K)
+    log_full = jnp.where(
+        eye[None], jnp.broadcast_to(log_self[:, None, :], log_clipped.shape), log_clipped
+    )
+    return log_full
+
+
+def drt_normalize(log_a: jax.Array, C: jax.Array) -> jax.Array:
+    """Eq. (12): column normalization, shifted-exp for stability."""
+    K = log_a.shape[1]
+    mask = (C > 0)[None]
+    masked = jnp.where(mask, log_a, _NEG_INF)
+    m = jnp.max(masked, axis=1, keepdims=True)
+    ex = jnp.where(mask, jnp.exp(masked - m), 0.0)
+    return ex / jnp.sum(ex, axis=1, keepdims=True)
+
+
+def drt_mixing_matrices(
+    d2: jax.Array,
+    n2: jax.Array,
+    C: jax.Array,
+    cfg: DRTConfig,
+) -> jax.Array:
+    """Full eqs. (12)-(14) pipeline: distances -> A_i^(p).
+
+    Returns A of shape (L, K, K), column-stochastic over axis 1, supported on
+    the graph of C (Lemma 1 compatibility).
+    """
+    K = d2.shape[1]
+    N = cfg.resolve_N(K)
+    C = jnp.asarray(C, jnp.float32)
+    log_a = drt_log_unnormalized(d2, n2, C, cfg.kappa, cfg.weight_mode)
+    log_full = drt_clip_and_self(log_a, C, N)
+    return drt_normalize(log_full, C)
+
+
+def drt_weights_from_params(partition, params_K, C, cfg: DRTConfig) -> jax.Array:
+    """Convenience: agent-stacked params -> per-layer mixing matrices."""
+    d2, n2 = partition.pairwise_sq_dists(params_K)
+    return drt_mixing_matrices(d2, n2, C, cfg)
+
+
+# ---------------------------------------------------------------------------
+# The DRT distance itself (eqs. 8, 9) — used by tests / analysis
+# ---------------------------------------------------------------------------
+
+
+def drt_distance(partition, w_a, w_b, kappa: float = 0.0) -> jax.Array:
+    """Linear DRT bound, eq. (8): prod_p (1 + ||da_p|| / ||a_p||) - 1."""
+    diff = jax.tree.map(jnp.subtract, w_a, w_b)
+    d = jnp.sqrt(partition.sq_norms(diff))
+    n = jnp.sqrt(partition.sq_norms(w_b))
+    return jnp.exp(jnp.sum(jnp.log1p(d / (n + kappa)))) - 1.0
+
+
+def drt_sq_bound(partition, w_a, w_b, kappa: float = 0.0) -> jax.Array:
+    """Quadratic DRT bound, eq. (9): 2^(L+1) prod_p (1 + d2/n2) + 2.
+
+    Computed in log space, then exponentiated (may be inf for huge L — that is
+    the bound's value, not an implementation error).
+    """
+    diff = jax.tree.map(jnp.subtract, w_a, w_b)
+    d2 = partition.sq_norms(diff)
+    n2 = partition.sq_norms(w_b)
+    L = partition.num_layers
+    log_bound = (L + 1) * jnp.log(2.0) + jnp.sum(jnp.log1p(d2 / (n2 + kappa)))
+    return jnp.exp(log_bound) + 2.0
+
+
+def metropolis_layered(A: np.ndarray, L: int) -> jax.Array:
+    """Broadcast a static (K, K) mixing matrix to (L, K, K) for the combine."""
+    return jnp.broadcast_to(jnp.asarray(A, jnp.float32), (L, *A.shape))

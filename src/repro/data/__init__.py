@@ -1,0 +1,10 @@
+from repro.data.synthetic import SyntheticTokenStream, TokenStreamConfig
+from repro.data.cifar_like import CifarLike, CifarLikeConfig, agent_minibatches
+
+__all__ = [
+    "SyntheticTokenStream",
+    "TokenStreamConfig",
+    "CifarLike",
+    "CifarLikeConfig",
+    "agent_minibatches",
+]

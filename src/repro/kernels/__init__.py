@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the performance hot spots (validated in interpret
+mode on CPU; see EXPERIMENTS.md §Perf for the HBM-traffic math per kernel).
+
+  drt_dist        fused DRT distance statistics (eq. 14 inner loop)
+  weighted_combine fused neighbour combine (the combination step 3b/11)
+  selective_scan  chunked Mamba-1 recurrence, VMEM-carried state
+  flash_attention online-softmax attention, VMEM score tiles
+"""
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ops import drt_dist, selective_scan, weighted_combine
+
+__all__ = [
+    "ops",
+    "ref",
+    "drt_dist",
+    "weighted_combine",
+    "selective_scan",
+    "flash_attention",
+]

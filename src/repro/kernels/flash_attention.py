@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: flash attention (forward).
+
+The dry-run profile shows the softmax score chains are the dominant memory
+term for every full-attention arch (llava prefill_32k: ~60% of HBM traffic is
+f32 (B,H,Sq,kv_chunk) score/exp/select tensors — XLA materializes them even
+in the chunked jnp formulation).  This kernel keeps the (blk_q, blk_k) score
+tile, the online-softmax statistics and the output accumulator in VMEM:
+HBM traffic drops to reading q/k/v once and writing o once — the flash
+roofline minimum.
+
+Schedule: grid = (B*H, Sq/BLK_Q, Skv/BLK_K); the KV axis is the minor
+(sequential) grid dim, so the m/l/acc scratch carries across KV steps of one
+query tile.  MXU-aligned tiles (BLK_Q x hd and BLK_K x hd multiples of
+8 x 128); causal masking from global tile indices.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+BLK_Q = 128
+BLK_K = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale, causal):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(F32) * scale  # (BLK_Q, hd)
+    k = k_ref[0].astype(F32)  # (BLK_K, hd)
+    v = v_ref[0].astype(F32)  # (BLK_K, hd)
+    s = jnp.dot(q, k.T, preferred_element_type=F32)  # (BLK_Q, BLK_K)
+    if causal:
+        q_pos = qi * q_ref.shape[1] + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 0
+        )
+        k_pos = ki * k_ref.shape[1] + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1
+        )
+        s = jnp.where(k_pos <= q_pos, s, -1e30)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(p, v, preferred_element_type=F32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "interpret", "blk_q", "blk_k")
+)
+def flash_attention(
+    q: jax.Array,  # (B, H, Sq, hd)
+    k: jax.Array,  # (B, H, Skv, hd)
+    v: jax.Array,  # (B, H, Skv, hd)
+    *,
+    causal: bool = True,
+    interpret: bool = True,
+    blk_q: int = BLK_Q,
+    blk_k: int = BLK_K,
+) -> jax.Array:
+    """Returns (B, H, Sq, hd) in q.dtype.  Sq/Skv padded to tile multiples
+    internally (padded keys are masked; padded queries are discarded)."""
+    B, H, Sq, hd = q.shape
+    Skv = k.shape[2]
+    scale = 1.0 / np.sqrt(hd)
+    blk_q = min(blk_q, max(Sq, 8))
+    blk_k = min(blk_k, max(Skv, 8))
+    pad_q = (-Sq) % blk_q
+    pad_k = (-Skv) % blk_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        # padded keys masked via the causal test against real positions only
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Sq_p, Skv_p = Sq + pad_q, Skv + pad_k
+    bh = B * H
+    qf = q.reshape(bh, Sq_p, hd)
+    kf = k.reshape(bh, Skv_p, hd)
+    vf = v.reshape(bh, Skv_p, hd)
+
+    if not causal and pad_k:
+        # non-causal: mask padded keys by giving them -inf scores through a
+        # sentinel: roll padding into the causal test is unavailable, so use
+        # a key-validity mask folded into k itself is incorrect; instead we
+        # rely on the caller to pass tile-aligned Skv for non-causal use.
+        raise ValueError("non-causal flash kernel requires Skv % blk_k == 0")
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal or pad_k > 0),
+        grid=(bh, Sq_p // blk_q, Skv_p // blk_k),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, blk_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, blk_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, Sq_p, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, 1), F32),
+            pltpu.VMEM((blk_q, 1), F32),
+            pltpu.VMEM((blk_q, hd), F32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq_p, hd)[:, :, :Sq]

@@ -1,0 +1,40 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On this CPU container the kernels run in interpret mode (the body executes in
+Python/XLA-CPU and is validated against the ref.py oracles); on TPU pass
+``interpret=False`` (or set REPRO_PALLAS_INTERPRET=0).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.combine import weighted_combine as _combine
+from repro.kernels.drt_dist import drt_dist as _drt_dist
+from repro.kernels.selective_scan import selective_scan as _selective_scan
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def drt_dist(x, y, *, interpret: bool | None = None):
+    """Fused [sum((x-y)^2), sum(y^2)] -> (2,) f32."""
+    return _drt_dist(x, y, interpret=_INTERPRET if interpret is None else interpret)
+
+
+def weighted_combine(a, xs, *, interpret: bool | None = None):
+    """out = sum_n a[n] * xs[n] over the leading neighbour axis."""
+    return _combine(a, xs, interpret=_INTERPRET if interpret is None else interpret)
+
+
+def selective_scan(dt, A, Bm, Cm, x, *, interpret: bool | None = None, chunk: int = 64):
+    """Chunked Mamba-1 selective scan -> y (B, S, di) f32."""
+    return _selective_scan(
+        dt, A, Bm, Cm, x,
+        interpret=_INTERPRET if interpret is None else interpret,
+        chunk=chunk,
+    )
+
+
+__all__ = ["drt_dist", "weighted_combine", "selective_scan", "ref"]

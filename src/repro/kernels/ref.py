@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def drt_dist_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Fused DRT statistics for one layer pair: [sum((x-y)^2), sum(y^2)].
+
+    x, y: same shape, any dtype.  Returns (2,) f32."""
+    xf, yf = x.astype(F32), y.astype(F32)
+    d = xf - yf
+    return jnp.stack([jnp.sum(d * d), jnp.sum(yf * yf)])
+
+
+def combine_ref(a: jax.Array, xs: jax.Array) -> jax.Array:
+    """Weighted neighbour combine: out = sum_n a[n] * xs[n].
+
+    a: (N,) f32; xs: (N, ...) any float dtype.  Returns xs[0]-shaped array."""
+    af = a.astype(F32)
+    out = jnp.tensordot(af, xs.astype(F32), axes=(0, 0))
+    return out.astype(xs.dtype)
+
+
+def selective_scan_ref(dt, A, Bm, Cm, x, h0=None):
+    """Mamba-1 recurrence (single batch).  dt, x: (S, di); A: (di, ds);
+    Bm, Cm: (S, ds); h0: (di, ds).  Returns (y (S, di) f32, h_last)."""
+    S, di = x.shape
+    ds = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((di, ds), F32)
+
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp
+        Abar = jnp.exp(dt_t[:, None].astype(F32) * A.astype(F32))
+        h = Abar * h + (dt_t * x_t).astype(F32)[:, None] * b_t.astype(F32)[None, :]
+        y = h @ c_t.astype(F32)
+        return h, y
+
+    h_last, ys = jax.lax.scan(step, h0, (dt, Bm, Cm, x))
+    return ys, h_last

@@ -1,0 +1,19 @@
+from repro.launch.mesh import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    batch_axes,
+    data_axis_size,
+    make_production_mesh,
+    mesh_axis_sizes,
+)
+
+__all__ = [
+    "make_production_mesh",
+    "mesh_axis_sizes",
+    "data_axis_size",
+    "batch_axes",
+    "PEAK_FLOPS_BF16",
+    "HBM_BW",
+    "ICI_BW",
+]

@@ -1,0 +1,263 @@
+"""Trip-count-aware cost analysis of optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (calibrated: a
+10-iteration scan reports 1/10th of executed FLOPs), which breaks roofline
+math for scan-over-layers programs.  XLA:CPU annotates every counted loop
+with ``backend_config={"known_trip_count":{"n":...}}`` in the optimized HLO,
+so this module walks the computation graph from ENTRY, multiplying each while
+body's (and condition's) costs by its trip count — nested loops compose.
+
+Costs per instruction:
+  * FLOPs — ``dot`` ops: 2 x |output| x (product of contracting dim sizes);
+    ``convolution``: 2 x |output| x |kernel| / output-features.  Elementwise
+    FLOPs are intentionally ignored (sub-1% for transformer/SSM workloads —
+    matmul-free mamba scan math is O(di x ds) per token vs O(d x di) for its
+    projections).
+  * bytes — operand + output bytes of every materializing op (fusions count
+    at their boundary, matching true HBM traffic of a fused kernel; frees:
+    parameter/constant/tuple/gte/bitcast/while).
+  * collective bytes — output bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute (+ async -start forms,
+    last tuple element = the received buffer).
+
+All counts are per device (the module is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    # shape is either a (paren-free) tuple — which may contain /*index=N*/
+    # comments — or a single typed array
+    r"^\s*(?:ROOT\s+)?%([^\s=]+)\s*=\s*((?:\([^()]*\))|(?:[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?))\s+([\w-]+)\((.*)$"
+)
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "after-all", "partition-id", "replica-id",
+    "opt-barrier",
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_elems_bytes(shape_str: str, last_only: bool = False) -> int:
+    matches = _SHAPE_RE.findall(shape_str)
+    if not matches:
+        return 0
+    if last_only:
+        matches = matches[-1:]
+    total = 0
+    for dtype, dims in matches:
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    opcode: str
+    rest: str  # operands + attrs (everything after the opening paren)
+
+    def operand_names(self) -> list[str]:
+        # operands end at the first unparenthesized ')'
+        depth = 1
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return re.findall(r"%([\w.\-]+)", self.rest[:i])
+        return re.findall(r"%([\w.\-]+)", self.rest)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    symbols: dict  # name -> shape str (includes parameters)
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    current = None
+    entry_name = None
+    for line in text.splitlines():
+        if current is None:
+            m = _COMP_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                current = Computation(m.group(2), [], {})
+                if m.group(1):
+                    entry_name = m.group(2)
+            continue
+        if line.startswith("}"):
+            comps[current.name] = current
+            current = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            ins = Instr(m.group(1), m.group(2), m.group(3), m.group(4))
+            current.instrs.append(ins)
+            current.symbols[ins.name] = ins.shape
+    if entry_name:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _dot_flops(ins: Instr, sym: dict) -> float:
+    out_elems = 1
+    for d in _shape_dims(ins.shape):
+        out_elems *= d
+    cm = _CONTRACT_RE.search(ins.rest)
+    contract = 1
+    if cm:
+        ops = ins.operand_names()
+        lhs_shape = sym.get(ops[0], "") if ops else ""
+        dims = _shape_dims(lhs_shape)
+        idxs = [int(i) for i in cm.group(1).split(",") if i != ""]
+        for i in idxs:
+            if i < len(dims):
+                contract *= dims[i]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(ins: Instr, sym: dict) -> float:
+    out_elems = 1
+    for d in _shape_dims(ins.shape):
+        out_elems *= d
+    ops = ins.operand_names()
+    if len(ops) < 2:
+        return 0.0
+    k_dims = _shape_dims(sym.get(ops[1], ""))
+    if not k_dims:
+        return 0.0
+    k_elems = 1
+    for d in k_dims:
+        k_elems *= d
+    out_feat = max(k_dims[-1], 1)  # HWIO convention
+    return 2.0 * out_elems * k_elems / out_feat
+
+
+def analyze(text: str, top_n: int = 0) -> dict:
+    """Cost totals; with ``top_n`` also the largest byte/FLOP contributors
+    (instruction, computation, multiplier) for perf iteration."""
+    comps = parse_hlo(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0,
+                "collective_breakdown": {}, "warnings": ["no entry computation"]}
+
+    totals = {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0}
+    coll = defaultdict(float)
+    warnings: list[str] = []
+    visited_mults: dict[str, float] = defaultdict(float)
+    contrib_bytes: list = []
+    contrib_flops: list = []
+
+    def visit(comp: Computation, mult: float):
+        visited_mults[comp.name] += mult
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "while":
+                body = _BODY_RE.search(ins.rest)
+                cond = _COND_RE.search(ins.rest)
+                tm = _TRIP_RE.search(ins.rest)
+                trip = int(tm.group(1)) if tm else 1
+                if tm is None:
+                    warnings.append(f"while {ins.name}: no known_trip_count; x1")
+                if body and body.group(1) in comps:
+                    visit(comps[body.group(1)], mult * trip)
+                if cond and cond.group(1) in comps:
+                    visit(comps[cond.group(1)], mult * (trip + 1))
+                continue
+            if op in _FREE_OPS:
+                continue
+            base = next((c for c in _COLLECTIVES if op.startswith(c)), None)
+            if base is not None:
+                if op.endswith("-done"):
+                    continue
+                b = _shape_elems_bytes(ins.shape, last_only=op.endswith("-start"))
+                coll[base] += b * mult
+                totals["collective_bytes"] += b * mult
+                totals["bytes"] += b * mult
+                continue
+            f = 0.0
+            if op == "dot":
+                f = _dot_flops(ins, comp.symbols) * mult
+                totals["flops"] += f
+            elif op == "convolution":
+                f = _conv_flops(ins, comp.symbols) * mult
+                totals["flops"] += f
+            out_b = _shape_elems_bytes(ins.shape)
+            if op in ("dynamic-slice", "slice", "gather"):
+                # reads only the sliced region, not the full operand
+                b = 2.0 * out_b * mult
+            elif op in ("dynamic-update-slice", "scatter"):
+                # in-place update: read + write of the update region only
+                ops_ = ins.operand_names()
+                upd = (
+                    _shape_elems_bytes(comp.symbols.get(ops_[1], ""))
+                    if len(ops_) > 1
+                    else out_b
+                )
+                b = 2.0 * upd * mult
+            else:
+                in_b = sum(
+                    _shape_elems_bytes(comp.symbols.get(o, ""))
+                    for o in ins.operand_names()
+                )
+                b = (out_b + in_b) * mult
+            totals["bytes"] += b
+            if top_n:
+                meta = (comp.name, ins.name, op, ins.shape[:60], mult)
+                contrib_bytes.append((b, meta))
+                if f:
+                    contrib_flops.append((f, meta))
+
+    visit(entry, 1.0)
+    out = {
+        **totals,
+        "collective_breakdown": dict(coll),
+        "warnings": warnings[:20],
+    }
+    if top_n:
+        contrib_bytes.sort(key=lambda t: -t[0])
+        contrib_flops.sort(key=lambda t: -t[0])
+        out["top_bytes"] = contrib_bytes[:top_n]
+        out["top_flops"] = contrib_flops[:top_n]
+    return out

@@ -1,0 +1,67 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+"""Dry-run profiler for one (arch x shape): top byte/FLOP contributors and
+collective breakdown from the trip-count-aware HLO analysis — the 'profile'
+the §Perf hypothesis loop reads (no real-TPU timings exist in this container).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.inspect_pair --arch qwen3-8b \
+        --shape train_4k [--consensus permute] [--exchange-dtype bfloat16]
+"""
+
+import argparse
+
+import jax.numpy as jnp
+
+from repro.configs import SHAPES
+from repro.launch.dryrun import lower_decode, lower_prefill, lower_train
+from repro.launch.hlo_cost import analyze
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import get_bundle
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--algorithm", default="drt")
+    ap.add_argument("--consensus", default="gather")
+    ap.add_argument("--exchange-dtype", default=None)
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args(argv)
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    bundle = get_bundle(args.arch)
+    shape = SHAPES[args.shape]
+    xd = jnp.bfloat16 if args.exchange_dtype == "bfloat16" else None
+    from repro.models.moe import expert_parallel_scope
+    _scope = expert_parallel_scope(mesh, bundle.cfg.expert_axis if bundle.cfg.moe else None)
+    _scope.__enter__()
+    if shape.mode == "train":
+        lowered = lower_train(bundle, mesh, shape, args.algorithm,
+                              consensus_impl=args.consensus, exchange_dtype=xd)
+    elif shape.mode == "prefill":
+        lowered = lower_prefill(bundle, mesh, shape)
+    else:
+        lowered = lower_decode(bundle, mesh, shape)
+    compiled = lowered.compile()
+    r = analyze(compiled.as_text(), top_n=args.top)
+    print(f"flops/dev={r['flops']:.4g}  bytes/dev={r['bytes']:.4g}  "
+          f"coll/dev={r['collective_bytes']:.4g}")
+    print("collectives:", {k: f"{v/1e9:.1f}GB" for k, v in r["collective_breakdown"].items() if v})
+    print("\n== top bytes ==")
+    for b, (comp, name, op, shape_s, mult) in r["top_bytes"]:
+        print(f"{b/1e9:9.1f}GB x{mult:<6g} {op:22s} {shape_s:40s} {comp[:40]}/{name[:40]}")
+    print("\n== top flops ==")
+    for f, (comp, name, op, shape_s, mult) in r["top_flops"]:
+        print(f"{f/1e12:9.2f}TF x{mult:<6g} {op:22s} {shape_s:40s} {comp[:40]}/{name[:40]}")
+
+
+if __name__ == "__main__":
+    main()

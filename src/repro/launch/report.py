@@ -1,0 +1,90 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from dry-run JSON.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.report results/dryrun_baseline.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.launch.roofline import one_sentence_next_step, RooflineReport
+
+
+def _fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def _fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 0.1:
+        return f"{x:.2f}s"
+    if x >= 1e-4:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def dryrun_table(rows) -> str:
+    out = [
+        "| arch | shape | mesh | status | compile | per-dev mem (analysis) | dominant collective |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] == "OK":
+            bd = r.get("collective_breakdown", {})
+            dom = max(bd, key=bd.get) if bd and max(bd.values()) > 0 else "-"
+            dom_s = f"{dom} ({_fmt_bytes(bd.get(dom, 0))}/dev)" if dom != "-" else "-"
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | OK | {r.get('compile_s','-')}s "
+                f"| {_fmt_bytes(r.get('per_device_memory_bytes'))} | {dom_s} |"
+            )
+        else:
+            reason = r.get("reason", r.get("error", ""))[:70]
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']} | - | - | {reason} |"
+            )
+    return "\n".join(out)
+
+
+def roofline_table(rows, mesh: str = "16x16") -> str:
+    out = [
+        "| arch | shape | t_compute | t_memory | t_collective | bottleneck | MODEL_FLOPS | useful ratio | next step |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] != "OK" or r["mesh"] != mesh:
+            continue
+        rep = RooflineReport(
+            arch=r["arch"], shape=r["shape"], mesh=r["mesh"], chips=r["chips"],
+            hlo_flops=r["hlo_flops_per_dev"], hlo_bytes=r["hlo_bytes_per_dev"],
+            collective_bytes=r["collective_bytes_per_dev"],
+            collective_breakdown=r.get("collective_breakdown", {}),
+            model_flops=r["model_flops_global"],
+            per_device_memory_bytes=r.get("per_device_memory_bytes"),
+        )
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(r['t_compute_s'])} | {_fmt_s(r['t_memory_s'])} "
+            f"| {_fmt_s(r['t_collective_s'])} | **{r['bottleneck']}** | {r['model_flops_global']:.3g} "
+            f"| {r['useful_flops_ratio']:.3f} | {one_sentence_next_step(rep)} |"
+        )
+    return "\n".join(out)
+
+
+def main(argv=None):
+    path = (argv or sys.argv[1:])[0]
+    rows = json.load(open(path))
+    print("### Dry-run matrix\n")
+    print(dryrun_table(rows))
+    print("\n### Roofline (single-pod 16x16)\n")
+    print(roofline_table(rows))
+
+
+if __name__ == "__main__":
+    main()

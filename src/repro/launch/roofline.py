@@ -1,0 +1,161 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (DESIGN/EXPERIMENTS):
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / link_bw
+
+``cost_analysis`` reports the per-device (post-SPMD) program, so no further
+division by chip count is needed; collective bytes are parsed from the
+optimized HLO (sum of collective op output bytes on the per-device module).
+MODEL_FLOPS uses 6·N_active·D for training and 2·N_active·D for inference.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+from repro.configs.shapes import InputShape
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.models.config import ModelConfig
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# one HLO instruction: `%name = <shape(s)> opcode(...)`
+_INSTR_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+?)\s+"
+    r"((?:all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?)\(",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output bytes of every collective op, by op kind (per-device HLO).
+
+    Async pairs (``-start``/``-done``) are counted once via the start op; the
+    ``-done`` op consumes the start's tuple and defines no new transfer."""
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVE_OPS}
+    for m in _INSTR_RE.finditer(hlo_text):
+        shape_str, opname = m.group(1), m.group(2)
+        base = opname.removesuffix("-start")
+        out[base] += _shape_bytes(shape_str)
+    out["total"] = sum(out[k] for k in _COLLECTIVE_OPS)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float  # per device
+    hlo_bytes: float  # per device
+    collective_bytes: float  # per device
+    collective_breakdown: dict
+    model_flops: float  # global, analytic
+    per_device_memory_bytes: float | None
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (global HLO FLOPs) — remat/dispatch/padding waste."""
+        total_hlo = self.hlo_flops * self.chips
+        return self.model_flops / total_hlo if total_hlo else float("nan")
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "hlo_flops_per_dev": self.hlo_flops,
+            "hlo_bytes_per_dev": self.hlo_bytes,
+            "collective_bytes_per_dev": self.collective_bytes,
+            "collective_breakdown": self.collective_breakdown,
+            "model_flops_global": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "per_device_memory_bytes": self.per_device_memory_bytes,
+        }
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """6·N_active·D (train) / 2·N_active·D (inference), D = global tokens."""
+    n = cfg.active_param_count()
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch * 1  # one new token per decode step
+    return 2.0 * n * tokens
+
+
+def one_sentence_next_step(report: RooflineReport) -> str:
+    b = report.bottleneck
+    if b == "collective":
+        return (
+            "replace the all-gather consensus exchange with neighbour "
+            "ppermutes / overlap collectives with compute"
+        )
+    if b == "memory":
+        return (
+            "raise arithmetic intensity: fuse elementwise chains (Pallas), "
+            "larger per-step tile reuse, bf16 caches/params"
+        )
+    return "increase per-chip utilization: better MXU tiling / remove remat recompute"

@@ -1,0 +1,210 @@
+"""Sharding rules: parameter / optimizer-state / batch PartitionSpecs.
+
+Rules are keyed on leaf names (the param dicts use stable names across all
+families).  Divisibility fallbacks are applied per architecture:
+
+* attention heads shard over ``model`` when n_heads % 16 == 0, otherwise the
+  d_model (contracting) dimension shards instead (whisper's 20 heads,
+  hymba's 25, llava's 56, llama4's 40);
+* GQA kv projections (n_kv_heads=8 < 16 everywhere) always d-shard;
+* vocab shards over ``model`` unless indivisible (hymba's 32001, whisper's
+  51866), in which case the embedding width shards;
+* MoE expert tensors shard E over ``cfg.expert_axis`` — ``model`` for K=16
+  archs, ``data`` (true expert parallelism, agent axis replicated) for the
+  memory-gated giants (llama4, kimi) — with the expert ffn dim over ``model``
+  in the latter case;
+* every leaf under a ``*_blocks`` key gets a leading ``None`` for the scan
+  axis; agent-stacked trees get ``data`` on the leading K axis when K equals
+  the data-axis size, ``None`` (replicated) otherwise.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes, mesh_axis_sizes
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+def _leaf_spec(path_keys: tuple[str, ...], ndim: int, cfg: ModelConfig, axes: dict[str, int]) -> P:
+    """Spec for a single un-stacked, un-agented leaf."""
+    name = path_keys[-1]
+    msize = axes.get("model", 1)
+    a = cfg.attn
+    head_ok = a is not None and a.n_heads % msize == 0
+    kv_ok = a is not None and a.n_kv_heads % msize == 0
+    vocab_ok = cfg.vocab % msize == 0
+    e_ax = cfg.expert_axis
+
+    if name == "tok":  # (V, d)
+        return P("model", None) if vocab_ok else P(None, "model")
+    if name == "enc_pos":
+        return P(None, None)
+    if name == "wq":  # (d, H, hd)
+        return P(None, "model", None) if head_ok else P("model", None, None)
+    if name in ("wk", "wv"):  # (d, Hkv, hd)
+        return P(None, "model", None) if kv_ok else P("model", None, None)
+    if name == "wo":  # (H, hd, d)
+        return P("model", None, None) if head_ok else P(None, None, "model")
+    if name in ("w_gate", "w_up", "w_in", "ws_gate", "ws_up", "w1"):  # (d, ff)
+        return P(None, "model")
+    if name in ("w_down", "w_out", "ws_down", "w2"):  # (ff, d)
+        return P("model", None)
+    if name == "router":  # (d, E) — small; replicate
+        return P(None, None)
+    if name in ("we_gate", "we_up"):  # (E, d, ffe)
+        return P("model", None, None) if e_ax == "model" else P("data", None, "model")
+    if name == "we_down":  # (E, ffe, d)
+        return P("model", None, None) if e_ax == "model" else P("data", "model", None)
+    if name == "in_proj":  # (d, 2*di)
+        return P(None, "model")
+    if name == "conv_w":  # (d_conv, di)
+        return P(None, "model")
+    if name in ("conv_b", "dt_bias", "D"):  # (di,)
+        return P("model")
+    if name in ("x_proj", "A_log", "out_proj"):  # (di, ·)
+        return P("model", None)
+    if name == "dt_proj":  # (dt_rank, di)
+        return P(None, "model")
+    if name == "w" and "lm_head" in path_keys:  # (d, V)
+        return P(None, "model") if vocab_ok else P("model", None)
+    # norms, biases, betas, scalars, resnet leaves: replicated
+    return P(*([None] * ndim))
+
+
+def _path_names(path) -> tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(f"#{p.idx}")
+    return tuple(out)
+
+
+def param_pspecs(
+    cfg: ModelConfig, params_abstract: PyTree, mesh, *, with_agents: bool
+) -> PyTree:
+    """PartitionSpec tree matching ``params_abstract`` (leaves: ShapeDtypeStruct).
+
+    ``with_agents``: leaves carry a leading K axis (decentralized training).
+    """
+    axes = mesh_axis_sizes(mesh)
+    dsize = axes.get("data", 1)
+    agent_axis = (
+        "data" if (with_agents and cfg.num_agents == dsize) else None
+    )
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        ndim = len(leaf.shape)
+        extra = 0
+        stacked = any(n.endswith("_blocks") for n in names)
+        if stacked:
+            extra += 1
+        if with_agents:
+            extra += 1
+        base = _leaf_spec(names, ndim - extra, cfg, axes)
+        parts = list(base)
+        if stacked:
+            parts = [None] + parts
+        if with_agents:
+            parts = [agent_axis] + parts
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_abstract)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache / activation specs
+# ---------------------------------------------------------------------------
+
+
+def train_batch_pspecs(cfg: ModelConfig, batch_abstract: PyTree, mesh) -> PyTree:
+    """Per-agent batches: leading (K, B_agent, ...).  K -> data axis when
+    K == |data| (else replicated, batch over data); B -> pod (and data when K
+    is replicated)."""
+    axes = mesh_axis_sizes(mesh)
+    dsize = axes.get("data", 1)
+    has_pod = "pod" in axes
+    if cfg.num_agents == dsize:
+        k_ax, b_ax = "data", ("pod" if has_pod else None)
+    else:
+        k_ax, b_ax = None, (("data", "pod") if has_pod else "data")
+
+    def spec_for(path, leaf):
+        parts = [k_ax, b_ax] + [None] * (len(leaf.shape) - 2)
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_abstract)
+
+
+def serve_batch_pspecs(batch_abstract: PyTree, mesh) -> PyTree:
+    """Serving batches (B, ...): B over ('pod','data') when divisible,
+    replicated otherwise (long_500k has B=1)."""
+    b_ax = batch_axes(mesh)
+    axes = mesh_axis_sizes(mesh)
+    n_b = 1
+    for a in b_ax:
+        n_b *= axes[a]
+
+    def spec_for(path, leaf):
+        if not leaf.shape:
+            return P()
+        lead = b_ax if leaf.shape[0] % n_b == 0 else None
+        return P(lead, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_abstract)
+
+
+def cache_pspecs(cfg: ModelConfig, caches_abstract, mesh, batch_size: int):
+    """Decode caches.  KV tensors (B, S, Hkv, hd): B over data when it divides,
+    S over model (sequence-parallel decode: softmax stats psum over model);
+    for B == 1 (long_500k) S shards over BOTH (data, model).  Mamba states
+    (B, d_conv-1, di)/(B, di, ds): di over model (+ data when B == 1).
+    Every axis assignment checks divisibility and degrades to replication
+    (whisper's 1500-frame cross cache, hymba's di=3200)."""
+    axes = mesh_axis_sizes(mesh)
+    dsize = axes.get("data", 1)
+    msize = axes.get("model", 1)
+    b_shardable = batch_size % dsize == 0
+
+    def fit(dim: int, *cands):
+        """First candidate axis-combo that divides dim."""
+        for c in cands:
+            n = 1
+            for a in (c if isinstance(c, tuple) else (c,)):
+                n *= axes[a]
+            if dim % n == 0:
+                return c
+        return None
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        shape = leaf.shape
+        if name in ("k", "v", "ck", "cv") and len(shape) == 4:
+            if b_shardable:
+                return P("data", fit(shape[1], "model"), None, None)
+            return P(None, fit(shape[1], ("data", "model"), "model", "data"), None, None)
+        if name == "conv" and len(shape) == 3:  # (B, d_conv-1, di)
+            di_ax = fit(shape[2], *((("data", "model"), "model") if not b_shardable else ("model",)))
+            return P(None, None, di_ax)
+        if name == "ssm" and len(shape) == 3:  # (B, di, ds)
+            di_ax = fit(shape[1], *((("data", "model"), "model") if not b_shardable else ("model",)))
+            return P(None, di_ax, None)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, caches_abstract)
+
+
+def to_named(mesh, pspec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        pspec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,93 @@
+"""Abstract input specs (ShapeDtypeStruct stand-ins, zero allocation).
+
+``input_specs(cfg, shape)`` returns everything the dry-run needs to lower a
+step function for an (architecture x input-shape) pair: abstract batches for
+training/prefill, abstract decode state (token + caches + pos) for decode
+shapes.  Modality frontends are stubs per the assignment: VLM batches carry
+patch embeddings (B, n_img, 1024), audio batches frame embeddings
+(B, 1500, d_model).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.shapes import InputShape
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+from repro.models.vlm import D_VIS
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _with_lead(spec_tree, lead: tuple[int, ...]):
+    return jax.tree.map(lambda s: SDS(lead + s.shape, s.dtype), spec_tree)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape):
+    """Per-agent batch tree with leading (K, B_agent)."""
+    K = cfg.num_agents
+    if shape.global_batch % K:
+        raise ValueError(f"global batch {shape.global_batch} not divisible by K={K}")
+    B = shape.global_batch // K
+    S = shape.seq_len
+    if cfg.family == "vlm":
+        s_text = S - cfg.n_img_tokens
+        return {
+            "patch_embeds": SDS((K, B, cfg.n_img_tokens, D_VIS), jnp.bfloat16),
+            "tokens": SDS((K, B, s_text + 1), jnp.int32),
+        }
+    if cfg.family == "audio":
+        return {
+            "audio_embeds": SDS((K, B, cfg.encoder.n_frames, cfg.d_model), jnp.bfloat16),
+            "tokens": SDS((K, B, S + 1), jnp.int32),
+        }
+    return {"tokens": SDS((K, B, S + 1), jnp.int32)}
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: InputShape):
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        return {
+            "patch_embeds": SDS((B, cfg.n_img_tokens, D_VIS), jnp.bfloat16),
+            "tokens": SDS((B, S - cfg.n_img_tokens), jnp.int32),
+        }
+    if cfg.family == "audio":
+        return {
+            "audio_embeds": SDS((B, cfg.encoder.n_frames, cfg.d_model), jnp.bfloat16),
+            "tokens": SDS((B, S), jnp.int32),
+        }
+    return {"tokens": SDS((B, S), jnp.int32)}
+
+
+def decode_state_specs(cfg: ModelConfig, shape: InputShape):
+    """(token, caches, pos) abstract state for a decode step against a
+    ``seq_len``-token context."""
+    B, S = shape.global_batch, shape.seq_len
+    token = SDS((B, 1), jnp.int32)
+    pos = SDS((), jnp.int32)
+    if cfg.family == "audio":
+        a = cfg.attn
+        n_dec = cfg.groups[0].repeat
+        layer = {
+            "k": SDS((B, S, a.n_kv_heads, a.head_dim), cfg.cdtype),
+            "v": SDS((B, S, a.n_kv_heads, a.head_dim), cfg.cdtype),
+            "ck": SDS((B, cfg.encoder.n_frames, a.n_kv_heads, a.head_dim), cfg.cdtype),
+            "cv": SDS((B, cfg.encoder.n_frames, a.n_kv_heads, a.head_dim), cfg.cdtype),
+        }
+        caches = [dict(layer) for _ in range(n_dec)]
+    else:
+        caches = jax.eval_shape(lambda: tf.init_caches(cfg, B, S))
+    return token, caches, pos
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape):
+    """Dispatch on the shape's mode."""
+    if shape.mode == "train":
+        return train_batch_specs(cfg, shape)
+    if shape.mode == "prefill":
+        return prefill_batch_specs(cfg, shape)
+    if shape.mode == "decode":
+        return decode_state_specs(cfg, shape)
+    raise ValueError(shape.mode)

@@ -1,0 +1,26 @@
+from repro.models.config import (
+    AttnCfg,
+    EncoderCfg,
+    GroupCfg,
+    LayerCfg,
+    ModelConfig,
+    MoECfg,
+    SSMCfg,
+)
+from repro.models.registry import ModelBundle, build_bundle, get_bundle, get_config, list_archs, register
+
+__all__ = [
+    "AttnCfg",
+    "EncoderCfg",
+    "GroupCfg",
+    "LayerCfg",
+    "ModelConfig",
+    "MoECfg",
+    "SSMCfg",
+    "ModelBundle",
+    "build_bundle",
+    "get_bundle",
+    "get_config",
+    "list_archs",
+    "register",
+]

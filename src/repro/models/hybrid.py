@@ -1,0 +1,88 @@
+"""Hymba-style hybrid block: parallel attention + SSM heads [arXiv:2411.13676].
+
+Both mixers consume the same normalized input in parallel; their outputs are
+normalized and combined with learnable per-path scales (beta), then the block
+continues with a standard gated MLP.  We use sliding-window attention for all
+layers (the SSM path carries the global context) — Hymba's three full-attention
+layers are folded into this simplification, documented in DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import AttnCfg, SSMCfg
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    attention_params,
+    attention_qkv,
+    attention_out,
+    flash_attention,
+    decode_attention,
+    rms_norm,
+)
+
+F32 = jnp.float32
+
+
+def hymba_mixer_params(key, d_model: int, attn: AttnCfg, ssm: SSMCfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": attention_params(
+            k1, d_model, attn.n_heads, attn.n_kv_heads, attn.head_dim, attn.qk_norm, dtype
+        ),
+        "mamba": ssm_mod.mamba_params(k2, d_model, ssm, dtype),
+        "ln_attn": jnp.zeros((d_model,), dtype),
+        "ln_ssm": jnp.zeros((d_model,), dtype),
+        "beta_attn": jnp.ones((d_model,), dtype),
+        "beta_ssm": jnp.ones((d_model,), dtype),
+    }
+
+
+def hymba_mixer_apply(
+    p, x, attn: AttnCfg, ssm: SSMCfg, d_model: int, compute_dtype, window: int | None
+):
+    """x: (B, S, d) normalized input.  Returns mixer output (B, S, d)."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    q, k, v = attention_qkv(
+        p["attn"], x, positions, rope_theta=attn.rope_theta,
+        qk_norm=attn.qk_norm, compute_dtype=compute_dtype,
+    )
+    o = flash_attention(q, k, v, causal=True, window=window)
+    a_out = attention_out(p["attn"], o, compute_dtype)
+    m_out = ssm_mod.mamba_apply(p["mamba"], x, ssm, d_model, compute_dtype)
+    y = rms_norm(a_out, p["ln_attn"]) * p["beta_attn"].astype(compute_dtype) + rms_norm(
+        m_out, p["ln_ssm"]
+    ) * p["beta_ssm"].astype(compute_dtype)
+    return 0.5 * y
+
+
+def hymba_mixer_decode(
+    p, x, cache, pos, attn: AttnCfg, ssm: SSMCfg, d_model: int, compute_dtype, window: int | None
+):
+    """Single-token hybrid mixer.  cache: {'k','v','conv','ssm','len'}."""
+    q, k, v = attention_qkv(
+        p["attn"], x, jnp.asarray([pos]) if jnp.ndim(pos) == 0 else pos[None],
+        rope_theta=attn.rope_theta, qk_norm=attn.qk_norm, compute_dtype=compute_dtype,
+    )
+    W = cache["k"].shape[1]
+    slot = pos % W if window is not None else pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    length = jnp.minimum(pos + 1, W)
+    o = decode_attention(q, k_cache, v_cache, length=length)
+    a_out = attention_out(p["attn"], o, compute_dtype)
+    m_out, new_state = ssm_mod.mamba_decode_step(
+        p["mamba"], x, {"conv": cache["conv"], "ssm": cache["ssm"]}, ssm, d_model, compute_dtype
+    )
+    y = rms_norm(a_out, p["ln_attn"]) * p["beta_attn"].astype(compute_dtype) + rms_norm(
+        m_out, p["ln_ssm"]
+    ) * p["beta_ssm"].astype(compute_dtype)
+    new_cache = {
+        "k": k_cache,
+        "v": v_cache,
+        "conv": new_state["conv"],
+        "ssm": new_state["ssm"],
+    }
+    return 0.5 * y, new_cache

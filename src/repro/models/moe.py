@@ -1,0 +1,147 @@
+"""Mixture-of-Experts layer (GShard-style capacity dispatch).
+
+Top-k routing with per-group capacity, dispatch/combine expressed as einsums
+so the expert dimension shards cleanly under pjit (expert parallelism: the
+``E`` axis carries a mesh axis; the (tokens x experts) contractions lower to
+all-to-all / all-gather collectives chosen by SPMD).
+
+The dispatch einsum moves bytes via the MXU — a known GShard-era overhead
+(roughly 0.5-1x of true expert FLOPs at kimi-k2 settings).  The §Perf loop
+measures it via the MODEL_FLOPS / HLO_FLOPs ratio; a scatter-based dispatch
+is the recorded alternative.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import MoECfg
+from repro.models.layers import dense_init
+
+F32 = jnp.float32
+
+# -- expert-parallel sharding hints (set by the launcher) ---------------------
+# Without explicit constraints GSPMD occasionally falls back to "involuntary
+# full rematerialization" (replicating whole expert tensors) when resolving
+# the dispatch einsums; pinning the expert axis fixes the all-to-all pattern.
+
+_EP_MESH = None
+_EP_AXIS = None
+
+
+class expert_parallel_scope:
+    def __init__(self, mesh, expert_axis: str | None):
+        self.mesh, self.axis = mesh, expert_axis
+
+    def __enter__(self):
+        global _EP_MESH, _EP_AXIS
+        self._prev = (_EP_MESH, _EP_AXIS)
+        _EP_MESH, _EP_AXIS = self.mesh, self.axis
+        return self
+
+    def __exit__(self, *exc):
+        global _EP_MESH, _EP_AXIS
+        _EP_MESH, _EP_AXIS = self._prev
+
+
+def _constrain(x, *axes):
+    """Best-effort sharding constraint on the trailing len(axes) dims."""
+    if _EP_MESH is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    spec = [None] * (x.ndim - len(axes)) + [
+        a if (a is None or a in _EP_MESH.axis_names) else None for a in axes
+    ]
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(_EP_MESH, P(*spec)))
+    except Exception:
+        return x
+
+
+def moe_params(key, d_model: int, moe: MoECfg, dtype):
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": dense_init(ks[0], (d_model, moe.n_experts), dtype),
+        "we_gate": dense_init(ks[1], (moe.n_experts, d_model, moe.d_ff_expert), dtype),
+        "we_up": dense_init(ks[2], (moe.n_experts, d_model, moe.d_ff_expert), dtype),
+        "we_down": dense_init(ks[3], (moe.n_experts, moe.d_ff_expert, d_model), dtype),
+    }
+    if moe.shared_d_ff:
+        p["ws_gate"] = dense_init(ks[4], (d_model, moe.shared_d_ff), dtype)
+        p["ws_up"] = dense_init(ks[5], (d_model, moe.shared_d_ff), dtype)
+        p["ws_down"] = dense_init(ks[6], (moe.shared_d_ff, d_model), dtype)
+    return p
+
+
+def moe_apply(p, x, moe: MoECfg, compute_dtype):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    B, S, d = x.shape
+    T = B * S
+    gs = min(moe.group_size, T)
+    G = T // gs
+    assert G * gs == T, f"tokens {T} not divisible by group size {gs}"
+    E, k = moe.n_experts, moe.top_k
+    cap = int(np.ceil(gs * k / E * moe.capacity_factor))
+    cap = max(cap, k)
+
+    xt = x.reshape(G, gs, d)
+    logits = jnp.einsum(
+        "gsd,de->gse", xt.astype(F32), p["router"].astype(F32)
+    )  # router in f32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (G, gs, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # expert-choice bookkeeping: position of each (token, slot) in its
+    # expert's queue, computed with a cumulative sum over the group
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=F32)  # (G, gs, k, E)
+    slot_mask = onehot.reshape(G, gs * k, E)
+    pos = jnp.cumsum(slot_mask, axis=1) - 1.0  # (G, gs*k, E)
+    keep = (pos < cap) & (slot_mask > 0)
+    pos_tok = (pos * slot_mask).sum(-1).reshape(G, gs, k)  # queue position
+    keep_tok = keep.any(-1).reshape(G, gs, k)
+
+    # dispatch (G, gs, E, cap) and combine weights — accumulated one routing
+    # slot at a time so no (G, gs, k, E, cap) intermediate is materialized
+    pos_i = pos_tok.astype(jnp.int32)
+    disp = jnp.zeros((G, gs, E, cap), compute_dtype)
+    comb = jnp.zeros((G, gs, E, cap), F32)
+    for slot in range(k):
+        oe = jax.nn.one_hot(gate_idx[..., slot], E, dtype=F32)  # (G, gs, E)
+        oc = jax.nn.one_hot(pos_i[..., slot], cap, dtype=F32)  # (G, gs, cap)
+        kp = keep_tok[..., slot].astype(F32)  # (G, gs)
+        term = oe[..., :, None] * oc[..., None, :] * kp[..., None, None]
+        disp = disp + term.astype(compute_dtype)
+        comb = comb + term * gate_vals[..., slot].astype(F32)[..., None, None]
+
+    expert_in = jnp.einsum(
+        "gsec,gsd->gecd", disp, xt.astype(compute_dtype)
+    )  # (G, E, cap, d)
+    expert_in = _constrain(expert_in, _EP_AXIS, None, None)  # E sharded (EP)
+    g = jnp.einsum("gecd,edf->gecf", expert_in, p["we_gate"].astype(compute_dtype))
+    u = jnp.einsum("gecd,edf->gecf", expert_in, p["we_up"].astype(compute_dtype))
+    h = jax.nn.silu(g) * u
+    h = _constrain(h, _EP_AXIS, None, "model")
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["we_down"].astype(compute_dtype))
+    expert_out = _constrain(expert_out, _EP_AXIS, None, None)
+    out = jnp.einsum("gsec,gecd->gsd", comb.astype(compute_dtype), expert_out)
+    out = out.reshape(B, S, d)
+
+    if moe.shared_d_ff:
+        sg = jnp.einsum("bsd,df->bsf", x, p["ws_gate"].astype(compute_dtype))
+        su = jnp.einsum("bsd,df->bsf", x, p["ws_up"].astype(compute_dtype))
+        out = out + jnp.einsum(
+            "bsf,fd->bsd", jax.nn.silu(sg) * su, p["ws_down"].astype(compute_dtype)
+        )
+
+    # Switch-style load-balance auxiliary loss
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(gate_idx[..., 0], E, dtype=F32), axis=(0, 1)
+    )  # top-1 assignment fraction
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs) * moe.aux_loss_weight
+    return out, aux

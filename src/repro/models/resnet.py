@@ -1,0 +1,127 @@
+"""ResNet-20 for CIFAR-scale images — the paper's own experimental model.
+
+JAX adaptations (documented in DESIGN.md §8):
+* GroupNorm instead of BatchNorm — no cross-batch running state, which keeps
+  the model a pure function and avoids BN statistics becoming an extra
+  consensus variable in the decentralized setting.
+* Stage-uniform block shapes: the stage input is zero-padded to the stage
+  width before block 0, so all blocks of a stage stack into one pytree group.
+  The DRT layer partition then sees each residual block as one layer:
+  {stem, stage1_blocks, stage2_blocks, stage3_blocks, head}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = jnp.float32
+
+
+def _conv_init(key, shape):  # HWIO
+    fan_in = shape[0] * shape[1] * shape[2]
+    return jax.random.normal(key, shape, F32) * np.sqrt(2.0 / fan_in)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def _group_norm(x, w, b, groups=8, eps=1e-5):
+    N, H, W, C = x.shape
+    g = min(groups, C)
+    xg = x.reshape(N, H, W, g, C // g)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(N, H, W, C) * w + b
+
+
+def _block_params(key, c, use_proj):
+    """One residual block with stage-uniform shapes (so blocks stack).
+
+    Every conv is (3,3,c,c) — the stage input is zero-padded to ``c`` channels
+    before block 0; ``proj`` (1,1,c,c) is block 0's strided shortcut (zeros
+    and unused in later blocks)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "conv1": _conv_init(k1, (3, 3, c, c)),
+        "gn1_w": jnp.ones((c,)),
+        "gn1_b": jnp.zeros((c,)),
+        "conv2": _conv_init(k2, (3, 3, c, c)),
+        "gn2_w": jnp.ones((c,)),
+        "gn2_b": jnp.zeros((c,)),
+        "proj": _conv_init(k3, (1, 1, c, c)) if use_proj else jnp.zeros((1, 1, c, c)),
+    }
+
+
+def init_resnet20(key, width: int = 16, num_classes: int = 10):
+    """3 stages x 3 residual blocks, widths (w, 2w, 4w)."""
+    ks = jax.random.split(key, 12)
+    w1, w2, w3 = width, 2 * width, 4 * width
+
+    def stage(keys, c, first_has_proj):
+        blocks = [
+            _block_params(k, c, use_proj=(i == 0 and first_has_proj))
+            for i, k in enumerate(keys)
+        ]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+
+    return {
+        "stem": {
+            "conv": _conv_init(ks[0], (3, 3, 3, w1)),
+            "gn_w": jnp.ones((w1,)),
+            "gn_b": jnp.zeros((w1,)),
+        },
+        "stage1_blocks": stage(jax.random.split(ks[1], 3), w1, False),
+        "stage2_blocks": stage(jax.random.split(ks[2], 3), w2, True),
+        "stage3_blocks": stage(jax.random.split(ks[3], 3), w3, True),
+        "head": {
+            "w": jax.random.normal(ks[4], (w3, num_classes), F32) * 0.01,
+            "b": jnp.zeros((num_classes,)),
+        },
+    }
+
+
+def _apply_block(p, x, stride):
+    h = _conv(x, p["conv1"], stride)
+    h = jax.nn.relu(_group_norm(h, p["gn1_w"], p["gn1_b"]))
+    h = _conv(h, p["conv2"])
+    h = _group_norm(h, p["gn2_w"], p["gn2_b"])
+    if stride != 1:
+        x = _conv(x, p["proj"], stride)
+    return jax.nn.relu(h + x)
+
+
+def resnet20_forward(params, images):
+    """images: (B, H, W, 3) -> logits (B, classes)."""
+    x = _conv(images, params["stem"]["conv"])
+    x = jax.nn.relu(_group_norm(x, params["stem"]["gn_w"], params["stem"]["gn_b"]))
+    for si, stage_key in enumerate(["stage1_blocks", "stage2_blocks", "stage3_blocks"]):
+        stage = params[stage_key]
+        c_stage = stage["gn1_w"].shape[-1]
+        if x.shape[-1] < c_stage:  # zero-pad channels at stage entry
+            x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, c_stage - x.shape[-1])))
+        n = jax.tree.leaves(stage)[0].shape[0]
+        for bi in range(n):
+            p = jax.tree.map(lambda t: t[bi], stage)
+            stride = 2 if (si > 0 and bi == 0) else 1
+            x = _apply_block(p, x, stride)
+    x = x.mean(axis=(1, 2))
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+def resnet20_loss(params, batch, rng=None):
+    """batch: {'images': (B,H,W,3), 'labels': (B,)}."""
+    logits = resnet20_forward(params, batch["images"])
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - ll)
+
+
+def resnet20_accuracy(params, batch):
+    logits = resnet20_forward(params, batch["images"])
+    return jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(F32))

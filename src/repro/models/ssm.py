@@ -1,0 +1,222 @@
+"""Mamba-1 selective state-space block (falcon-mamba architecture).
+
+Train/prefill path: the selective scan is a linear recurrence
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t,     y_t = <C_t, h_t> + D*x_t
+executed as a ``lax.scan`` over the sequence with the (B, d_inner, d_state)
+state as carry — the (B, S, d_inner, d_state) tensor of per-step states is
+never materialized at once (only XLA's backward-pass stash holds the per-step
+inputs).  The TPU-optimized chunked kernel lives in
+``repro.kernels.selective_scan`` (Pallas); ``scan_impl='chunked'`` selects a
+jnp chunked variant mirroring the kernel's schedule.
+
+Decode path: single-step state update, O(1) per token — this is what makes
+the SSM archs eligible for the ``long_500k`` shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import SSMCfg
+from repro.models.layers import dense_init
+
+F32 = jnp.float32
+
+
+def mamba_params(key, d_model: int, ssm: SSMCfg, dtype):
+    di = ssm.expand * d_model
+    dtr = ssm.resolve_dt_rank(d_model)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A; dt bias so softplus(dt) spans (1e-3, 1e-1)
+    A = jnp.broadcast_to(
+        jnp.arange(1, ssm.d_state + 1, dtype=F32)[None, :], (di, ssm.d_state)
+    )
+    dt_init = jnp.exp(
+        jax.random.uniform(ks[0], (di,), F32)
+        * (np.log(1e-1) - np.log(1e-3))
+        + np.log(1e-3)
+    )
+    dt_bias = dt_init + jnp.log1p(-jnp.exp(-dt_init))  # inverse softplus
+    return {
+        "in_proj": dense_init(ks[1], (d_model, 2 * di), dtype),
+        "conv_w": dense_init(ks[2], (ssm.d_conv, di), dtype, scale=0.5),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[3], (di, dtr + 2 * ssm.d_state), dtype),
+        "dt_proj": dense_init(ks[4], (dtr, di), dtype, scale=dtr**-0.5),
+        "dt_bias": dt_bias.astype(dtype),
+        "A_log": jnp.log(A).astype(F32),  # kept in f32 (exp-sensitive)
+        "D": jnp.ones((di,), F32),
+        "out_proj": dense_init(ks[5], (di, d_model), dtype),
+    }
+
+
+def _causal_conv(x, w, b, init_state=None):
+    """Depthwise causal conv over S.  x: (B, S, di); w: (d_conv, di).
+
+    ``init_state``: (B, d_conv-1, di) left context (decode/chunking); zeros
+    when None.  Implemented as d_conv shifted adds (d_conv is 4)."""
+    B, S, di = x.shape
+    dc = w.shape[0]
+    if init_state is None:
+        init_state = jnp.zeros((B, dc - 1, di), x.dtype)
+    xp = jnp.concatenate([init_state, x], axis=1)  # (B, S+dc-1, di)
+    out = jnp.zeros((B, S, di), F32)
+    for i in range(dc):
+        out = out + xp[:, i : i + S].astype(F32) * w[i].astype(F32)
+    return (out + b.astype(F32)).astype(x.dtype)
+
+
+def _ssm_inputs(p, x_conv, ssm: SSMCfg, d_model: int):
+    """Project conv output to (dt, B, C) selective parameters (all f32)."""
+    dtr = ssm.resolve_dt_rank(d_model)
+    ds = ssm.d_state
+    xdb = jnp.einsum("bsd,de->bse", x_conv, p["x_proj"].astype(x_conv.dtype))
+    dt_in, Bm, Cm = jnp.split(xdb.astype(F32), [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_in, p["dt_proj"].astype(F32))
+        + p["dt_bias"].astype(F32)
+    )  # (B, S, di)
+    A = -jnp.exp(p["A_log"])  # (di, ds)
+    return dt, A, Bm, Cm
+
+
+def selective_scan(dt, A, Bm, Cm, x, h0=None):
+    """The recurrence.  dt, x: (B,S,di); A: (di,ds); Bm,Cm: (B,S,ds).
+
+    Returns (y (B,S,di) f32, h_last (B,di,ds) f32)."""
+    B, S, di = x.shape
+    ds = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((B, di, ds), F32)
+
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp  # (B,di), (B,ds), (B,ds), (B,di)
+        Abar = jnp.exp(dt_t[..., None] * A[None])  # (B,di,ds)
+        h = Abar * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(Bm, 1, 0),
+        jnp.moveaxis(Cm, 1, 0),
+        jnp.moveaxis(x.astype(F32), 1, 0),
+    )
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_last
+
+
+def selective_scan_chunked(dt, A, Bm, Cm, x, h0=None, chunk: int | None = None):
+    """Chunked variant mirroring the Pallas kernel: within a chunk the scan is
+    an associative scan (log-depth, parallel); chunks are threaded by a small
+    outer scan carrying the state.  Better TPU utilization than the step scan."""
+    B, S, di = x.shape
+    ds = A.shape[1]
+    if chunk is None:
+        chunk = max(256, S // 16)  # bounded outer trip count at long context
+    chunk = min(chunk, S)
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    if pad:
+        z = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        dt, Bm, Cm, x = z(dt), z(Bm), z(Cm), z(x)
+    if h0 is None:
+        h0 = jnp.zeros((B, di, ds), F32)
+
+    dtc = dt.reshape(B, n, chunk, di)
+    Bc = Bm.reshape(B, n, chunk, ds)
+    Cc = Cm.reshape(B, n, chunk, ds)
+    xc = x.astype(F32).reshape(B, n, chunk, di)
+
+    def chunk_step(h, inp):
+        dt_t, b_t, c_t, x_t = inp  # (B, chunk, ...)
+        la = dt_t[..., None] * A[None, None]  # log Abar (B,chunk,di,ds)
+        bx = (dt_t * x_t)[..., None] * b_t[:, :, None, :]
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 + a2, jnp.exp(a2) * b1 + b2
+
+        la_c, bx_c = jax.lax.associative_scan(combine, (la, bx), axis=1)
+        h_seq = jnp.exp(la_c) * h[:, None] + bx_c  # prefix states incl. h0 carry
+        y = jnp.einsum("bcds,bcs->bcd", h_seq, c_t)
+        return h_seq[:, -1], y
+
+    from repro.models.layers import unroll_inner
+
+    if unroll_inner():
+        h = h0
+        ys_list = []
+        for i in range(n):
+            h, y_i = chunk_step(h, (dtc[:, i], Bc[:, i], Cc[:, i], xc[:, i]))
+            ys_list.append(y_i)
+        y = jnp.concatenate(ys_list, axis=1)
+        return y[:, :S], h
+    xs = (
+        jnp.moveaxis(dtc, 1, 0),
+        jnp.moveaxis(Bc, 1, 0),
+        jnp.moveaxis(Cc, 1, 0),
+        jnp.moveaxis(xc, 1, 0),
+    )
+    h_last, ys = jax.lax.scan(chunk_step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, n * chunk, di)
+    return y[:, :S], h_last
+
+
+def mamba_apply(
+    p,
+    x,
+    ssm: SSMCfg,
+    d_model: int,
+    compute_dtype,
+    scan_impl: str = "chunked",
+):
+    """Full mamba mixer on (B, S, d).  Returns (out, None)."""
+    di = ssm.expand * d_model
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(compute_dtype))
+    x_in, z = jnp.split(xz, [di], axis=-1)
+    x_conv = jax.nn.silu(_causal_conv(x_in, p["conv_w"], p["conv_b"]))
+    dt, A, Bm, Cm = _ssm_inputs(p, x_conv, ssm, d_model)
+    scan_fn = selective_scan_chunked if scan_impl == "chunked" else selective_scan
+    y, _ = scan_fn(dt, A, Bm, Cm, x_conv)
+    y = y + p["D"].astype(F32) * x_conv.astype(F32)
+    y = y * jax.nn.silu(z.astype(F32))
+    return jnp.einsum("bsd,de->bse", y.astype(compute_dtype), p["out_proj"].astype(compute_dtype))
+
+
+# ---------------------------------------------------------------------------
+# decode (stateful single step)
+# ---------------------------------------------------------------------------
+
+
+def mamba_init_state(B: int, d_model: int, ssm: SSMCfg):
+    di = ssm.expand * d_model
+    return {
+        "conv": jnp.zeros((B, ssm.d_conv - 1, di), F32),
+        "ssm": jnp.zeros((B, di, ssm.d_state), F32),
+    }
+
+
+def mamba_decode_step(p, x, state, ssm: SSMCfg, d_model: int, compute_dtype):
+    """x: (B, 1, d).  Returns (out (B, 1, d), new_state)."""
+    di = ssm.expand * d_model
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(compute_dtype))
+    x_in, z = jnp.split(xz, [di], axis=-1)  # (B,1,di)
+    conv_buf = jnp.concatenate([state["conv"], x_in.astype(F32)], axis=1)  # (B,dc,di)
+    w = p["conv_w"].astype(F32)
+    xc = jnp.einsum("bcd,cd->bd", conv_buf, w) + p["conv_b"].astype(F32)
+    x_conv = jax.nn.silu(xc)[:, None, :].astype(compute_dtype)  # (B,1,di)
+    dt, A, Bm, Cm = _ssm_inputs(p, x_conv, ssm, d_model)
+    dt_t, b_t, c_t = dt[:, 0], Bm[:, 0], Cm[:, 0]
+    Abar = jnp.exp(dt_t[..., None] * A[None])
+    h = Abar * state["ssm"] + (dt_t * x_conv[:, 0].astype(F32))[..., None] * b_t[:, None, :]
+    y = jnp.einsum("bds,bs->bd", h, c_t)
+    y = y + p["D"].astype(F32) * x_conv[:, 0].astype(F32)
+    y = y * jax.nn.silu(z[:, 0].astype(F32))
+    out = jnp.einsum(
+        "bd,de->be", y.astype(compute_dtype), p["out_proj"].astype(compute_dtype)
+    )[:, None, :]
+    new_state = {"conv": conv_buf[:, 1:], "ssm": h}
+    return out, new_state

@@ -1,0 +1,27 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    sgd,
+    momentum,
+    adamw,
+    clip_by_global_norm,
+    chain,
+)
+from repro.optim.schedule import (
+    constant,
+    cosine_decay,
+    linear_warmup_cosine,
+    step_decay,
+)
+
+__all__ = [
+    "Optimizer",
+    "sgd",
+    "momentum",
+    "adamw",
+    "clip_by_global_norm",
+    "chain",
+    "constant",
+    "cosine_decay",
+    "linear_warmup_cosine",
+    "step_decay",
+]

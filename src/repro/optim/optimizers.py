@@ -1,0 +1,141 @@
+"""Pure-pytree optimizers (no optax in this container).
+
+An ``Optimizer`` is a pair of pure functions:
+
+  init(params) -> opt_state
+  update(grads, opt_state, params, step) -> (new_params, new_opt_state)
+
+All transforms are elementwise over leaves, so they apply unchanged to
+agent-stacked parameter trees (leading K axis) — each agent gets an
+independent optimizer state, which is exactly the decentralized semantics.
+
+Learning rates may be floats or ``schedule(step) -> float`` callables.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def _as_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jax.Array], tuple[PyTree, PyTree]]
+
+
+def sgd(lr) -> Optimizer:
+    lr = _as_schedule(lr)
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        lr_t = lr(step)
+        new_params = jax.tree.map(lambda p, g: p - lr_t * g.astype(p.dtype), params, grads)
+        return new_params, state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    lr = _as_schedule(lr)
+
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params, step):
+        lr_t = lr(step)
+        m = jax.tree.map(lambda m_, g: beta * m_ + g.astype(m_.dtype), state["m"], grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m_, g: beta * m_ + g.astype(m_.dtype), m, grads)
+        else:
+            upd = m
+        new_params = jax.tree.map(lambda p, u: p - lr_t * u.astype(p.dtype), params, upd)
+        return new_params, {"m": m}
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    lr = _as_schedule(lr)
+
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        }
+
+    def update(grads, state, params, step):
+        lr_t = lr(step)
+        t = step.astype(jnp.float32) + 1.0
+        m = jax.tree.map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads
+        )
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"],
+            grads,
+        )
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(inner: Optimizer, max_norm: float) -> Optimizer:
+    """Wrap an optimizer with global-norm gradient clipping."""
+
+    def init(params):
+        return inner.init(params)
+
+    def update(grads, state, params, step):
+        leaves = jax.tree.leaves(
+            jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), grads)
+        )
+        gn = jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+        scale = jnp.minimum(1.0, max_norm / (gn + 1e-12))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        return inner.update(grads, state, params, step)
+
+    return Optimizer(init, update)
+
+
+def chain(*opts: Optimizer) -> Optimizer:
+    """Apply optimizers sequentially (each sees the previous one's params)."""
+
+    def init(params):
+        return tuple(o.init(params) for o in opts)
+
+    def update(grads, state, params, step):
+        new_state = []
+        for o, s in zip(opts, state):
+            params, s = o.update(grads, s, params, step)
+            new_state.append(s)
+        return params, tuple(new_state)
+
+    return Optimizer(init, update)

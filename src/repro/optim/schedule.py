@@ -1,0 +1,37 @@
+"""Learning-rate schedules as pure ``step -> lr`` callables."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay(lr: float, decay_steps: int, alpha: float = 0.0):
+    def fn(step):
+        t = jnp.minimum(step.astype(jnp.float32), decay_steps) / decay_steps
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.asarray(lr * ((1 - alpha) * cos + alpha), jnp.float32)
+
+    return fn
+
+
+def linear_warmup_cosine(lr: float, warmup_steps: int, total_steps: int, alpha: float = 0.0):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = lr * s / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip((s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = lr * ((1 - alpha) * 0.5 * (1.0 + jnp.cos(jnp.pi * t)) + alpha)
+        return jnp.asarray(jnp.where(s < warmup_steps, warm, cos), jnp.float32)
+
+    return fn
+
+
+def step_decay(lr: float, boundaries: tuple[int, ...], factor: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        k = jnp.sum(jnp.asarray([s >= b for b in boundaries], jnp.float32))
+        return jnp.asarray(lr, jnp.float32) * factor**k
+
+    return fn

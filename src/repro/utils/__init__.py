@@ -1,0 +1,29 @@
+from repro.utils.pytree import (
+    LayerPartition,
+    GroupSpec,
+    layer_partition_fn,
+    tree_add,
+    tree_sub,
+    tree_scale,
+    tree_dot,
+    tree_sq_norm,
+    tree_cast,
+    tree_zeros_like,
+    tree_size,
+    tree_bytes,
+)
+
+__all__ = [
+    "LayerPartition",
+    "GroupSpec",
+    "layer_partition_fn",
+    "tree_add",
+    "tree_sub",
+    "tree_scale",
+    "tree_dot",
+    "tree_sq_norm",
+    "tree_cast",
+    "tree_zeros_like",
+    "tree_size",
+    "tree_bytes",
+]

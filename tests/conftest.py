@@ -1,0 +1,12 @@
+import os
+import sys
+
+# tests run against the real single CPU device (the dry-run subprocess sets
+# its own XLA_FLAGS); keep determinism + quiet logs
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running test (dry-run compiles)")

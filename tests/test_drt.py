@@ -1,0 +1,149 @@
+"""DRT mixing-matrix construction: paper eqs. (8)-(17) properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import drt as drt_mod
+from repro.core.drt import DRTConfig, drt_mixing_matrices, drt_sq_bound
+from repro.core.topology import erdos_renyi, hypercube, make_topology, ring
+from repro.utils.pytree import LayerPartition
+
+
+def _mlp_init(key, widths=(6, 8, 8, 4)):
+    ks = jax.random.split(key, len(widths))
+    params = {"embed": {"w": jax.random.normal(ks[0], (widths[0], widths[1])) * 0.5}}
+    blocks = []
+    for i in range(len(widths) - 2):
+        blocks.append({"w": jax.random.normal(ks[i + 1], (widths[1], widths[1])) * 0.5})
+    params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    params["head"] = {"w": jax.random.normal(ks[-1], (widths[1], widths[-1])) * 0.5}
+    return params
+
+
+def _rand_stack(key, K):
+    return jax.vmap(_mlp_init)(jax.random.split(key, K))
+
+
+@pytest.mark.parametrize("topo_name,K", [("ring", 8), ("hypercube", 8), ("erdos_renyi", 16)])
+@pytest.mark.parametrize("mode", ["paper", "exact_grad"])
+def test_mixing_matrix_properties(topo_name, K, mode):
+    """Eq. (15): column-stochastic, supported on the graph; eq. (17) lower bound."""
+    topo = make_topology(topo_name, K) if topo_name != "erdos_renyi" else erdos_renyi(K, 0.3, 1)
+    pK = _rand_stack(jax.random.key(0), K)
+    part = LayerPartition.build(jax.tree.map(lambda x: x[0], pK))
+    d2, n2 = part.pairwise_sq_dists(pK)
+    cfg = DRTConfig(weight_mode=mode)
+    C = jnp.asarray(topo.c_matrix(), jnp.float32)
+    A = drt_mixing_matrices(d2, n2, C, cfg)
+    assert A.shape == (part.num_layers, K, K)
+    np.testing.assert_allclose(np.asarray(A.sum(axis=1)), 1.0, atol=1e-5)
+    assert bool(jnp.all((A > 0) == (C[None] > 0)))  # Lemma 1 compatibility
+    # Lemma 1 lower bound on positive entries
+    N = cfg.resolve_N(K)
+    lb = 1.0 / ((K - 1) * N + 1)
+    pos = jnp.where(C[None] > 0, A, jnp.inf)
+    assert float(pos.min()) >= lb * 0.999
+
+
+def test_identical_params_give_fixed_point():
+    K = 8
+    topo = ring(K)
+    p1 = _mlp_init(jax.random.key(3))
+    pK = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (K, *x.shape)).copy(), p1)
+    part = LayerPartition.build(p1)
+    d2, n2 = part.pairwise_sq_dists(pK)
+    A = drt_mixing_matrices(d2, n2, jnp.asarray(topo.c_matrix(), jnp.float32), DRTConfig())
+    out = part.combine(A, pK)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(pK)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_clip_bounds_ratio():
+    """Eq. (13): no positive entry more than N x the smallest positive entry
+    of its column (pre-self-weight construction keeps ratios <= N...).  We
+    check the normalized consequence: max/min <= N over off-diagonal support."""
+    K = 8
+    topo = ring(K)
+    pK = _rand_stack(jax.random.key(5), K)
+    part = LayerPartition.build(jax.tree.map(lambda x: x[0], pK))
+    d2, n2 = part.pairwise_sq_dists(pK)
+    cfg = DRTConfig(N=4.0)
+    A = drt_mixing_matrices(d2, n2, jnp.asarray(topo.c_matrix(), jnp.float32), cfg)
+    eye = jnp.eye(K, dtype=bool)
+    offdiag = (jnp.asarray(topo.c_matrix()) > 0) & ~eye
+    vals = jnp.where(offdiag[None], A, jnp.nan)
+    mx = jnp.nanmax(vals, axis=1)
+    mn = jnp.nanmin(vals, axis=1)
+    assert float(jnp.nanmax(mx / mn)) <= 4.0 + 1e-4
+
+
+def test_layer_sensitivity():
+    """A layer with a large deviation (that matters less per eq. 14's 1/d2)
+    receives a SMALLER off-diagonal weight than an identical-layer column."""
+    K = 4
+    topo = ring(K)
+    p1 = _mlp_init(jax.random.key(1))
+    pK = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (K, *x.shape)).copy(), p1)
+    # perturb agent 1's head layer strongly
+    pK["head"]["w"] = pK["head"]["w"].at[1].add(5.0)
+    part = LayerPartition.build(p1)
+    d2, n2 = part.pairwise_sq_dists(pK)
+    A = drt_mixing_matrices(d2, n2, jnp.asarray(topo.c_matrix(), jnp.float32), DRTConfig())
+    head_idx = part.num_layers - 1
+    embed_idx = 0
+    # weight agent 0 assigns to agent 1's HEAD layer is below what it assigns
+    # to agent 1's EMBED layer (eq. 14: ~ 1/(d2 + kappa))
+    assert float(A[head_idx, 1, 0]) < float(A[embed_idx, 1, 0])
+
+
+@given(st.integers(0, 10_000))
+@settings(deadline=None, max_examples=20)
+def test_drt_bound_holds_for_mlps(seed):
+    """Property test of eq. (9): the quadratic DRT bound dominates the true
+    relative output distance for random plain MLPs (relu, no skips)."""
+    key = jax.random.key(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    widths = (5, 16, 16, 3)
+
+    def init(k):
+        ks = jax.random.split(k, 3)
+        return {
+            "l0": {"w": jax.random.normal(ks[0], (widths[0], widths[1]))},
+            "l1": {"w": jax.random.normal(ks[1], (widths[1], widths[2]))},
+            "l2": {"w": jax.random.normal(ks[2], (widths[2], widths[3]))},
+        }
+
+    def fwd(p, x):
+        h = jax.nn.relu(x @ p["l0"]["w"])
+        h = jax.nn.relu(h @ p["l1"]["w"])
+        return h @ p["l2"]["w"]
+
+    wa = init(k1)
+    # wb = perturbation of wa (DRT is a *relative* trust region)
+    wb = jax.tree.map(
+        lambda x, n: x + 0.1 * n,
+        wa,
+        init(k2),
+    )
+    x = jax.random.normal(k3, (32, widths[0]))
+    fa, fb = fwd(wa, x), fwd(wb, x)
+    denom = jnp.sum(fb * fb)
+    if float(denom) < 1e-6:
+        return  # degenerate sample
+    lhs = float(jnp.sum((fa - fb) ** 2) / denom)
+    part = LayerPartition.build(wa)
+    rhs = float(drt_sq_bound(part, wa, wb))
+    assert lhs <= rhs * (1 + 1e-5), (lhs, rhs)
+
+
+def test_log_space_stability_deep():
+    """60+ layer products overflow naive f32; the log-space path must not."""
+    K, L = 4, 64
+    topo = ring(K)
+    d2 = jnp.full((L, K, K), 10.0) * (1 - jnp.eye(K))[None]
+    n2 = jnp.full((L, K), 1e-3)
+    A = drt_mixing_matrices(d2, n2, jnp.asarray(topo.c_matrix(), jnp.float32), DRTConfig())
+    assert bool(jnp.all(jnp.isfinite(A)))
+    np.testing.assert_allclose(np.asarray(A.sum(axis=1)), 1.0, atol=1e-5)

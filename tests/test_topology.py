@@ -1,0 +1,85 @@
+"""Topology + Metropolis mixing-matrix properties (paper eqs. 4-5)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as topo
+
+
+ALL_BUILDERS = ["ring", "chain", "full", "star", "hypercube", "torus2d"]
+
+
+@pytest.mark.parametrize("name,K", [
+    ("ring", 16), ("chain", 7), ("full", 9), ("star", 6),
+    ("hypercube", 16), ("torus2d", 16),
+])
+def test_basic_properties(name, K):
+    t = topo.make_topology(name, K)
+    A = t.adjacency
+    assert A.shape == (K, K)
+    assert not np.any(np.diag(A))
+    assert np.array_equal(A, A.T)
+    assert t.is_connected()
+
+
+def test_degrees_include_self():
+    t = topo.ring(8)
+    assert (t.degrees == 3).all()  # two neighbours + self
+
+
+@pytest.mark.parametrize("name,K", [
+    ("ring", 16), ("hypercube", 16), ("full", 8), ("torus2d", 9), ("star", 5),
+])
+def test_metropolis_doubly_stochastic(name, K):
+    t = topo.make_topology(name, K)
+    M = t.metropolis()
+    np.testing.assert_allclose(M.sum(0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(M.sum(1), 1.0, atol=1e-12)
+    assert (M >= -1e-15).all()
+    # supported exactly on the graph + self loops
+    C = t.c_matrix()
+    assert ((M > 0) == (C > 0)).all()
+
+
+def test_lambda2_ordering_matches_paper():
+    """Table I: lambda2(hypercube) < lambda2(ER p=.1) < lambda2(ring), K=16.
+
+    ER(16, 0.1) lambda2 is instance-dependent; the canonical PAPER_ER_SEED
+    instance reproduces the paper's ordering (0.911 vs paper's 0.905)."""
+    l_ring = topo.ring(16).lambda2()
+    l_hc = topo.hypercube(16).lambda2()
+    l_er = topo.erdos_renyi(16, 0.1, seed=topo.PAPER_ER_SEED).lambda2()
+    assert l_hc < l_er < l_ring
+    assert l_hc == pytest.approx(0.6, abs=0.01)  # paper: 0.600
+    assert l_ring == pytest.approx(0.949, abs=0.01)  # paper: 0.949
+    assert l_er == pytest.approx(0.905, abs=0.02)  # paper: 0.905
+
+
+def test_erdos_renyi_always_connected():
+    for seed in range(10):
+        assert topo.erdos_renyi(16, 0.1, seed=seed).is_connected()
+
+
+@given(st.integers(2, 6))
+@settings(deadline=None, max_examples=5)
+def test_hypercube_degree(d):
+    K = 2**d
+    t = topo.hypercube(K)
+    assert (t.adjacency.sum(1) == d).all()
+
+
+def test_permutation_decomposition_covers_neighbours():
+    from repro.core.consensus import permutation_decomposition
+
+    for name, K in [("ring", 8), ("hypercube", 8), ("torus2d", 16), ("full", 6)]:
+        t = topo.make_topology(name, K)
+        perms = permutation_decomposition(t)
+        assert perms is not None
+        # the union of {k -> src} over all perms equals each agent's neighbours
+        for k in range(K):
+            srcs = set()
+            for p in perms:
+                inv = np.empty(K, np.int64)
+                inv[p] = np.arange(K)
+                srcs.add(int(inv[k]))
+            assert srcs == set(t.neighbors(k).tolist()), (name, k)
