@@ -1,0 +1,119 @@
+"""Codec sweep: bytes-on-wire vs accuracy of the consensus exchange.
+
+For every registered wire codec, train the paper's 16-agent CIFAR-like
+protocol (CPU-budgeted scale) under DRT diffusion and report
+
+  * analytic per-agent collective volume per consensus round (gather and
+    permute engines) — the codec-aware accounting from ``repro.comm``,
+  * the compression ratio vs the f32 identity exchange,
+  * final test accuracy / generalization gap of agent 0,
+
+i.e. the communication/quality trade-off curve the subsystem exists to
+navigate.  ``int8`` and ``topk`` must show >= 4x wire reduction at simulator
+scale; the accuracy column shows what that costs.
+
+Run:  PYTHONPATH=src python benchmarks/codec_sweep.py --epochs 2
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import collective_bytes_per_step, compression_ratio
+from repro.core import DecentralizedTrainer, TrainerConfig, make_topology
+from repro.data import CifarLike, CifarLikeConfig, agent_minibatches
+from repro.models.resnet import init_resnet20, resnet20_accuracy, resnet20_loss
+from repro.optim import adamw
+
+CODECS = ("identity", "bf16", "f16", "int8", "topk:0.1", "topk:0.05")
+
+
+def run(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--agents", type=int, default=8)
+    ap.add_argument("--width", type=int, default=8)
+    ap.add_argument("--image-size", type=int, default=12)
+    ap.add_argument("--epochs", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--min-samples", type=int, default=128)
+    ap.add_argument("--max-samples", type=int, default=160)
+    ap.add_argument("--topology", default="ring")
+    ap.add_argument("--codecs", default=",".join(CODECS))
+    ap.add_argument("--out-json", default=None)
+    args = ap.parse_args(argv)
+
+    K = args.agents
+    topo = make_topology(args.topology, K)
+    data = CifarLike(
+        CifarLikeConfig(image_size=args.image_size, noise=0.1, max_shift=0)
+    )
+    shards = data.paper_partition(
+        num_agents=K,
+        min_samples=args.min_samples,
+        max_samples=args.max_samples,
+        seed=1,
+    )
+    tx, ty = data.test_set(256)
+    test = {"images": jnp.asarray(tx), "labels": jnp.asarray(ty)}
+
+    rows = []
+    print(
+        f"{'codec':10s} {'wire MB/rnd':>11s} {'ratio':>6s} {'permute MB':>10s} "
+        f"{'test acc':>8s} {'loss':>7s}  time"
+    )
+    for codec in args.codecs.split(","):
+        t0 = time.time()
+        tr = DecentralizedTrainer(
+            lambda p, b, rng: resnet20_loss(p, b),
+            lambda key: init_resnet20(key, width=args.width),
+            adamw(args.lr),
+            topo,
+            TrainerConfig(algorithm="drt", consensus_steps=3, codec=codec),
+        )
+        st = tr.init(jax.random.key(0))
+        template = jax.tree.map(lambda x: x[0], st.params)
+        gather = collective_bytes_per_step(topo, template, "gather", codec=codec)
+        permute = collective_bytes_per_step(topo, template, "permute", codec=codec)
+        ratio = compression_ratio(template, codec)
+        epoch_fn = jax.jit(tr.epoch)
+        loss = float("nan")
+        for e in range(args.epochs):
+            b = agent_minibatches(shards, batch_size=args.batch, epoch_seed=e)
+            batches = {
+                "images": jnp.asarray(b["images"]),
+                "labels": jnp.asarray(b["labels"]),
+            }
+            st, m = epoch_fn(st, batches, jax.random.key(e))
+            loss = float(m["loss"])
+        p0 = jax.tree.map(lambda x: x[0], st.params)
+        acc = float(resnet20_accuracy(p0, test))
+        row = dict(
+            codec=codec,
+            gather_recv_mb=gather["recv_bytes"] / 1e6,
+            permute_recv_mb=permute["recv_bytes"] / 1e6,
+            compression_ratio=ratio,
+            test_acc=acc,
+            final_loss=loss,
+            seconds=time.time() - t0,
+        )
+        rows.append(row)
+        print(
+            f"{codec:10s} {row['gather_recv_mb']:11.3f} {ratio:6.1f} "
+            f"{row['permute_recv_mb']:10.3f} {acc:8.3f} {loss:7.3f}  "
+            f"{row['seconds']:.0f}s",
+            flush=True,
+        )
+    if args.out_json:
+        with open(args.out_json, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"wrote {args.out_json}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

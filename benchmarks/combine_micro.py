@@ -1,10 +1,14 @@
 """Combine-step microbenchmark: the communication/compute cost of one
-consensus round, classical vs DRT, gather vs neighbour-permute engines.
+consensus round, classical vs DRT, gather vs neighbour-permute engines,
+full-precision vs compressed wire.
 
 Measures wall-time of the local compute pieces on CPU and reports the
 ANALYTIC per-agent collective volume (bytes received) for both exchange
-engines across topologies — the quantity the §Perf hillclimb drives down
-(ring: 2x params via ppermute vs 15x via all-gather at K=16).
+engines across topologies and codecs — the quantity the §Perf hillclimb
+drives down (ring: 2x params via ppermute vs 15x via all-gather at K=16;
+int8/topk shave another >= 4x off either engine).
+
+Run:  PYTHONPATH=src python benchmarks/combine_micro.py
 """
 from __future__ import annotations
 
@@ -13,8 +17,8 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.comm import collective_bytes_per_step as codec_bytes_per_step
 from repro.core import DRTConfig, gather_consensus_step, make_topology
-from repro.core.consensus import collective_bytes_per_step
 from repro.utils.pytree import LayerPartition
 from repro.utils import tree_bytes
 
@@ -32,7 +36,7 @@ def _model_stack(key, K: int, n_layers: int = 8, width: int = 256):
 
 
 def _time(fn, *args, iters=5):
-    fn(*args)[0].get("embed", None) if False else jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
@@ -40,10 +44,11 @@ def _time(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters
 
 
-def run(K: int = 16):
+def run(K: int = 16, codecs=("identity", "bf16", "int8", "topk:0.1")):
     pK = _model_stack(jax.random.key(0), K)
-    part = LayerPartition.build(jax.tree.map(lambda x: x[0], pK))
-    param_bytes = tree_bytes(jax.tree.map(lambda x: x[0], pK))
+    template = jax.tree.map(lambda x: x[0], pK)
+    part = LayerPartition.build(template)
+    param_bytes = tree_bytes(template)
     rows = []
     for topo_name in ("ring", "hypercube", "full"):
         topo = make_topology(topo_name, K)
@@ -56,12 +61,39 @@ def run(K: int = 16):
                 )[0]
             )
             dt = _time(fn, pK)
-            gather = collective_bytes_per_step(topo, param_bytes, "gather")
-            perm = collective_bytes_per_step(topo, param_bytes, "permute")
-            rows.append(dict(
-                topology=topo_name, algorithm=algo, us_per_call=dt * 1e6,
-                gather_recv_mb=gather["recv_bytes"] / 1e6,
-                permute_recv_mb=perm["recv_bytes"] / 1e6,
-                saving=gather["recv_bytes"] / max(perm["recv_bytes"], 1),
-            ))
+            row = dict(
+                topology=topo_name,
+                algorithm=algo,
+                us_per_call=dt * 1e6,
+                param_mb=param_bytes / 1e6,
+            )
+            for codec in codecs:
+                gather = codec_bytes_per_step(topo, template, "gather", codec=codec)
+                perm = codec_bytes_per_step(topo, template, "permute", codec=codec)
+                tag = codec.replace(":", "")
+                row[f"gather_recv_mb_{tag}"] = gather["recv_bytes"] / 1e6
+                row[f"permute_recv_mb_{tag}"] = perm["recv_bytes"] / 1e6
+            # legacy column names (benchmarks/run.py) = the f32 identity wire
+            row["gather_recv_mb"] = row["gather_recv_mb_identity"]
+            row["permute_recv_mb"] = row["permute_recv_mb_identity"]
+            row["saving"] = (
+                row["gather_recv_mb_identity"] / max(row["permute_recv_mb_identity"], 1e-9)
+            )
+            rows.append(row)
     return rows
+
+
+def main():
+    rows = run(K=16)
+    print(f"{'topology':10s} {'algo':>9s} {'us/call':>9s} {'gthr f32':>9s} "
+          f"{'perm f32':>9s} {'perm bf16':>9s} {'perm int8':>9s} {'perm topk':>9s}")
+    for r in rows:
+        print(f"{r['topology']:10s} {r['algorithm']:>9s} {r['us_per_call']:9.0f} "
+              f"{r['gather_recv_mb_identity']:9.2f} {r['permute_recv_mb_identity']:9.2f} "
+              f"{r['permute_recv_mb_bf16']:9.2f} {r['permute_recv_mb_int8']:9.2f} "
+              f"{r['permute_recv_mb_topk0.1']:9.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -39,7 +39,7 @@ def run_experiment(args, topology_name: str, algorithm: str, data, shards, test)
         lambda key: init_resnet20(key, width=args.width),
         opt,
         topo,
-        TrainerConfig(algorithm=algorithm, consensus_steps=3),
+        TrainerConfig(algorithm=algorithm, consensus_steps=3, codec=args.codec),
     )
     st = tr.init(jax.random.key(0))
     epoch_fn = jax.jit(tr.epoch)
@@ -74,8 +74,23 @@ def main(argv=None):
     ap.add_argument("--min-samples", type=int, default=256)
     ap.add_argument("--max-samples", type=int, default=320)
     ap.add_argument("--topologies", default="ring,erdos_renyi,hypercube")
+    ap.add_argument(
+        "--codec", default=None,
+        help="wire codec for the consensus exchange: identity|bf16|f16|int8|"
+             "topk[:frac] (default: exact f32 exchange)",
+    )
     ap.add_argument("--out-csv", default=None)
     args = ap.parse_args(argv)
+
+    if args.codec:
+        from repro.comm import compression_ratio
+
+        # allocation-free: the accounting works on ShapeDtypeStructs
+        template = jax.eval_shape(
+            lambda k: init_resnet20(k, width=args.width), jax.random.key(0)
+        )
+        print(f"consensus wire codec: {args.codec} "
+              f"({compression_ratio(template, args.codec):.1f}x vs f32)")
 
     data = CifarLike(CifarLikeConfig(image_size=args.image_size, noise=args.noise, max_shift=0))
     shards = data.paper_partition(

@@ -85,3 +85,34 @@ def restore_checkpoint(directory: str, step: int | None = None):
     with np.load(path) as z:
         flat = {k: z[k] for k in z.files}
     return _unflatten(flat), step
+
+
+# ---------------------------------------------------------------------------
+# train-state convenience wrappers (params + optimizer + comm residuals)
+# ---------------------------------------------------------------------------
+
+
+def save_train_state(directory: str, state) -> str:
+    """Persist a ``DecentralizedState`` / ``TrainState``-shaped NamedTuple.
+
+    The ``comm`` tree (wire-codec error-feedback residuals) rides along so a
+    restored run resumes with the exact compression state it left with — a
+    dropped residual re-injects the accumulated compression error as bias.
+    """
+    step = int(state.step)
+    tree = {
+        "params": state.params,
+        "opt_state": state.opt_state,
+        "step": np.asarray(step),
+        "comm": getattr(state, "comm", ()),
+    }
+    return save_checkpoint(directory, step, tree)
+
+
+def restore_train_state(directory: str, step: int | None = None):
+    """Returns ``(tree, step)`` with ``tree`` holding ``params``,
+    ``opt_state``, ``step`` and ``comm`` (``()`` when the run was stateless —
+    empty subtrees contribute no npz entries)."""
+    tree, step = restore_checkpoint(directory, step)
+    tree.setdefault("comm", ())
+    return tree, step

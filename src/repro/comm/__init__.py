@@ -1,0 +1,41 @@
+"""repro.comm — the pluggable compressed-communication subsystem.
+
+Everything that crosses the agent boundary during consensus goes through a
+:class:`WireCodec`; both consensus engines (gather and permute) are codec
+agnostic.  See ``codec.py`` for the protocol and the built-in codecs
+(``identity``, ``bf16``, ``f16``, ``int8``, ``topk``) and ``accounting.py``
+for codec-aware bytes-on-wire math.
+"""
+from repro.comm.accounting import (
+    collective_bytes_per_step,
+    compression_ratio,
+    wire_bytes,
+)
+from repro.comm.codec import (
+    CastCodec,
+    IdentityCodec,
+    Int8StochasticCodec,
+    QuantLeaf,
+    TopKCodec,
+    WireCodec,
+    codec_names,
+    init_comm_state,
+    make_codec,
+    register_codec,
+)
+
+__all__ = [
+    "WireCodec",
+    "IdentityCodec",
+    "CastCodec",
+    "Int8StochasticCodec",
+    "TopKCodec",
+    "QuantLeaf",
+    "make_codec",
+    "register_codec",
+    "codec_names",
+    "init_comm_state",
+    "wire_bytes",
+    "collective_bytes_per_step",
+    "compression_ratio",
+]

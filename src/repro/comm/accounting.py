@@ -1,0 +1,68 @@
+"""Codec-aware analytic accounting of collective volume.
+
+Replaces the fixed-f32 ``collective_bytes_per_step`` in
+``repro.core.consensus`` (kept there as a thin delegating shim): the wire
+volume of one consensus round is the codec's per-agent wire bytes scaled by
+the topology/engine exchange pattern, not the raw parameter bytes.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.comm.codec import IdentityCodec, WireCodec, make_codec
+
+PyTree = Any
+
+
+def wire_bytes(template: PyTree, codec: "WireCodec | str | None" = None) -> int:
+    """Bytes ONE agent puts on the wire per exchange round under ``codec``.
+
+    ``template``: a single-agent parameter tree (arrays or
+    ShapeDtypeStructs)."""
+    return make_codec(codec).wire_bytes(template)
+
+
+def collective_bytes_per_step(
+    topology,
+    template: "PyTree | int",
+    engine: str,
+    codec: "WireCodec | str | None" = None,
+) -> dict[str, int]:
+    """Analytic collective volume of ONE consensus step, per agent.
+
+    ``template`` is a single-agent parameter tree (preferred — enables codec
+    accounting) or a raw ``param_bytes`` int (legacy; only valid with the
+    identity codec since compressed volume depends on leaf shapes).
+
+    gather engine: all-gather of the agent-stacked wire tree => (K-1) x
+    wire_bytes received per agent.  permute engine: one ppermute per exchange
+    round => n_rounds x wire_bytes.
+    """
+    from repro.core.consensus import permutation_decomposition  # lazy: no cycle
+
+    resolved = make_codec(codec)
+    if isinstance(template, int):
+        if not isinstance(resolved, IdentityCodec):
+            raise TypeError(
+                "codec-aware accounting needs a parameter tree template, "
+                "not raw param_bytes"
+            )
+        per_round = template
+    else:
+        per_round = resolved.wire_bytes(template)
+
+    K = topology.num_agents
+    if engine == "gather":
+        return {"recv_bytes": (K - 1) * per_round, "rounds": 1}
+    decomp = permutation_decomposition(topology)
+    if decomp is None:
+        return {"recv_bytes": (K - 1) * per_round, "rounds": 1}
+    return {"recv_bytes": len(decomp) * per_round, "rounds": len(decomp)}
+
+
+def compression_ratio(template: PyTree, codec: "WireCodec | str | None") -> float:
+    """f32-equivalent bytes / codec wire bytes (>= 1 for real compression)."""
+    dense = IdentityCodec().wire_bytes(template)
+    return dense / max(wire_bytes(template, codec), 1)

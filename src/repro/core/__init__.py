@@ -1,4 +1,5 @@
 """The paper's primary contribution: DRT diffusion for decentralized learning."""
+from repro.comm import WireCodec, make_codec
 from repro.core.topology import (
     Topology,
     make_topology,
@@ -59,4 +60,6 @@ __all__ = [
     "DecentralizedTrainer",
     "DecentralizedState",
     "TrainerConfig",
+    "WireCodec",
+    "make_codec",
 ]

@@ -14,16 +14,31 @@ Two interchangeable implementations of the combination step (3b)/(11):
   its own column of A.  Collective bytes scale with n_k instead of K.
 
 Both compute identical mixing matrices (tested against each other).
+
+Everything that crosses the agent boundary goes through a ``repro.comm``
+:class:`~repro.comm.WireCodec`: each agent encodes the tree it publishes once
+per round, the wire tree moves through the collective, and receivers decode.
+The DRT distance statistics are computed between *decoded* trees on both
+engines (so the mixing matrices agree codec-for-codec), while each agent's own
+combine contribution stays full precision:
+
+    w_k = A_kk * psi_k(f32)  +  sum_{l != k} A_lk * decode(encode(psi_l)).
+
+The legacy ``exchange_dtype=bf16`` argument is a deprecated alias for the
+``bf16`` cast codec.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Literal
+import warnings
+from typing import Literal
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm import CastCodec, IdentityCodec, WireCodec, init_comm_state, make_codec
+from repro.comm import collective_bytes_per_step as _codec_bytes_per_step
 from repro.core import drt as drt_mod
 from repro.core.drt import DRTConfig
 from repro.core.topology import Topology
@@ -32,6 +47,42 @@ from repro.utils.pytree import LayerPartition
 Algorithm = Literal["drt", "classical"]
 
 _NEG_INF = -1e30
+
+
+def _resolve_codec(codec, exchange_dtype) -> "WireCodec | None":
+    """Fold the deprecated ``exchange_dtype`` argument into the codec API."""
+    if exchange_dtype is not None:
+        if codec is not None:
+            raise ValueError("pass either codec or (deprecated) exchange_dtype, not both")
+        warnings.warn(
+            "exchange_dtype is deprecated; pass codec='bf16' (or a WireCodec) instead",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+        return CastCodec(dtype=exchange_dtype, name=str(jnp.dtype(exchange_dtype)))
+    if codec is None:
+        return None
+    return make_codec(codec)
+
+
+def _require_rng(codec: WireCodec, rng):
+    """Stochastic codecs must get a fresh key per round — silently reusing a
+    constant would turn the unbiased rounding noise into deterministic bias."""
+    if rng is None:
+        if getattr(codec, "needs_rng", False):
+            raise ValueError(
+                f"codec {codec.name!r} is stochastic; pass rng= (a fresh key "
+                "per consensus round)"
+            )
+        return jax.random.key(0)  # deterministic codecs ignore the key
+    return rng
+
+
+def _agent_keys(rng, K: int) -> jax.Array:
+    """Per-agent rng keys via fold_in — the SAME derivation the permute
+    engine applies with its shard index, so stochastic codecs produce
+    bit-identical wire trees on both engines."""
+    return jax.vmap(lambda i: jax.random.fold_in(rng, i))(jnp.arange(K))
 
 
 # ---------------------------------------------------------------------------
@@ -47,47 +98,70 @@ def gather_consensus_step(
     algorithm: Algorithm = "drt",
     metropolis: jax.Array | None = None,
     exchange_dtype=None,
+    codec: "WireCodec | str | None" = None,
+    codec_state=None,
+    rng: jax.Array | None = None,
 ):
-    """One consensus step on the agent-stacked tree.  Returns (new_K, A).
+    """One consensus step on the agent-stacked tree.
 
-    ``exchange_dtype`` (e.g. jnp.bfloat16): beyond-paper optimization — the
-    cross-agent exchange (distance statistics + off-diagonal combine) runs in
-    the reduced dtype, halving the all-gather volume for f32 models; each
-    agent's own contribution stays in full precision:
-        w_k = A_kk * psi_k(f32)  +  sum_{l != k} A_lk * psi_l(bf16).
+    Returns ``(new_K, A)``, or ``(new_K, A, new_codec_state)`` when a
+    ``codec`` is passed explicitly (stateful codecs thread their per-agent
+    error-feedback residual through ``codec_state``; stateless codecs pass
+    ``()`` through).
+
+    ``codec`` compresses the cross-agent exchange (distance statistics + the
+    off-diagonal combine); each agent's own contribution stays full precision.
+    ``exchange_dtype`` is the deprecated spelling of ``codec='bf16'``.
     """
-    if exchange_dtype is not None:
-        psi_x = jax.tree.map(
-            lambda x: x.astype(exchange_dtype)
-            if jnp.issubdtype(x.dtype, jnp.floating)
-            else x,
-            psi_K,
-        )
-    else:
-        psi_x = psi_K
-    if algorithm == "classical":
-        A = jnp.broadcast_to(metropolis, (partition.num_layers, *metropolis.shape))
-    elif algorithm == "drt":
-        d2, n2 = partition.pairwise_sq_dists(psi_x)
-        A = drt_mod.drt_mixing_matrices(d2, n2, C, cfg)
-    else:
+    legacy_return = codec is None
+    wire_codec = _resolve_codec(codec, exchange_dtype)
+
+    def mixing(psi_for_stats):
+        if algorithm == "classical":
+            return jnp.broadcast_to(
+                metropolis, (partition.num_layers, *metropolis.shape)
+            )
+        if algorithm == "drt":
+            d2, n2 = partition.pairwise_sq_dists(psi_for_stats)
+            return drt_mod.drt_mixing_matrices(d2, n2, C, cfg)
         raise ValueError(f"unknown algorithm {algorithm!r}")
-    if exchange_dtype is None:
-        return partition.combine(A, psi_K), A
-    K = A.shape[1]
-    eye = jnp.eye(K, dtype=A.dtype)
-    off = partition.combine(A * (1.0 - eye)[None], psi_x)  # gathered, reduced dtype
+
+    if wire_codec is None or isinstance(wire_codec, IdentityCodec):
+        # exact exchange: stats and combine on the raw tree
+        A = mixing(psi_K)
+        new = partition.combine(A, psi_K)
+        if legacy_return:
+            return new, A
+        return new, A, codec_state if codec_state is not None else ()
+
+    K = jax.tree.leaves(psi_K)[0].shape[0]
+    if wire_codec.stateful and (codec_state is None or codec_state == ()):
+        codec_state = init_comm_state(wire_codec, psi_K)
+    elif codec_state is None:
+        codec_state = ()
+
+    keys = _agent_keys(_require_rng(wire_codec, rng), K)
+    wire_K, new_state = jax.vmap(wire_codec.encode)(psi_K, codec_state, keys)
+    psi_hat_K = jax.vmap(wire_codec.decode)(wire_K)
+    A = mixing(psi_hat_K)
+
+    eye = jnp.eye(A.shape[1], dtype=A.dtype)
+    off = partition.combine(A * (1.0 - eye)[None], psi_hat_K)  # decoded neighbours
     diag = jnp.diagonal(A, axis1=1, axis2=2)  # (L, K) self weights
 
     def add_self(o, s_scaled):
-        return (o.astype(jnp.float32) + s_scaled.astype(jnp.float32)).astype(s_scaled.dtype)
+        return (o.astype(jnp.float32) + s_scaled.astype(jnp.float32)).astype(
+            s_scaled.dtype
+        )
 
-    # self term: per-agent per-layer scale of the local f32 psi
+    # self term: per-agent per-layer scale of the local full-precision psi
     selfed = jax.vmap(
         lambda w_l, tree: partition.scale_by_layer(w_l, tree), in_axes=(1, 0)
     )(diag, psi_K)
     new = jax.tree.map(add_self, off, selfed)
-    return new, A
+    if legacy_return:
+        return new, A
+    return new, A, new_state
 
 
 # ---------------------------------------------------------------------------
@@ -106,7 +180,6 @@ def permutation_decomposition(topology: Topology) -> list[np.ndarray] | None:
     K = topology.num_agents
     name = topology.name
     if name == "ring":
-        fw = np.roll(np.arange(K), -1)  # src j -> dst j-1?  define below
         # shift by +1: agent j sends to (j+1) % K
         plus = (np.arange(K) + 1) % K
         minus = (np.arange(K) - 1) % K
@@ -145,6 +218,11 @@ class PermuteConsensus:
 
     The agent axis must be a mesh axis named ``axis_name`` with exactly one
     agent per shard (leading axis 1 inside the shard).
+
+    With a ``codec`` the published tree is encoded ONCE, the wire tree is
+    ppermuted each exchange round and decoded on arrival; calling the engine
+    then returns ``(combined, new_codec_state)`` instead of just the tree.
+    ``exchange_dtype`` remains as the deprecated alias for the cast codec.
     """
 
     partition: LayerPartition
@@ -156,7 +234,8 @@ class PermuteConsensus:
     # ('model',) for tensor parallelism): per-layer squared norms are partial
     # sums on each shard and must be psum'd over these axes
     norm_reduce_axes: tuple[str, ...] = ()
-    exchange_dtype: object | None = None  # e.g. jnp.bfloat16: ppermute volume /2
+    exchange_dtype: object | None = None  # deprecated: use codec="bf16"
+    codec: "WireCodec | str | None" = None
 
     def _perms(self) -> list[list[tuple[int, int]]]:
         decomp = permutation_decomposition(self.topology)
@@ -167,11 +246,12 @@ class PermuteConsensus:
             )
         return [[(int(s), int(p[s])) for s in range(len(p))] for p in decomp]
 
-    def __call__(self, psi_local):
+    def __call__(self, psi_local, codec_state=None, rng: jax.Array | None = None):
         """psi_local: single-agent tree (leaves WITHOUT leading agent axis).
 
         Must be called inside shard_map with ``axis_name`` bound.  Returns the
-        combined single-agent tree.
+        combined single-agent tree — or ``(combined, new_codec_state)`` when
+        the engine has a codec.
         """
         part = self.partition
         L = part.num_layers
@@ -185,31 +265,42 @@ class PermuteConsensus:
                 n = jax.lax.psum(n, a)
             return n
 
-        xd = self.exchange_dtype
-        if xd is not None:
-            psi_send = jax.tree.map(
-                lambda x: x.astype(xd) if jnp.issubdtype(x.dtype, jnp.floating) else x,
-                psi_local,
-            )
-            # pin the reduced dtype across the wire: without the barriers XLA
-            # hoists the f32 up-convert above the collective-permute (the CPU
-            # backend has no native bf16 dot), silently un-compressing it
-            psi_send = jax.lax.optimization_barrier(psi_send)
-        else:
-            psi_send = psi_local
+        wire_codec = _resolve_codec(self.codec, self.exchange_dtype)
+        has_codec = self.codec is not None
+        if wire_codec is not None and isinstance(wire_codec, IdentityCodec):
+            wire_codec = None  # identity: take the exact legacy path
 
-        n2_self = _norms(psi_local)  # (L,)
+        new_state = codec_state
+        if wire_codec is not None:
+            if wire_codec.stateful and (codec_state is None or codec_state == ()):
+                codec_state = wire_codec.init_state(psi_local)
+            key = jax.random.fold_in(_require_rng(wire_codec, rng), my)
+            wire, new_state = wire_codec.encode(psi_local, codec_state, key)
+            # pin the compressed representation across the wire: without the
+            # barriers XLA hoists the f32 up-convert above the
+            # collective-permute (the CPU backend has no native bf16 dot),
+            # silently un-compressing it
+            wire = jax.lax.optimization_barrier(wire)
+            psi_self_hat = wire_codec.decode(wire)
+        else:
+            wire = psi_local
+            psi_self_hat = psi_local
 
         # --- exchange: collect neighbour trees + their per-layer stats ------
-        neighbours = []  # list of (tree, d2 (L,), n2 (L,), edge_w scalar)
+        neighbours = []  # list of (tree, d2 (L,), n2 (L,), edge_w scalar, src)
         Cmat = jnp.asarray(self.topology.c_matrix(), jnp.float32)
         for perm in perms:
-            recv = jax.tree.map(
-                lambda x: jax.lax.ppermute(x, ax, perm), psi_send
+            recv_wire = jax.tree.map(lambda x: jax.lax.ppermute(x, ax, perm), wire)
+            if wire_codec is not None:
+                recv_wire = jax.lax.optimization_barrier(recv_wire)
+                recv = wire_codec.decode(recv_wire)
+            else:
+                recv = recv_wire
+            diff = jax.tree.map(
+                lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                psi_self_hat,
+                recv,
             )
-            if xd is not None:
-                recv = jax.lax.optimization_barrier(recv)
-            diff = jax.tree.map(lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32), psi_local, recv)
             d2 = _norms(diff)  # (L,) distance to this neighbour
             n2 = _norms(recv)
             # which agent did we receive from? inverse permutation at `my`
@@ -256,22 +347,22 @@ class PermuteConsensus:
         for (recv, _, _, _, _), w in zip(neighbours, w_nbrs):
             scaled = part.scale_by_layer(w, recv)
             out = jax.tree.map(jnp.add, out, scaled)
+        if has_codec:
+            return out, new_state if new_state is not None else ()
         return out
 
 
 def collective_bytes_per_step(
-    topology: Topology, param_bytes: int, engine: str
+    topology: Topology,
+    param_bytes,
+    engine: str,
+    codec: "WireCodec | str | None" = None,
 ) -> dict[str, int]:
     """Analytic collective volume of ONE consensus step, per agent.
 
-    gather engine: all-gather of the agent-stacked tree => (K-1) x param_bytes
-    received per agent.  permute engine: one ppermute per exchange round =>
-    n_rounds x param_bytes.
+    Thin shim over :func:`repro.comm.collective_bytes_per_step` — pass a
+    single-agent parameter tree (instead of raw bytes) plus a ``codec`` for
+    codec-aware accounting; the legacy int ``param_bytes`` form keeps
+    reporting full-precision volume.
     """
-    K = topology.num_agents
-    if engine == "gather":
-        return {"recv_bytes": (K - 1) * param_bytes, "rounds": 1}
-    decomp = permutation_decomposition(topology)
-    if decomp is None:
-        return {"recv_bytes": (K - 1) * param_bytes, "rounds": 1}
-    return {"recv_bytes": len(decomp) * param_bytes, "rounds": len(decomp)}
+    return _codec_bytes_per_step(topology, param_bytes, engine, codec=codec)

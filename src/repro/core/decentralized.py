@@ -21,6 +21,7 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.comm import WireCodec, init_comm_state, make_codec
 from repro.core.consensus import Algorithm, gather_consensus_step
 from repro.core.drt import DRTConfig
 from repro.core.topology import Topology
@@ -35,6 +36,7 @@ class DecentralizedState(NamedTuple):
     params: PyTree  # leading agent axis K on every leaf
     opt_state: PyTree
     step: jax.Array
+    comm: PyTree = ()  # per-agent codec state (error-feedback residuals)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +45,10 @@ class TrainerConfig:
     consensus_steps: int = 3
     drt: DRTConfig = DRTConfig()
     same_init: bool = True  # all agents start from identical parameters
+    # wire codec for the consensus exchange: a repro.comm codec name
+    # ("identity", "bf16", "f16", "int8", "topk", "topk:<frac>") or a
+    # WireCodec instance; None keeps the exact full-precision exchange
+    codec: "WireCodec | str | None" = None
 
 
 class DecentralizedTrainer:
@@ -64,6 +70,9 @@ class DecentralizedTrainer:
         self.cfg = cfg
         self.stacked_keys = stacked_keys
         self.K = topology.num_agents
+        self.codec: WireCodec | None = (
+            make_codec(cfg.codec) if cfg.codec is not None else None
+        )
         self._C = jnp.asarray(topology.c_matrix(), jnp.float32)
         self._metropolis = jnp.asarray(topology.metropolis(), jnp.float32)
         self._partition: LayerPartition | None = None
@@ -82,7 +91,12 @@ class DecentralizedTrainer:
         template = jax.tree.map(lambda x: x[0], params)
         self._partition = LayerPartition.build(template, stacked_keys=self.stacked_keys)
         opt_state = self.optimizer.init(params)
-        return DecentralizedState(params, opt_state, jnp.zeros((), jnp.int32))
+        comm = self.init_comm(params)
+        return DecentralizedState(params, opt_state, jnp.zeros((), jnp.int32), comm)
+
+    def init_comm(self, params_K) -> PyTree:
+        """Per-agent codec state (K-stacked); ``()`` for stateless codecs."""
+        return init_comm_state(self.codec, params_K)
 
     @property
     def partition(self) -> LayerPartition:
@@ -109,29 +123,49 @@ class DecentralizedTrainer:
             grads, state.opt_state, state.params, state.step
         )
         return (
-            DecentralizedState(new_params, new_opt, state.step + 1),
+            DecentralizedState(new_params, new_opt, state.step + 1, state.comm),
             {"loss": jnp.mean(losses)},
         )
 
-    def consensus(self, state: DecentralizedState):
+    def consensus(self, state: DecentralizedState, rng: jax.Array | None = None):
         """``consensus_steps`` combination rounds (eq. 3b / second line of (11)).
 
         DRT recomputes the mixing matrices each round (they are time varying);
-        classical diffusion reuses the static Metropolis matrix.
+        classical diffusion reuses the static Metropolis matrix.  With a
+        configured wire codec the exchange is compressed and any per-agent
+        error-feedback residual is threaded through ``state.comm``; ``rng``
+        seeds stochastic codecs (defaults to a step-derived key).
         """
         partition = self.partition
         params = state.params
         A_last = None
-        for _ in range(self.cfg.consensus_steps):
-            params, A_last = gather_consensus_step(
+        if self.codec is None:
+            for _ in range(self.cfg.consensus_steps):
+                params, A_last = gather_consensus_step(
+                    partition,
+                    params,
+                    self._C,
+                    self.cfg.drt,
+                    algorithm=self.cfg.algorithm,
+                    metropolis=self._metropolis,
+                )
+            return DecentralizedState(params, state.opt_state, state.step, state.comm), A_last
+        if rng is None:
+            rng = jax.random.fold_in(jax.random.key(0), state.step)
+        comm = state.comm
+        for r in range(self.cfg.consensus_steps):
+            params, A_last, comm = gather_consensus_step(
                 partition,
                 params,
                 self._C,
                 self.cfg.drt,
                 algorithm=self.cfg.algorithm,
                 metropolis=self._metropolis,
+                codec=self.codec,
+                codec_state=comm,
+                rng=jax.random.fold_in(rng, r),
             )
-        return DecentralizedState(params, state.opt_state, state.step), A_last
+        return DecentralizedState(params, state.opt_state, state.step, comm), A_last
 
     def disagreement(self, params_K) -> jax.Array:
         """sum_k || w_k - w_bar ||^2 (cf. Lemma 3's LHS with the plain mean)."""

@@ -3,18 +3,31 @@ mode on CPU; see EXPERIMENTS.md §Perf for the HBM-traffic math per kernel).
 
   drt_dist        fused DRT distance statistics (eq. 14 inner loop)
   weighted_combine fused neighbour combine (the combination step 3b/11)
+  int8_quantize   fused scale + stochastic round for the int8 wire codec
+  int8_dequantize q * s -> f32
+  dequant_combine fused dequantize + weighted combine over int8 neighbours
   selective_scan  chunked Mamba-1 recurrence, VMEM-carried state
   flash_attention online-softmax attention, VMEM score tiles
 """
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.ops import drt_dist, selective_scan, weighted_combine
+from repro.kernels.ops import (
+    dequant_combine,
+    drt_dist,
+    int8_dequantize,
+    int8_quantize,
+    selective_scan,
+    weighted_combine,
+)
 
 __all__ = [
     "ops",
     "ref",
     "drt_dist",
     "weighted_combine",
+    "int8_quantize",
+    "int8_dequantize",
+    "dequant_combine",
     "selective_scan",
     "flash_attention",
 ]

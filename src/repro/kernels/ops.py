@@ -13,6 +13,9 @@ import jax
 from repro.kernels import ref
 from repro.kernels.combine import weighted_combine as _combine
 from repro.kernels.drt_dist import drt_dist as _drt_dist
+from repro.kernels.quantize import dequant_combine as _dequant_combine
+from repro.kernels.quantize import int8_dequantize as _int8_dequantize
+from repro.kernels.quantize import int8_quantize as _int8_quantize
 from repro.kernels.selective_scan import selective_scan as _selective_scan
 
 _INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
@@ -28,6 +31,27 @@ def weighted_combine(a, xs, *, interpret: bool | None = None):
     return _combine(a, xs, interpret=_INTERPRET if interpret is None else interpret)
 
 
+def int8_quantize(x, key, *, interpret: bool | None = None):
+    """Fused stochastic-rounding int8 quantization -> (q int8, scale f32)."""
+    return _int8_quantize(
+        x, key, interpret=_INTERPRET if interpret is None else interpret
+    )
+
+
+def int8_dequantize(q, scale, *, interpret: bool | None = None):
+    """f32 reconstruction q * scale."""
+    return _int8_dequantize(
+        q, scale, interpret=_INTERPRET if interpret is None else interpret
+    )
+
+
+def dequant_combine(a, scales, qs, *, interpret: bool | None = None):
+    """Fused out = sum_n a[n] * scales[n] * qs[n] over int8 neighbour blocks."""
+    return _dequant_combine(
+        a, scales, qs, interpret=_INTERPRET if interpret is None else interpret
+    )
+
+
 def selective_scan(dt, A, Bm, Cm, x, *, interpret: bool | None = None, chunk: int = 64):
     """Chunked Mamba-1 selective scan -> y (B, S, di) f32."""
     return _selective_scan(
@@ -37,4 +61,12 @@ def selective_scan(dt, A, Bm, Cm, x, *, interpret: bool | None = None, chunk: in
     )
 
 
-__all__ = ["drt_dist", "weighted_combine", "selective_scan", "ref"]
+__all__ = [
+    "drt_dist",
+    "weighted_combine",
+    "selective_scan",
+    "int8_quantize",
+    "int8_dequantize",
+    "dequant_combine",
+    "ref",
+]

@@ -1,0 +1,181 @@
+"""Pallas TPU kernels for the ``repro.comm`` int8 wire codec.
+
+Three kernels cover the quantized consensus exchange hot path:
+
+  ``int8_quantize``    fused scale + stochastic round + int8 cast — one
+                       streaming pass over the f32 operand (XLA materializes
+                       the f32 ``x/s + u`` temporary; the kernel keeps it in
+                       VMEM registers).  The per-call scale and the uniform
+                       random field are inputs: the scale is a cheap global
+                       reduction XLA fuses on its own, and taking the
+                       uniforms as an operand keeps the kernel body pure jnp
+                       so interpret mode on CPU is bit-identical to the
+                       ``ref.py`` oracle.
+
+  ``int8_dequantize``  q * s -> f32, scale in SMEM.
+
+  ``dequant_combine``  the fused dequantize-and-combine of the combination
+                       step (3b)/(11) over N received int8 neighbour blocks:
+                       ``out = sum_n a[n] * s[n] * q_n``.  Dequantized f32
+                       neighbours are never materialized in HBM — traffic is
+                       N x D int8 reads + D f32 writes instead of the naive
+                       N x D x 4B reads + N x D x 4B dequant writes.
+
+Stochastic rounding: ``q = clip(floor(x / s + u), -127, 127)`` with
+``u ~ U[0, 1)`` — unbiased (``E[s q] = x``), the same rule as
+``repro.comm.Int8StochasticCodec``.  Granularity differs: these kernels use
+one scale per call (call them per layer slot to reproduce the codec's
+per-layer scales); the codec's pure-jnp path remains the reference
+implementation the tests pin both against.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+BLOCK_R = 256
+LANES = 128
+QMAX = 127.0
+
+
+def _pad_rows(flat: jax.Array, block_r: int) -> jax.Array:
+    per_block = block_r * LANES
+    pad = (-flat.size) % per_block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(flat.size // LANES, LANES)
+
+
+# ---------------------------------------------------------------------------
+# quantize
+# ---------------------------------------------------------------------------
+
+
+def _quant_kernel(s_ref, x_ref, u_ref, q_ref):
+    inv = 1.0 / s_ref[0, 0]
+    y = x_ref[...].astype(F32) * inv + u_ref[...]
+    q_ref[...] = jnp.clip(jnp.floor(y), -QMAX, QMAX).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_r"))
+def int8_quantize(
+    x: jax.Array,
+    key: jax.Array,
+    *,
+    interpret: bool = True,
+    block_r: int = BLOCK_R,
+) -> tuple[jax.Array, jax.Array]:
+    """Stochastic-rounding int8 quantization.  Returns ``(q, scale)`` with
+    ``q`` shaped like ``x`` (int8) and ``scale`` a () f32 such that
+    ``E[scale * q] = x``."""
+    absmax = jnp.max(jnp.abs(x.astype(F32)))
+    scale = jnp.where(absmax > 0, absmax / QMAX, 1.0)
+    u = jax.random.uniform(key, x.shape, F32)
+    flat = _pad_rows(x.reshape(-1), block_r)
+    uf = _pad_rows(u.reshape(-1), block_r)
+    rows = flat.shape[0]
+    grid = rows // block_r
+    q = pl.pallas_call(
+        _quant_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_r, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int8),
+        interpret=interpret,
+    )(scale.reshape(1, 1), flat, uf)
+    return q.reshape(-1)[: x.size].reshape(x.shape), scale
+
+
+# ---------------------------------------------------------------------------
+# dequantize
+# ---------------------------------------------------------------------------
+
+
+def _dequant_kernel(s_ref, q_ref, out_ref):
+    out_ref[...] = q_ref[...].astype(F32) * s_ref[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_r"))
+def int8_dequantize(
+    q: jax.Array,
+    scale: jax.Array,
+    *,
+    interpret: bool = True,
+    block_r: int = BLOCK_R,
+) -> jax.Array:
+    """f32 reconstruction ``q * scale``."""
+    flat = _pad_rows(q.reshape(-1), block_r)
+    rows = flat.shape[0]
+    grid = rows // block_r
+    out = pl.pallas_call(
+        _dequant_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_r, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), F32),
+        interpret=interpret,
+    )(jnp.asarray(scale, F32).reshape(1, 1), flat)
+    return out.reshape(-1)[: q.size].reshape(q.shape)
+
+
+# ---------------------------------------------------------------------------
+# fused dequantize + weighted combine
+# ---------------------------------------------------------------------------
+
+
+def _dequant_combine_kernel(w_ref, q_ref, out_ref):
+    n = q_ref.shape[0]
+    acc = w_ref[0, 0] * q_ref[0].astype(F32)
+    for j in range(1, n):
+        acc += w_ref[j, 0] * q_ref[j].astype(F32)
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_r"))
+def dequant_combine(
+    a: jax.Array,
+    scales: jax.Array,
+    qs: jax.Array,
+    *,
+    interpret: bool = True,
+    block_r: int = BLOCK_R,
+) -> jax.Array:
+    """``out = sum_n a[n] * scales[n] * qs[n]`` over the leading neighbour
+    axis.  ``a``, ``scales``: (N,) f32; ``qs``: (N, ...) int8.  Returns f32
+    shaped like ``qs[0]`` — the dequantized neighbour blocks never hit HBM."""
+    N = qs.shape[0]
+    orig_shape = qs.shape[1:]
+    w = (a.astype(F32) * scales.astype(F32)).reshape(N, 1)
+    flat = qs.reshape(N, -1)
+    D = flat.shape[1]
+    per_block = block_r * LANES
+    pad = (-D) % per_block
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    rows = flat.shape[1] // LANES
+    grid = rows // block_r
+    out = pl.pallas_call(
+        _dequant_combine_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((N, 1), lambda i: (0, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((N, block_r, LANES), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), F32),
+        interpret=interpret,
+    )(w, flat.reshape(N, rows, LANES))
+    return out.reshape(-1)[:D].reshape(orig_shape)

@@ -25,6 +25,26 @@ def combine_ref(a: jax.Array, xs: jax.Array) -> jax.Array:
     return out.astype(xs.dtype)
 
 
+def int8_quantize_ref(x: jax.Array, u: jax.Array, scale: jax.Array) -> jax.Array:
+    """Stochastic-rounding int8 quantization given the uniform field ``u``:
+    ``q = clip(floor(x / scale + u), -127, 127)``.  Returns int8, x-shaped."""
+    y = x.astype(F32) / scale + u.astype(F32)
+    return jnp.clip(jnp.floor(y), -127.0, 127.0).astype(jnp.int8)
+
+
+def int8_dequantize_ref(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """f32 reconstruction ``q * scale``."""
+    return q.astype(F32) * jnp.asarray(scale, F32)
+
+
+def dequant_combine_ref(a: jax.Array, scales: jax.Array, qs: jax.Array) -> jax.Array:
+    """Fused dequantize + weighted neighbour combine:
+    ``out = sum_n a[n] * scales[n] * qs[n]``.  a, scales: (N,) f32;
+    qs: (N, ...) int8.  Returns f32, qs[0]-shaped."""
+    w = a.astype(F32) * scales.astype(F32)
+    return jnp.tensordot(w, qs.astype(F32), axes=(0, 0))
+
+
 def selective_scan_ref(dt, A, Bm, Cm, x, h0=None):
     """Mamba-1 recurrence (single batch).  dt, x: (S, di); A: (di, ds);
     Bm, Cm: (S, ds); h0: (di, ds).  Returns (y (S, di) f32, h_last)."""

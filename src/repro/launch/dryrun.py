@@ -59,13 +59,14 @@ def lower_train(
     algorithm: str = "drt",
     consensus_impl: str = "gather",
     exchange_dtype=None,
+    codec=None,
 ):
     cfg = bundle.cfg
     topo = make_topology("ring", cfg.num_agents)
     opt = momentum(1e-2, 0.9)
     tcfg = TrainerConfig(algorithm=algorithm)
 
-    state = abstract_train_state(bundle, opt)
+    state = abstract_train_state(bundle, opt, codec=codec)
     batch = input_specs(cfg, shape)
     p_specs = shr.param_pspecs(cfg, state.params, mesh, with_agents=True)
     step = make_train_step(
@@ -76,12 +77,19 @@ def lower_train(
         consensus_rounds=1,
         consensus_impl=consensus_impl,
         exchange_dtype=exchange_dtype,
+        codec=codec,
         mesh=mesh,
         param_specs=p_specs,
     )
     o_specs = _opt_pspecs(state.opt_state, p_specs)
     b_specs = shr.train_batch_pspecs(cfg, batch, mesh)
-    state_specs = type(state)(p_specs, o_specs, P())
+    # codec state mirrors the agent-stacked params -> same sharding
+    c_specs = (
+        () if state.comm == ()
+        else jax.tree.map(lambda _, s: s, state.comm, p_specs,
+                          is_leaf=lambda x: isinstance(x, P))
+    )
+    state_specs = type(state)(p_specs, o_specs, P(), c_specs)
     in_shardings = (
         jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs,
                      is_leaf=lambda x: isinstance(x, P)),
@@ -147,7 +155,8 @@ def lower_decode(bundle, mesh, shape: InputShape):
 
 
 def run_one(arch: str, shape_name: str, multi_pod: bool, algorithm: str = "drt",
-            consensus_impl: str = "gather", exchange_dtype=None, variant: str = ""):
+            consensus_impl: str = "gather", exchange_dtype=None, codec=None,
+            variant: str = ""):
     shape = SHAPES[shape_name]
     ok, why = applicable(arch, shape)
     mesh_name = "2x16x16" if multi_pod else "16x16"
@@ -165,7 +174,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, algorithm: str = "drt",
             if shape.mode == "train":
                 lowered = lower_train(bundle, mesh, shape, algorithm,
                                       consensus_impl=consensus_impl,
-                                      exchange_dtype=exchange_dtype)
+                                      exchange_dtype=exchange_dtype,
+                                      codec=codec)
             elif shape.mode == "prefill":
                 lowered = lower_prefill(bundle, mesh, shape)
             else:
@@ -174,6 +184,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, algorithm: str = "drt",
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):  # jax >= 0.4.3x: one dict per device
+            cost = cost[0] if cost else {}
         try:
             mem = compiled.memory_analysis()
             per_dev_mem = getattr(mem, "temp_size_in_bytes", None)
@@ -233,6 +245,8 @@ def main(argv=None):
     ap.add_argument("--algorithm", default="drt", choices=["drt", "classical"])
     ap.add_argument("--consensus", default="gather", choices=["gather", "permute"])
     ap.add_argument("--exchange-dtype", default=None, choices=[None, "bfloat16"])
+    ap.add_argument("--codec", default=None,
+                    help="wire codec: identity|bf16|f16|int8|topk[:frac]")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
@@ -248,9 +262,11 @@ def main(argv=None):
     results = []
     xd = jnp.bfloat16 if args.exchange_dtype == "bfloat16" else None
     variant = f"{args.algorithm}/{args.consensus}" + ("/bf16x" if xd is not None else "")
+    if args.codec:
+        variant += f"/{args.codec}"
     for a, s, m in jobs:
         row = run_one(a, s, m, args.algorithm, consensus_impl=args.consensus,
-                      exchange_dtype=xd, variant=variant)
+                      exchange_dtype=xd, codec=args.codec, variant=variant)
         results.append(row)
         status = row["status"]
         extra = (

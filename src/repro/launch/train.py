@@ -18,6 +18,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.comm import WireCodec, init_comm_state, make_codec
 from repro.core.consensus import gather_consensus_step
 from repro.core.decentralized import TrainerConfig
 from repro.core.topology import Topology, make_topology
@@ -33,22 +34,34 @@ class TrainState(NamedTuple):
     params: PyTree  # leading agent axis K
     opt_state: PyTree
     step: jax.Array
+    comm: PyTree = ()  # per-agent wire-codec state (error-feedback residuals)
 
 
-def abstract_train_state(bundle: ModelBundle, optimizer: Optimizer) -> TrainState:
+def _resolve_train_codec(codec) -> "WireCodec | None":
+    return None if codec is None else make_codec(codec)
+
+
+def abstract_train_state(
+    bundle: ModelBundle, optimizer: Optimizer, codec=None
+) -> TrainState:
     """Allocation-free state template (ShapeDtypeStructs)."""
     K = bundle.cfg.num_agents
     p1 = jax.eval_shape(bundle.init, jax.random.key(0))
     params = jax.tree.map(lambda s: SDS((K, *s.shape), s.dtype), p1)
     opt_state = jax.eval_shape(optimizer.init, params)
-    return TrainState(params, opt_state, SDS((), jnp.int32))
+    comm = jax.eval_shape(lambda p: init_comm_state(codec, p), params)
+    return TrainState(params, opt_state, SDS((), jnp.int32), comm)
 
 
-def init_train_state(bundle: ModelBundle, optimizer: Optimizer, key) -> TrainState:
+def init_train_state(
+    bundle: ModelBundle, optimizer: Optimizer, key, codec=None
+) -> TrainState:
     K = bundle.cfg.num_agents
     p1 = bundle.init(key)
     params = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (K, *x.shape)).copy(), p1)
-    return TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))
+    return TrainState(
+        params, optimizer.init(params), jnp.zeros((), jnp.int32), init_comm_state(codec, params)
+    )
 
 
 def build_partition(bundle: ModelBundle) -> LayerPartition:
@@ -64,6 +77,7 @@ def make_train_step(
     consensus_rounds: int = 1,
     consensus_impl: str = "gather",
     exchange_dtype=None,
+    codec=None,
     mesh=None,
     param_specs=None,
 ):
@@ -74,8 +88,12 @@ def make_train_step(
       * ``permute`` — neighbour-only ``ppermute`` exchange inside shard_map
         (requires ``mesh`` + ``param_specs``; K must equal the data-axis
         size).  Collective volume scales with n_k instead of K.
-    ``exchange_dtype`` (e.g. jnp.bfloat16) halves the exchange volume of
-    either engine for f32 models; each agent's own contribution stays f32.
+
+    ``codec`` (a ``repro.comm`` codec name or instance, also settable via
+    ``tcfg.codec``) compresses the consensus exchange of either engine;
+    stateful codecs (top-k error feedback) thread their per-agent residual
+    through ``state.comm``.  ``exchange_dtype`` is the deprecated spelling of
+    ``codec='bf16'``.
     """
     cfg = bundle.cfg
     K = cfg.num_agents
@@ -84,6 +102,11 @@ def make_train_step(
     partition = build_partition(bundle)
     C = jnp.asarray(topology.c_matrix(), jnp.float32)
     metro = jnp.asarray(topology.metropolis(), jnp.float32)
+    if codec is None:
+        codec = tcfg.codec
+    wire_codec = _resolve_train_codec(codec)
+    if wire_codec is not None and exchange_dtype is not None:
+        raise ValueError("pass either codec or (deprecated) exchange_dtype, not both")
 
     if consensus_impl == "permute":
         from jax.experimental.shard_map import shard_map
@@ -104,45 +127,100 @@ def make_train_step(
             algorithm=tcfg.algorithm,
             norm_reduce_axes=inner_axes,
             exchange_dtype=exchange_dtype,
+            codec=wire_codec,
+        )
+        # codec state mirrors the params leaf-for-leaf -> identical sharding
+        comm_specs = (
+            param_specs if wire_codec is not None and wire_codec.stateful else ()
         )
 
-        def one_round(params):
-            def body(local):
-                sq = jax.tree.map(lambda x: x[0], local)
-                out = engine(sq)
-                return jax.tree.map(lambda x: x[None], out)
+        if wire_codec is None:
 
-            return shard_map(
-                body, mesh=mesh, in_specs=(param_specs,), out_specs=param_specs,
-                check_rep=False,
-            )(params)
+            def one_round(params, comm, rkey):
+                def body(local):
+                    sq = jax.tree.map(lambda x: x[0], local)
+                    out = engine(sq)
+                    return jax.tree.map(lambda x: x[None], out)
+
+                new = shard_map(
+                    body, mesh=mesh, in_specs=(param_specs,), out_specs=param_specs,
+                    check_rep=False,
+                )(params)
+                return new, comm
+
+        else:
+
+            def one_round(params, comm, rkey):
+                def body(local, lcomm, k):
+                    sq = jax.tree.map(lambda x: x[0], local)
+                    sc = jax.tree.map(lambda x: x[0], lcomm)
+                    out, nc = engine(sq, codec_state=sc, rng=k)
+                    return (
+                        jax.tree.map(lambda x: x[None], out),
+                        jax.tree.map(lambda x: x[None], nc),
+                    )
+
+                return shard_map(
+                    body,
+                    mesh=mesh,
+                    in_specs=(param_specs, comm_specs, P()),
+                    out_specs=(param_specs, comm_specs),
+                    check_rep=False,
+                )(params, comm, rkey)
 
     else:
 
-        def one_round(params):
-            new, _ = gather_consensus_step(
+        def one_round(params, comm, rkey):
+            if wire_codec is None:
+                new, _ = gather_consensus_step(
+                    partition,
+                    params,
+                    C,
+                    tcfg.drt,
+                    algorithm=tcfg.algorithm,
+                    metropolis=metro,
+                    exchange_dtype=exchange_dtype,
+                )
+                return new, comm
+            new, _, comm = gather_consensus_step(
                 partition,
                 params,
                 C,
                 tcfg.drt,
                 algorithm=tcfg.algorithm,
                 metropolis=metro,
-                exchange_dtype=exchange_dtype,
+                codec=wire_codec,
+                codec_state=comm,
+                rng=rkey,
             )
-            return new
+            return new, comm
 
     def step(state: TrainState, batch_K, key):
-        keys = jax.random.split(key, K)
+        if wire_codec is None:
+            lkey = ckey = key  # identical key flow to the pre-codec step
+        else:
+            lkey, ckey = jax.random.split(key)
+        keys = jax.random.split(lkey, K)
         losses, grads = jax.vmap(jax.value_and_grad(bundle.loss))(
             state.params, batch_K, keys
         )
         params, opt_state = optimizer.update(
             grads, state.opt_state, state.params, state.step
         )
-        for _ in range(consensus_rounds):
-            params = one_round(params)
+        comm = state.comm
+        if (
+            wire_codec is not None
+            and wire_codec.stateful
+            and (comm is None or comm == ())
+        ):
+            # state was built without the codec (init_train_state codec kwarg
+            # not passed): initialize the residual here, matching the gather
+            # engine's auto-init, instead of tripping a shard_map spec mismatch
+            comm = init_comm_state(wire_codec, params)
+        for r in range(consensus_rounds):
+            params, comm = one_round(params, comm, jax.random.fold_in(ckey, r))
         return (
-            TrainState(params, opt_state, state.step + 1),
+            TrainState(params, opt_state, state.step + 1, comm),
             {"loss": jnp.mean(losses)},
         )
 
@@ -169,17 +247,22 @@ def main(argv=None) -> None:
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--consensus-rounds", type=int, default=1)
+    ap.add_argument(
+        "--codec", default=None,
+        help="wire codec for the consensus exchange: identity|bf16|f16|int8|"
+             "topk[:frac] (default: exact f32 exchange)",
+    )
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args(argv)
 
     bundle = get_bundle(args.arch, num_agents=args.agents)
     topo = make_topology(args.topology, args.agents)
     opt = momentum(args.lr, 0.9)
-    tcfg = TrainerConfig(algorithm=args.algorithm)
+    tcfg = TrainerConfig(algorithm=args.algorithm, codec=args.codec)
     step = jax.jit(
         make_train_step(bundle, topo, opt, tcfg, consensus_rounds=args.consensus_rounds)
     )
-    state = init_train_state(bundle, opt, jax.random.key(0))
+    state = init_train_state(bundle, opt, jax.random.key(0), codec=args.codec)
     stream = SyntheticTokenStream(
         TokenStreamConfig(vocab=bundle.cfg.vocab, seq_len=args.seq)
     )
@@ -189,9 +272,9 @@ def main(argv=None) -> None:
         if i % 10 == 0 or i == args.steps - 1:
             print(f"step {i:4d}  loss {float(metrics['loss']):.4f}")
     if args.ckpt_dir:
-        from repro.ckpt import save_checkpoint
+        from repro.ckpt import save_train_state
 
-        path = save_checkpoint(args.ckpt_dir, int(state.step), state.params)
+        path = save_train_state(args.ckpt_dir, state)
         print(f"saved {path}")
 
 

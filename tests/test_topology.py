@@ -1,6 +1,7 @@
 """Topology + Metropolis mixing-matrix properties (paper eqs. 4-5)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the `test` extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core import topology as topo
