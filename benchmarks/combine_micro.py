@@ -1,53 +1,113 @@
 """Combine-step microbenchmark: the communication/compute cost of one
-consensus round, classical vs DRT, gather vs neighbour-permute engines,
-full-precision vs compressed wire.
+consensus ROUND-SET (the paper's 3 combination rounds), classical vs DRT,
+per-leaf tree path vs the flat-slab hot path, per wire codec.
 
 Measures wall-time of the local compute pieces on CPU and reports the
 ANALYTIC per-agent collective volume (bytes received) for both exchange
-engines across topologies and codecs — the quantity the §Perf hillclimb
+engines across topologies and codecs — the quantities the §Perf hillclimb
 drives down (ring: 2x params via ppermute vs 15x via all-gather at K=16;
-int8/topk shave another >= 4x off either engine).
+int8/topk shave another >= 4x off either engine; the slab path removes the
+per-leaf launch overhead: >= 2x us/call on the 10-group model at K=16).
+
+Writes the perf-trajectory artifact ``BENCH_consensus.json`` at the repo
+root (schema: {"K", "model", "rows": [{engine, path, codec, topology,
+algorithm, us_per_call, ...}], "speedup_slab_vs_tree"}) so future PRs can
+track regressions.
 
 Run:  PYTHONPATH=src python benchmarks/combine_micro.py
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.comm import collective_bytes_per_step as codec_bytes_per_step
-from repro.core import DRTConfig, gather_consensus_step, make_topology
+from repro.core import (
+    DRTConfig,
+    build_slab_layout,
+    gather_consensus_rounds,
+    make_topology,
+)
 from repro.utils.pytree import LayerPartition
 from repro.utils import tree_bytes
 
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_consensus.json")
+ROUNDS = 3  # the paper's consensus cadence; the slab packs ONCE per round-set
 
-def _model_stack(key, K: int, n_layers: int = 8, width: int = 256):
+
+def _model_stack(key, K: int, n_layers: int = 8, width: int = 64):
+    """10-group benchmark model: one stacked scan-over-layers group with six
+    leaves per slot plus nine plain multi-leaf groups — a leaf-heavy shape
+    (26 leaves, 10 groups) representative of scan-over-layers transformers,
+    where the tree path pays per-leaf stats/combine passes every round."""
+
     def one(k):
-        ks = jax.random.split(k, 3)
-        return {
-            "embed": {"w": jax.random.normal(ks[0], (width, width))},
-            "blocks": {"w": jax.random.normal(ks[1], (n_layers, width, width))},
-            "head": {"w": jax.random.normal(ks[2], (width, width))},
+        ks = jax.random.split(k, 16)
+        w = width
+        tree = {
+            "embed": {"w": jax.random.normal(ks[0], (w, w)),
+                      "b": jax.random.normal(ks[1], (w,))},
+            "blocks": {
+                "wq": jax.random.normal(ks[2], (n_layers, w, w)),
+                "wk": jax.random.normal(ks[3], (n_layers, w, w)),
+                "wv": jax.random.normal(ks[4], (n_layers, w, w)),
+                "wo": jax.random.normal(ks[5], (n_layers, w, w)),
+                "w1": jax.random.normal(ks[6], (n_layers, w, 2 * w)),
+                "w2": jax.random.normal(ks[7], (n_layers, 2 * w, w)),
+            },
+            "head": {"w": jax.random.normal(ks[8], (w, w)),
+                     "b": jax.random.normal(ks[9], (w,))},
         }
+        for i in range(7):
+            tree[f"norm{i}"] = {
+                "scale": jax.random.normal(ks[10 + (i % 6)], (w,)),
+                "bias": jax.random.normal(ks[10 + ((i + 1) % 6)], (w,)),
+            }
+        return tree
 
     return jax.vmap(one)(jax.random.split(key, K))
 
 
-def _time(fn, *args, iters=5):
+def _time(fn, *args, iters=9):
     jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    ts = []
     for _ in range(iters):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]  # median: robust to noisy-neighbour containers
+
+
+def _time_paired(fns: dict, *args, iters=15):
+    """Interleaved median timing of several compiled callables — measuring
+    A/B/A/B cancels slow machine-load drift out of the A-vs-B ratio."""
+    ts = {k: [] for k in fns}
+    for k, fn in fns.items():
+        jax.block_until_ready(fn(*args))
+    for _ in range(iters):
+        for k, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            ts[k].append(time.perf_counter() - t0)
+    out = {}
+    for k, v in ts.items():
+        v.sort()
+        out[k] = v[len(v) // 2]
+    return out
 
 
 def run(K: int = 16, codecs=("identity", "bf16", "int8", "topk:0.1")):
+    """Legacy row contract for benchmarks/run.py (one row per topology x
+    algorithm) with the new tree-vs-slab round-set timings attached."""
     pK = _model_stack(jax.random.key(0), K)
     template = jax.tree.map(lambda x: x[0], pK)
     part = LayerPartition.build(template)
+    layout = build_slab_layout(part, template)
     param_bytes = tree_bytes(template)
     rows = []
     for topo_name in ("ring", "hypercube", "full"):
@@ -55,16 +115,25 @@ def run(K: int = 16, codecs=("identity", "bf16", "int8", "topk:0.1")):
         C = jnp.asarray(topo.c_matrix(), jnp.float32)
         metro = jnp.asarray(topo.metropolis(), jnp.float32)
         for algo in ("classical", "drt"):
-            fn = jax.jit(
-                lambda pK, algo=algo: gather_consensus_step(
-                    part, pK, C, DRTConfig(), algorithm=algo, metropolis=metro
-                )[0]
-            )
-            dt = _time(fn, pK)
+            fns = {
+                path: jax.jit(
+                    lambda pK, algo=algo, path=path: gather_consensus_rounds(
+                        part, pK, C, DRTConfig(), rounds=ROUNDS, algorithm=algo,
+                        metropolis=metro, path=path,
+                        layout=layout if path == "slab" else None,
+                    )[0]
+                )
+                for path in ("tree", "slab")
+            }
+            times = _time_paired(fns, pK)
             row = dict(
                 topology=topo_name,
                 algorithm=algo,
-                us_per_call=dt * 1e6,
+                us_per_call=times["slab"] * 1e6,  # the production (slab) path
+                us_tree=times["tree"] * 1e6,
+                us_slab=times["slab"] * 1e6,
+                slab_speedup=times["tree"] / times["slab"],
+                rounds=ROUNDS,
                 param_mb=param_bytes / 1e6,
             )
             for codec in codecs:
@@ -83,15 +152,87 @@ def run(K: int = 16, codecs=("identity", "bf16", "int8", "topk:0.1")):
     return rows
 
 
+def run_codec_paths(K: int = 16, codecs=("identity", "bf16", "int8", "topk:0.1")):
+    """Per-codec tree-vs-slab round-set timings on the ring (gather engine):
+    the BENCH_consensus.json trajectory rows."""
+    pK = _model_stack(jax.random.key(0), K)
+    template = jax.tree.map(lambda x: x[0], pK)
+    part = LayerPartition.build(template)
+    layout = build_slab_layout(part, template)
+    topo = make_topology("ring", K)
+    C = jnp.asarray(topo.c_matrix(), jnp.float32)
+    metro = jnp.asarray(topo.metropolis(), jnp.float32)
+    rng = jax.random.key(1)
+    rows = []
+    for codec in codecs:
+        fns = {
+            path: jax.jit(
+                lambda pK, codec=codec, path=path: gather_consensus_rounds(
+                    part, pK, C, DRTConfig(), rounds=ROUNDS, algorithm="drt",
+                    metropolis=metro, codec=codec, rng=rng, path=path,
+                    layout=layout if path == "slab" else None,
+                )[0]
+            )
+            for path in ("tree", "slab")
+        }
+        times = _time_paired(fns, pK, iters=15 if codec == "identity" else 7)
+        for path in ("tree", "slab"):
+            for engine in ("gather", "permute"):
+                vol = codec_bytes_per_step(topo, template, engine, codec=codec)
+                rows.append(dict(
+                    engine=engine,
+                    path=path,
+                    codec=codec,
+                    topology="ring",
+                    algorithm="drt",
+                    rounds=ROUNDS,
+                    # timings are measured on the GATHER round-set only; the
+                    # permute rows carry the engine-specific wire volume and
+                    # no us_per_call (a permute timing needs a multi-device
+                    # mesh this benchmark does not assume)
+                    us_per_call=times[path] * 1e6 if engine == "gather" else None,
+                    recv_mb_per_round=vol["recv_bytes"] / 1e6,
+                ))
+    return rows
+
+
+def write_bench_json(path: str = BENCH_JSON, K: int = 16) -> dict:
+    """Emit the perf-trajectory artifact consumed by CI and future PRs."""
+    rows = run_codec_paths(K=K)
+    by = {(r["codec"], r["path"]): r for r in rows if r["engine"] == "gather"}
+    speedup = by[("identity", "tree")]["us_per_call"] / by[("identity", "slab")]["us_per_call"]
+    doc = {
+        "generated_by": "benchmarks/combine_micro.py",
+        "K": K,
+        "model": "10-group / 26-leaf benchmark stack (see _model_stack)",
+        "rounds_per_call": ROUNDS,
+        "speedup_slab_vs_tree": speedup,
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    return doc
+
+
 def main():
+    doc = write_bench_json()
+    print(f"slab vs tree (identity, gather, K={doc['K']}, "
+          f"{doc['rounds_per_call']} rounds/call): {doc['speedup_slab_vs_tree']:.2f}x")
+    print(f"{'engine':8s} {'path':5s} {'codec':10s} {'us/call':>10s} {'recv MB/round':>14s}")
+    for r in doc["rows"]:
+        us = "-" if r["us_per_call"] is None else f"{r['us_per_call']:.0f}"
+        print(f"{r['engine']:8s} {r['path']:5s} {r['codec']:10s} "
+              f"{us:>10s} {r['recv_mb_per_round']:14.2f}")
     rows = run(K=16)
-    print(f"{'topology':10s} {'algo':>9s} {'us/call':>9s} {'gthr f32':>9s} "
-          f"{'perm f32':>9s} {'perm bf16':>9s} {'perm int8':>9s} {'perm topk':>9s}")
+    print()
+    print(f"{'topology':10s} {'algo':>9s} {'us tree':>9s} {'us slab':>9s} {'x':>5s} "
+          f"{'gthr f32':>9s} {'perm f32':>9s} {'perm int8':>9s}")
     for r in rows:
-        print(f"{r['topology']:10s} {r['algorithm']:>9s} {r['us_per_call']:9.0f} "
+        print(f"{r['topology']:10s} {r['algorithm']:>9s} {r['us_tree']:9.0f} "
+              f"{r['us_slab']:9.0f} {r['slab_speedup']:5.1f} "
               f"{r['gather_recv_mb_identity']:9.2f} {r['permute_recv_mb_identity']:9.2f} "
-              f"{r['permute_recv_mb_bf16']:9.2f} {r['permute_recv_mb_int8']:9.2f} "
-              f"{r['permute_recv_mb_topk0.1']:9.2f}")
+              f"{r['permute_recv_mb_int8']:9.2f}")
+    print(f"\nwrote {os.path.abspath(BENCH_JSON)}")
     return rows
 
 

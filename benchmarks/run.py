@@ -60,11 +60,16 @@ def main(argv=None) -> None:
         emit(f"fig2/{r['topology']}/{r['algorithm']}", 0.0,
              f"gen_gap={r['steady_gen_gap']:.4f};disagreement={r['history'][-1]['disagreement']:.3f}")
 
-    # --- consensus-round microbench --------------------------------------
+    # --- consensus-round microbench (slab hot path vs per-leaf oracle) ----
     for row in combine_micro.run(K=8 if args.fast else 16):
         emit(f"combine/{row['topology']}/{row['algorithm']}", row["us_per_call"],
+             f"us_tree={row['us_tree']:.1f};slab_speedup={row['slab_speedup']:.2f}x;"
              f"gather_recv_mb={row['gather_recv_mb']:.1f};"
              f"permute_recv_mb={row['permute_recv_mb']:.1f};saving={row['saving']:.1f}x")
+    # perf-trajectory artifact for regression tracking across PRs
+    doc = combine_micro.write_bench_json(K=8 if args.fast else 16)
+    emit("combine/slab_vs_tree", 0.0,
+         f"speedup={doc['speedup_slab_vs_tree']:.2f}x;json={combine_micro.BENCH_JSON}")
 
     # --- kernel microbench -------------------------------------------------
     for row in kernel_micro.run():

@@ -25,9 +25,17 @@ from repro.core.diffusion import (
 )
 from repro.core.consensus import (
     gather_consensus_step,
+    gather_consensus_rounds,
     PermuteConsensus,
     permutation_decomposition,
     collective_bytes_per_step,
+)
+from repro.core.packing import (
+    SlabLayout,
+    build_slab_layout,
+    cached_slab_layout,
+    slab_codec_supported,
+    slab_template_supported,
 )
 from repro.core.decentralized import (
     DecentralizedTrainer,
@@ -54,6 +62,12 @@ __all__ = [
     "classical_combine",
     "metropolis_matrix",
     "gather_consensus_step",
+    "gather_consensus_rounds",
+    "SlabLayout",
+    "build_slab_layout",
+    "cached_slab_layout",
+    "slab_codec_supported",
+    "slab_template_supported",
     "PermuteConsensus",
     "permutation_decomposition",
     "collective_bytes_per_step",

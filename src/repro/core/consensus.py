@@ -2,10 +2,11 @@
 
 Two interchangeable implementations of the combination step (3b)/(11):
 
-* ``gather_consensus_step`` — the *paper-faithful baseline*: operate on the
-  globally agent-stacked tree; under pjit with the agent axis sharded over the
-  mesh ``data`` axis this lowers to an all-gather of the full parameter set
-  plus a masked per-layer einsum.  Collective bytes scale with K.
+* ``gather_consensus_step`` — the *paper-faithful baseline* and the reference
+  oracle: operate per leaf on the globally agent-stacked tree; under pjit with
+  the agent axis sharded over the mesh ``data`` axis this lowers to an
+  all-gather of the full parameter set plus a masked per-layer einsum.
+  Collective bytes scale with K.
 
 * ``PermuteConsensus`` — the *beyond-paper optimized* engine: for structured
   topologies (ring / hypercube / torus2d / chain) the neighbour exchange is a
@@ -15,14 +16,37 @@ Two interchangeable implementations of the combination step (3b)/(11):
 
 Both compute identical mixing matrices (tested against each other).
 
+Hot path: the flat slab
+-----------------------
+The production path for BOTH engines is the flat-slab representation
+(:mod:`repro.core.packing`): the agent-stacked tree is packed ONCE into a
+contiguous ``(K, D)`` slab before the round loop, every round's distance
+statistics and weighted combine run as per-group segment matmuls on the slab
+(plus slab-native codec encode/decode), and the tree is unpacked once after
+the last round — ``gather_consensus_rounds`` for the gather engine,
+``PermuteConsensus(..., rounds=n)`` for the neighbour-exchange engine.  The
+per-leaf tree walk survives as the reference oracle (``path="tree"``) and as
+the automatic fallback for codecs without a slab fast path.
+
+``use_kernels=True`` swaps the slab inner loops for the Pallas kernels from
+``repro.kernels`` (``weighted_combine`` / ``dequant_combine`` for the
+combines, ``drt_dist`` for the neighbour statistics); on CPU they execute in
+interpret mode and are parity-tested against the jnp slab path.
+
 Everything that crosses the agent boundary goes through a ``repro.comm``
-:class:`~repro.comm.WireCodec`: each agent encodes the tree it publishes once
-per round, the wire tree moves through the collective, and receivers decode.
-The DRT distance statistics are computed between *decoded* trees on both
-engines (so the mixing matrices agree codec-for-codec), while each agent's own
-combine contribution stays full precision:
+:class:`~repro.comm.WireCodec`: each agent encodes what it publishes once per
+round, the wire (tree or slab) moves through the collective, and receivers
+decode.  The DRT distance statistics are computed between *decoded* views on
+both engines (so the mixing matrices agree codec-for-codec), while each
+agent's own combine contribution stays full precision:
 
     w_k = A_kk * psi_k(f32)  +  sum_{l != k} A_lk * decode(encode(psi_l)).
+
+Round-driving entry points (the trainer, ``gather_consensus_rounds``, the
+engine's ``rounds=`` loop) derive the round-r stochastic-codec key as
+``fold_in(rng, r)`` and the per-agent key as ``fold_in(round_key, agent)``;
+the single-round oracle ``gather_consensus_step`` takes the already-folded
+round key.
 
 The legacy ``exchange_dtype=bf16`` argument is a deprecated alias for the
 ``bf16`` cast codec.
@@ -40,13 +64,13 @@ import numpy as np
 from repro.comm import CastCodec, IdentityCodec, WireCodec, init_comm_state, make_codec
 from repro.comm import collective_bytes_per_step as _codec_bytes_per_step
 from repro.core import drt as drt_mod
+from repro.core import packing
 from repro.core.drt import DRTConfig
 from repro.core.topology import Topology
 from repro.utils.pytree import LayerPartition
 
 Algorithm = Literal["drt", "classical"]
-
-_NEG_INF = -1e30
+ConsensusPath = Literal["slab", "tree"]
 
 
 def _resolve_codec(codec, exchange_dtype) -> "WireCodec | None":
@@ -81,12 +105,19 @@ def _require_rng(codec: WireCodec, rng):
 def _agent_keys(rng, K: int) -> jax.Array:
     """Per-agent rng keys via fold_in — the SAME derivation the permute
     engine applies with its shard index, so stochastic codecs produce
-    bit-identical wire trees on both engines."""
+    bit-identical wire slabs/trees on both engines."""
     return jax.vmap(lambda i: jax.random.fold_in(rng, i))(jnp.arange(K))
 
 
+def _template_sds(psi_K):
+    """Single-agent ShapeDtypeStruct template from an agent-stacked tree."""
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), psi_K
+    )
+
+
 # ---------------------------------------------------------------------------
-# global (gather/einsum) engine
+# global (gather/einsum) engine — per-leaf reference oracle
 # ---------------------------------------------------------------------------
 
 
@@ -102,7 +133,7 @@ def gather_consensus_step(
     codec_state=None,
     rng: jax.Array | None = None,
 ):
-    """One consensus step on the agent-stacked tree.
+    """One consensus step on the agent-stacked tree (per-leaf reference path).
 
     Returns ``(new_K, A)``, or ``(new_K, A, new_codec_state)`` when a
     ``codec`` is passed explicitly (stateful codecs thread their per-agent
@@ -112,6 +143,9 @@ def gather_consensus_step(
     ``codec`` compresses the cross-agent exchange (distance statistics + the
     off-diagonal combine); each agent's own contribution stays full precision.
     ``exchange_dtype`` is the deprecated spelling of ``codec='bf16'``.
+
+    This is the reference oracle the slab hot path
+    (:func:`gather_consensus_rounds`) is parity-tested against.
     """
     legacy_return = codec is None
     wire_codec = _resolve_codec(codec, exchange_dtype)
@@ -162,6 +196,229 @@ def gather_consensus_step(
     if legacy_return:
         return new, A
     return new, A, new_state
+
+
+# ---------------------------------------------------------------------------
+# gather engine — flat-slab hot path (pack once per round-set)
+# ---------------------------------------------------------------------------
+
+
+def _slab_mixing(layout, regions_f32, C, cfg, algorithm, metropolis, num_layers):
+    if algorithm == "classical":
+        return jnp.broadcast_to(metropolis, (num_layers, *metropolis.shape))
+    if algorithm == "drt":
+        d2, n2 = layout.pairwise_sq_dists(regions_f32)
+        return drt_mod.drt_mixing_matrices(d2, n2, C, cfg)
+    raise ValueError(f"unknown algorithm {algorithm!r}")
+
+
+def _combine_slab_kernels(layout, A, regions):
+    """Kernel-backed region combine: one fused ``weighted_combine`` per
+    (DRT layer, agent column) — accumulator stays in VMEM, each source block
+    streams exactly once.  Interpret mode on CPU."""
+    from repro.kernels import weighted_combine
+
+    out = []
+    for grp, region in zip(layout.groups, regions):
+        slots = []
+        for j in range(grp.n_slots):
+            seg = region[j]  # (K, s_pad)
+            A_p = A[grp.layer0 + j].astype(jnp.float32)
+            slots.append(
+                jax.vmap(lambda col, seg=seg: weighted_combine(col, seg), in_axes=1)(A_p)
+            )
+        out.append(jnp.stack(slots, axis=0))  # (n_slots, K, s_pad)
+    return tuple(out)
+
+
+def _dequant_combine_slab_kernels(layout, A_off, wire):
+    """Fused int8 dequantize+combine per (leaf, slot) scale segment: the
+    decoded f32 neighbour regions never materialize.  HBM traffic is
+    N x D int8 reads + D f32 writes instead of N x D x 4B dequant copies."""
+    from repro.kernels import dequant_combine
+
+    out = []
+    for grp, q in zip(layout.groups, wire.q):
+        slots = []
+        for j in range(grp.n_slots):
+            A_p = A_off[grp.layer0 + j].astype(jnp.float32)  # (K, K)
+            pieces = []
+            end = 0
+            for plan in grp.float_leaves:
+                sid = plan.scale_seg0 + (j if plan.scale_per_slot else 0)
+                qs = jax.lax.slice_in_dim(
+                    q[j], plan.col0, plan.col0 + plan.width, axis=-1
+                )  # (K, width)
+                pieces.append(
+                    jax.vmap(
+                        lambda col, qs=qs, sid=sid: dequant_combine(
+                            col, wire.s[:, sid], qs
+                        ),
+                        in_axes=1,
+                    )(A_p)
+                )
+                end = plan.col0 + plan.width
+            piece = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, -1)
+            if grp.s_pad - end:
+                piece = jnp.pad(piece, ((0, 0), (0, grp.s_pad - end)))
+            slots.append(piece)
+        out.append(jnp.stack(slots, axis=0))  # (n_slots, K, s_pad)
+    return tuple(out)
+
+
+def gather_consensus_rounds(
+    partition: LayerPartition,
+    psi_K,
+    C: jax.Array,
+    cfg: DRTConfig,
+    *,
+    rounds: int = 1,
+    algorithm: Algorithm = "drt",
+    metropolis: jax.Array | None = None,
+    codec: "WireCodec | str | None" = None,
+    codec_state=None,
+    rng: jax.Array | None = None,
+    layout: "packing.SlabLayout | None" = None,
+    path: ConsensusPath = "slab",
+    use_kernels: bool = False,
+):
+    """``rounds`` consensus steps with ONE pack/unpack around the whole set.
+
+    The production hot path: the agent-stacked tree is packed into the flat
+    slab once, every round runs per-group segment matmuls (and slab-native
+    codec encode/decode) on it, and the tree is unpacked once at the end.
+    DRT recomputes the mixing matrices each round (time varying); classical
+    diffusion reuses the static ``metropolis`` matrix.  For EXACT exchanges
+    (no codec / identity) the round loop runs entirely on the (L, K, K) Gram
+    matrices via the recurrence ``G' = A^T G A`` — two passes over the
+    parameters total, independent of ``rounds``.
+
+    Returns ``(new_K, A_last, new_codec_state)``.  ``path="tree"`` (or a
+    codec without a slab fast path) falls back to looping the per-leaf
+    reference oracle :func:`gather_consensus_step`.
+    """
+    wire_codec = _resolve_codec(codec, None)
+    if path not in ("slab", "tree"):
+        raise ValueError(f"unknown consensus path {path!r}")
+    if path == "slab" and not (
+        packing.slab_codec_supported(wire_codec)
+        and packing.slab_template_supported(psi_K)
+    ):
+        path = "tree"
+    if rounds <= 0:
+        return psi_K, None, codec_state if codec_state is not None else ()
+
+    if path == "tree":
+        A_last = None
+        state = codec_state
+        for r in range(rounds):
+            if wire_codec is None:
+                psi_K, A_last = gather_consensus_step(
+                    partition, psi_K, C, cfg,
+                    algorithm=algorithm, metropolis=metropolis,
+                )
+            else:
+                psi_K, A_last, state = gather_consensus_step(
+                    partition, psi_K, C, cfg,
+                    algorithm=algorithm, metropolis=metropolis,
+                    codec=wire_codec, codec_state=state,
+                    rng=jax.random.fold_in(rng, r) if rng is not None else None,
+                )
+        return psi_K, A_last, state if state is not None else ()
+
+    if layout is None:
+        layout = packing.cached_slab_layout(partition, _template_sds(psi_K))
+    K = jax.tree.leaves(psi_K)[0].shape[0]
+    # packed ONCE for the whole round-set; carried between rounds as per-group
+    # contiguous regions so no round re-slices or re-concatenates the slab
+    regions = layout.pack_regions(psi_K)
+    stateful = wire_codec is not None and wire_codec.stateful
+    if stateful:
+        if codec_state is None or codec_state == ():
+            res = tuple(
+                jnp.zeros((g.n_slots, K, g.s_pad), jnp.float32)
+                for g in layout.groups
+            )
+        else:
+            res = layout.pack_regions(codec_state)
+    exact = wire_codec is None or isinstance(wire_codec, IdentityCodec)
+    if not exact:
+        rng = _require_rng(wire_codec, rng)
+
+    if exact:
+        # Exact exchange: the combine is linear, so the whole round-set runs
+        # on the (L, K, K) Gram matrices — ONE Gram pass over the slab before
+        # the loop (psi' = A^T psi per layer implies G' = A^T G A), tiny
+        # (K, K) algebra per round, and ONE combine with the accumulated
+        # mixing product at the end.  Two passes over the D parameters total,
+        # independent of the round count, vs two per round on the tree path.
+        A_last = None
+        M = None  # accumulated product A_1 @ ... @ A_r per layer
+        if algorithm == "classical":
+            A_last = jnp.broadcast_to(
+                metropolis, (partition.num_layers, *metropolis.shape)
+            )
+            M = A_last
+            for _ in range(rounds - 1):
+                M = jnp.einsum("pij,pjk->pik", M, A_last)
+        elif algorithm == "drt":
+            G = layout.gram(regions)
+            for _ in range(rounds):
+                d2, n2 = packing.gram_sq_dists(G)
+                A_last = drt_mod.drt_mixing_matrices(d2, n2, C, cfg)
+                G = packing.gram_update(G, A_last)
+                M = A_last if M is None else jnp.einsum(
+                    "pij,pjk->pik", M, A_last
+                )
+        else:
+            raise ValueError(f"unknown algorithm {algorithm!r}")
+        if use_kernels:
+            regions = _combine_slab_kernels(layout, M, regions)
+            new_K = layout.unpack_regions(regions, like=psi_K)
+        else:
+            # fused combine+unpack: one read of the regions, one write per leaf
+            new_K = layout.combine_unpack(M, regions, like=psi_K)
+        return new_K, A_last, codec_state if codec_state is not None else ()
+
+    A_last = None
+    for r in range(rounds):
+        keys = _agent_keys(jax.random.fold_in(rng, r), K)
+        # regions are slot-major: the agent axis being vmapped over is axis 1
+        wax = packing.wire_out_axes(wire_codec)
+        if stateful:
+            wire, res = jax.vmap(
+                lambda s, st, k: packing.slab_encode(wire_codec, layout, s, st, k),
+                in_axes=(1, 1, 0),
+                out_axes=(wax, 1),
+            )(regions, res, keys)
+        else:
+            wire, _ = jax.vmap(
+                lambda s, k: packing.slab_encode(wire_codec, layout, s, (), k),
+                in_axes=(1, 0),
+                out_axes=(wax, 0),
+            )(regions, keys)
+        decoded = packing.slab_decode(wire_codec, layout, wire)  # f32 regions
+        A_last = _slab_mixing(
+            layout, decoded, C, cfg, algorithm, metropolis, partition.num_layers
+        )
+        eye = jnp.eye(K, dtype=A_last.dtype)
+        A_off = A_last * (1.0 - eye)[None]
+        if use_kernels and isinstance(wire_codec, packing.Int8StochasticCodec):
+            off = _dequant_combine_slab_kernels(layout, A_off, wire)
+        elif use_kernels:
+            off = _combine_slab_kernels(layout, A_off, decoded)
+        else:
+            off = layout.combine(A_off, decoded)
+        diag = jnp.diagonal(A_last, axis1=1, axis2=2)  # (L, K)
+        selfed = layout.scale_by_layer(diag.T, regions)  # full-precision self
+        regions = jax.tree.map(jnp.add, off, selfed)
+
+    new_K = layout.unpack_regions(regions, like=psi_K)
+    if stateful:
+        like = codec_state if codec_state not in (None, ()) else psi_K
+        # the error-feedback residual stays f32 whatever the param dtype
+        return new_K, A_last, layout.unpack_regions(res, like=like, dtype=jnp.float32)
+    return new_K, A_last, codec_state if codec_state is not None else ()
 
 
 # ---------------------------------------------------------------------------
@@ -219,10 +476,18 @@ class PermuteConsensus:
     The agent axis must be a mesh axis named ``axis_name`` with exactly one
     agent per shard (leading axis 1 inside the shard).
 
-    With a ``codec`` the published tree is encoded ONCE, the wire tree is
-    ppermuted each exchange round and decoded on arrival; calling the engine
-    then returns ``(combined, new_codec_state)`` instead of just the tree.
-    ``exchange_dtype`` remains as the deprecated alias for the cast codec.
+    ``path="slab"`` (the default hot path) packs the local tree into a flat
+    (D,) slab once per call, runs all ``rounds`` exchange rounds on it (the
+    wire slab is one or two contiguous buffers per ``ppermute`` instead of one
+    per leaf) and unpacks once; ``path="tree"`` is the per-leaf reference
+    oracle.  ``use_kernels`` swaps the slab statistics/combine inner loops for
+    the Pallas ``drt_dist`` / ``weighted_combine`` kernels.
+
+    With a ``codec`` the published slab/tree is encoded ONCE per round, the
+    wire is ppermuted each exchange round and decoded on arrival; calling the
+    engine then returns ``(combined, new_codec_state)`` instead of just the
+    tree.  ``exchange_dtype`` remains as the deprecated alias for the cast
+    codec.
     """
 
     partition: LayerPartition
@@ -236,6 +501,8 @@ class PermuteConsensus:
     norm_reduce_axes: tuple[str, ...] = ()
     exchange_dtype: object | None = None  # deprecated: use codec="bf16"
     codec: "WireCodec | str | None" = None
+    path: ConsensusPath = "slab"
+    use_kernels: bool = False
 
     def _perms(self) -> list[list[tuple[int, int]]]:
         decomp = permutation_decomposition(self.topology)
@@ -246,18 +513,215 @@ class PermuteConsensus:
             )
         return [[(int(s), int(p[s])) for s in range(len(p))] for p in decomp]
 
-    def __call__(self, psi_local, codec_state=None, rng: jax.Array | None = None):
+    def _mix_weights(self, d2, n2, cw, srcs, my):
+        """Local column of A from stacked neighbour stats.
+
+        ``d2``/``n2``: (n_nbrs, L) per-neighbour per-layer stats; ``cw``:
+        (n_nbrs,) edge weights; ``srcs``: (n_nbrs,) source agent ids.
+        Returns ``(w_self (L,), w_nbrs (n_nbrs, L))``.
+        """
+        n_nbrs, L = d2.shape
+        if self.algorithm == "classical":
+            M = jnp.asarray(self.topology.metropolis(), jnp.float32)
+            w_nbrs = jnp.broadcast_to(M[srcs, my][:, None], (n_nbrs, L))
+            w_self = jnp.broadcast_to(M[my, my][None], (L,))
+            return w_self, w_nbrs
+        kappa = self.cfg.kappa
+        N = self.cfg.resolve_N(self.topology.num_agents)
+        log_prod = jnp.sum(jnp.log1p(d2 / (n2 + kappa)), axis=1, keepdims=True) + (
+            L + 1
+        ) * jnp.log(2.0)
+        if self.cfg.weight_mode == "paper":
+            log_denom = jnp.log(d2 + kappa)
+        else:
+            log_denom = jnp.log(n2 + kappa + d2)
+        log_a = log_prod - log_denom + jnp.log(cw)[:, None]  # (n_nbrs, L)
+        log_min = jnp.min(log_a, axis=0)  # smallest positive per layer
+        log_a = jnp.minimum(log_a, jnp.log(N) + log_min)
+        Cmat = jnp.asarray(self.topology.c_matrix(), jnp.float32)
+        c_kk = Cmat[my, my]
+        log_self = jnp.log(c_kk / n_nbrs) + jax.nn.logsumexp(log_a, axis=0)
+        # normalize over {self} + neighbours per layer
+        log_all = jnp.concatenate([log_self[None], log_a], axis=0)
+        m = jnp.max(log_all, axis=0, keepdims=True)
+        ex = jnp.exp(log_all - m)
+        a_all = ex / jnp.sum(ex, axis=0, keepdims=True)  # (1+n_nbrs, L)
+        return a_all[0], a_all[1:]
+
+    def __call__(
+        self,
+        psi_local,
+        codec_state=None,
+        rng: jax.Array | None = None,
+        *,
+        rounds: int = 1,
+    ):
         """psi_local: single-agent tree (leaves WITHOUT leading agent axis).
 
-        Must be called inside shard_map with ``axis_name`` bound.  Returns the
-        combined single-agent tree — or ``(combined, new_codec_state)`` when
-        the engine has a codec.
+        Must be called inside shard_map with ``axis_name`` bound.  Runs
+        ``rounds`` consensus rounds (pack/encode once per round, exchange,
+        combine) and returns the combined single-agent tree — or
+        ``(combined, new_codec_state)`` when the engine has a codec.
         """
+        wire_codec = _resolve_codec(self.codec, self.exchange_dtype)
+        path = self.path
+        if path == "slab" and not (
+            packing.slab_codec_supported(wire_codec)
+            and packing.slab_template_supported(psi_local)
+        ):
+            path = "tree"
+        if path == "tree":
+            return self._call_tree(psi_local, codec_state, rng, rounds, wire_codec)
+        return self._call_slab(psi_local, codec_state, rng, rounds, wire_codec)
+
+    # -- slab hot path -------------------------------------------------------
+
+    def _call_slab(self, psi_local, codec_state, rng, rounds, wire_codec):
         part = self.partition
-        L = part.num_layers
         ax = self.axis_name
         perms = self._perms()
         my = jax.lax.axis_index(ax)
+        has_codec = self.codec is not None
+        if wire_codec is not None and isinstance(wire_codec, IdentityCodec):
+            wire_codec = None  # identity: exact exchange
+        # the layout is built from the LOCAL shard shapes at trace time (and
+        # memoized — retraces reuse it), so tensor-parallel shards pack their
+        # own slice; per-layer norms are partial sums psum'd over
+        # norm_reduce_axes exactly like the tree path
+        layout = packing.cached_slab_layout(
+            part, jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), psi_local)
+        )
+        regions = layout.pack_regions(psi_local)  # packed once per round-set
+        stateful = wire_codec is not None and wire_codec.stateful
+        res = ()
+        if stateful:
+            if codec_state is None or codec_state == ():
+                res = packing.slab_init_state(wire_codec, layout)
+            else:
+                res = layout.pack_regions(codec_state)
+        if wire_codec is not None:
+            base_rng = _require_rng(wire_codec, rng)
+
+        Cmat = jnp.asarray(self.topology.c_matrix(), jnp.float32)
+        inv_srcs = []
+        for perm in perms:
+            inv = np.empty(len(perm), np.int64)
+            for s, d in perm:
+                inv[d] = s
+            inv_srcs.append(jnp.asarray(inv))
+
+        def _norms(regs):
+            n = layout.layer_sq_norms(regs)
+            for a in self.norm_reduce_axes:
+                n = jax.lax.psum(n, a)
+            return n
+
+        def _stats(self_hat, recv):
+            if self.use_kernels:
+                from repro.kernels import drt_dist
+
+                pairs = []
+                for grp, a, b in zip(layout.groups, self_hat, recv):
+                    for j in range(grp.n_slots):
+                        pairs.append(drt_dist(a[j], b[j]))
+                st = jnp.stack(pairs)  # (L, 2)
+                d2, n2 = st[:, 0], st[:, 1]
+                for a in self.norm_reduce_axes:
+                    d2 = jax.lax.psum(d2, a)
+                    n2 = jax.lax.psum(n2, a)
+                return d2, n2
+            diff = jax.tree.map(jnp.subtract, self_hat, recv)
+            return _norms(diff), _norms(recv)
+
+        for r in range(rounds):
+            if wire_codec is not None:
+                key = jax.random.fold_in(jax.random.fold_in(base_rng, r), my)
+                wire, res = packing.slab_encode(wire_codec, layout, regions, res, key)
+                # pin the compressed representation across the wire: without
+                # the barrier XLA hoists the f32 up-convert above the
+                # collective-permute, silently un-compressing it
+                wire = jax.lax.optimization_barrier(wire)
+                self_hat = packing.slab_decode(wire_codec, layout, wire)
+            else:
+                wire = regions
+                self_hat = regions
+
+            recvs, d2s, n2s, cws, srcs = [], [], [], [], []
+            for perm, inv in zip(perms, inv_srcs):
+                # the wire is one contiguous buffer per GROUP (plus one scale
+                # vector for int8): a handful of collective launches instead
+                # of one per leaf
+                recv_wire = jax.tree.map(
+                    lambda x: jax.lax.ppermute(x, ax, perm), wire
+                )
+                if wire_codec is not None:
+                    recv_wire = jax.lax.optimization_barrier(recv_wire)
+                    recv = packing.slab_decode(wire_codec, layout, recv_wire)
+                else:
+                    recv = recv_wire
+                d2, n2 = _stats(self_hat, recv)
+                src = inv[my]
+                recvs.append(recv)
+                d2s.append(d2)
+                n2s.append(n2)
+                cws.append(Cmat[src, my])
+                srcs.append(src)
+
+            w_self, w_nbrs = self._mix_weights(
+                jnp.stack(d2s), jnp.stack(n2s), jnp.stack(cws), jnp.stack(srcs), my
+            )
+            w_all = jnp.concatenate([w_self[None], w_nbrs], axis=0)  # (1+n, L)
+            if self.use_kernels:
+                from repro.kernels import weighted_combine
+
+                out_regions = []
+                for gi, grp in enumerate(layout.groups):
+                    srcs_g = jnp.stack(
+                        [regions[gi]] + [rv[gi] for rv in recvs]
+                    )  # (1+n, n_slots, s_pad); self = full precision
+                    slots = [
+                        weighted_combine(
+                            w_all[:, grp.layer0 + j], srcs_g[:, j]
+                        )
+                        for j in range(grp.n_slots)
+                    ]
+                    out_regions.append(jnp.stack(slots, axis=0))
+                regions = tuple(out_regions)
+            else:
+                out_regions = []
+                for gi, grp in enumerate(layout.groups):
+                    srcs_g = jnp.stack(
+                        [regions[gi]] + [rv[gi] for rv in recvs]
+                    )  # (1+n, n_slots, s_pad); self = full precision
+                    w_g = jax.lax.slice_in_dim(
+                        w_all, grp.layer0, grp.layer0 + grp.n_slots, axis=-1
+                    )  # (1+n, n_slots)
+                    out_regions.append(jnp.sum(w_g[..., None] * srcs_g, axis=0))
+                regions = tuple(out_regions)
+
+        out = layout.unpack_regions(regions, like=psi_local)
+        if has_codec:
+            if stateful:
+                like = codec_state if codec_state not in (None, ()) else psi_local
+                # the error-feedback residual stays f32 whatever the param dtype
+                return out, layout.unpack_regions(
+                    res, like=like, dtype=jnp.float32
+                )
+            return out, codec_state if codec_state is not None else ()
+        return out
+
+    # -- per-leaf reference oracle -------------------------------------------
+
+    def _call_tree(self, psi_local, codec_state, rng, rounds, wire_codec):
+        part = self.partition
+        ax = self.axis_name
+        perms = self._perms()
+        my = jax.lax.axis_index(ax)
+        has_codec = self.codec is not None
+        if wire_codec is not None and isinstance(wire_codec, IdentityCodec):
+            wire_codec = None  # identity: take the exact legacy path
+        if wire_codec is not None:
+            base_rng = _require_rng(wire_codec, rng)
 
         def _norms(tree):
             n = part.sq_norms(tree)
@@ -265,91 +729,62 @@ class PermuteConsensus:
                 n = jax.lax.psum(n, a)
             return n
 
-        wire_codec = _resolve_codec(self.codec, self.exchange_dtype)
-        has_codec = self.codec is not None
-        if wire_codec is not None and isinstance(wire_codec, IdentityCodec):
-            wire_codec = None  # identity: take the exact legacy path
-
         new_state = codec_state
-        if wire_codec is not None:
-            if wire_codec.stateful and (codec_state is None or codec_state == ()):
-                codec_state = wire_codec.init_state(psi_local)
-            key = jax.random.fold_in(_require_rng(wire_codec, rng), my)
-            wire, new_state = wire_codec.encode(psi_local, codec_state, key)
-            # pin the compressed representation across the wire: without the
-            # barriers XLA hoists the f32 up-convert above the
-            # collective-permute (the CPU backend has no native bf16 dot),
-            # silently un-compressing it
-            wire = jax.lax.optimization_barrier(wire)
-            psi_self_hat = wire_codec.decode(wire)
-        else:
-            wire = psi_local
-            psi_self_hat = psi_local
-
-        # --- exchange: collect neighbour trees + their per-layer stats ------
-        neighbours = []  # list of (tree, d2 (L,), n2 (L,), edge_w scalar, src)
         Cmat = jnp.asarray(self.topology.c_matrix(), jnp.float32)
-        for perm in perms:
-            recv_wire = jax.tree.map(lambda x: jax.lax.ppermute(x, ax, perm), wire)
+        for r in range(rounds):
             if wire_codec is not None:
-                recv_wire = jax.lax.optimization_barrier(recv_wire)
-                recv = wire_codec.decode(recv_wire)
+                if wire_codec.stateful and (new_state is None or new_state == ()):
+                    new_state = wire_codec.init_state(psi_local)
+                key = jax.random.fold_in(jax.random.fold_in(base_rng, r), my)
+                wire, new_state = wire_codec.encode(psi_local, new_state, key)
+                # pin the compressed representation across the wire: without the
+                # barriers XLA hoists the f32 up-convert above the
+                # collective-permute (the CPU backend has no native bf16 dot),
+                # silently un-compressing it
+                wire = jax.lax.optimization_barrier(wire)
+                psi_self_hat = wire_codec.decode(wire)
             else:
-                recv = recv_wire
-            diff = jax.tree.map(
-                lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
-                psi_self_hat,
-                recv,
-            )
-            d2 = _norms(diff)  # (L,) distance to this neighbour
-            n2 = _norms(recv)
-            # which agent did we receive from? inverse permutation at `my`
-            inv = np.empty(len(perm), np.int64)
-            for s, d in perm:
-                inv[d] = s
-            src = jnp.asarray(inv)[my]
-            cw = Cmat[src, my]  # edge weight c_{l k}
-            neighbours.append((recv, d2, n2, cw, src))
+                wire = psi_local
+                psi_self_hat = psi_local
 
-        n_nbrs = len(neighbours)
-
-        # --- mixing weights (local column of A) ------------------------------
-        if self.algorithm == "classical":
-            M = jnp.asarray(self.topology.metropolis(), jnp.float32)
-            w_nbrs = jnp.stack([M[src, my] for (_, _, _, _, src) in neighbours])
-            w_nbrs = jnp.broadcast_to(w_nbrs[:, None], (n_nbrs, L))
-            w_self = jnp.broadcast_to(M[my, my][None], (L,))
-        else:
-            kappa = self.cfg.kappa
-            N = self.cfg.resolve_N(self.topology.num_agents)
-            logs = []
-            for (_, d2, n2, cw, _) in neighbours:
-                log_prod = jnp.sum(jnp.log1p(d2 / (n2 + kappa))) + (L + 1) * jnp.log(2.0)
-                if self.cfg.weight_mode == "paper":
-                    log_denom = jnp.log(d2 + kappa)
+            # --- exchange: collect neighbour trees + their per-layer stats --
+            recvs, d2s, n2s, cws, srcs = [], [], [], [], []
+            for perm in perms:
+                recv_wire = jax.tree.map(lambda x: jax.lax.ppermute(x, ax, perm), wire)
+                if wire_codec is not None:
+                    recv_wire = jax.lax.optimization_barrier(recv_wire)
+                    recv = wire_codec.decode(recv_wire)
                 else:
-                    log_denom = jnp.log(n2 + kappa + d2)
-                logs.append(log_prod - log_denom + jnp.log(cw))
-            log_a = jnp.stack(logs)  # (n_nbrs, L)
-            log_min = jnp.min(log_a, axis=0)  # smallest positive per layer
-            log_a = jnp.minimum(log_a, jnp.log(N) + log_min)
-            c_kk = Cmat[my, my]
-            log_self = jnp.log(c_kk / n_nbrs) + jax.nn.logsumexp(log_a, axis=0)
-            # normalize over {self} + neighbours per layer
-            log_all = jnp.concatenate([log_self[None], log_a], axis=0)
-            m = jnp.max(log_all, axis=0, keepdims=True)
-            ex = jnp.exp(log_all - m)
-            a_all = ex / jnp.sum(ex, axis=0, keepdims=True)  # (1+n_nbrs, L)
-            w_self, w_nbrs = a_all[0], a_all[1:]
+                    recv = recv_wire
+                diff = jax.tree.map(
+                    lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                    psi_self_hat,
+                    recv,
+                )
+                # which agent did we receive from? inverse permutation at `my`
+                inv = np.empty(len(perm), np.int64)
+                for s, d in perm:
+                    inv[d] = s
+                src = jnp.asarray(inv)[my]
+                recvs.append(recv)
+                d2s.append(_norms(diff))
+                n2s.append(_norms(recv))
+                cws.append(Cmat[src, my])
+                srcs.append(src)
 
-        # --- combine ----------------------------------------------------------
-        out = part.scale_by_layer(w_self, psi_local)
-        for (recv, _, _, _, _), w in zip(neighbours, w_nbrs):
-            scaled = part.scale_by_layer(w, recv)
-            out = jax.tree.map(jnp.add, out, scaled)
+            w_self, w_nbrs = self._mix_weights(
+                jnp.stack(d2s), jnp.stack(n2s), jnp.stack(cws), jnp.stack(srcs), my
+            )
+
+            # --- combine ----------------------------------------------------
+            out = part.scale_by_layer(w_self, psi_local)
+            for recv, w in zip(recvs, w_nbrs):
+                scaled = part.scale_by_layer(w, recv)
+                out = jax.tree.map(jnp.add, out, scaled)
+            psi_local = out
         if has_codec:
-            return out, new_state if new_state is not None else ()
-        return out
+            return psi_local, new_state if new_state is not None else ()
+        return psi_local
 
 
 def collective_bytes_per_step(

@@ -22,8 +22,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.comm import WireCodec, init_comm_state, make_codec
-from repro.core.consensus import Algorithm, gather_consensus_step
+from repro.core.consensus import Algorithm, ConsensusPath, gather_consensus_rounds
 from repro.core.drt import DRTConfig
+from repro.core.packing import SlabLayout, build_slab_layout, slab_template_supported
 from repro.core.topology import Topology
 from repro.optim.optimizers import Optimizer
 from repro.utils.pytree import LayerPartition
@@ -49,6 +50,13 @@ class TrainerConfig:
     # ("identity", "bf16", "f16", "int8", "topk", "topk:<frac>") or a
     # WireCodec instance; None keeps the exact full-precision exchange
     codec: "WireCodec | str | None" = None
+    # "slab" (default) packs the agent-stacked tree once per consensus
+    # round-set and runs every round on the flat (K, D) slab; "tree" is the
+    # per-leaf reference oracle
+    consensus_path: ConsensusPath = "slab"
+    # run the slab combine/stats through the Pallas kernels (interpret mode
+    # on CPU, real kernels on TPU)
+    use_kernels: bool = False
 
 
 class DecentralizedTrainer:
@@ -76,6 +84,7 @@ class DecentralizedTrainer:
         self._C = jnp.asarray(topology.c_matrix(), jnp.float32)
         self._metropolis = jnp.asarray(topology.metropolis(), jnp.float32)
         self._partition: LayerPartition | None = None
+        self._layout: SlabLayout | None = None
 
     # -- initialization -------------------------------------------------------
 
@@ -88,8 +97,7 @@ class DecentralizedTrainer:
         else:
             keys = jax.random.split(rng, self.K)
             params = jax.vmap(self.init_fn)(keys)
-        template = jax.tree.map(lambda x: x[0], params)
-        self._partition = LayerPartition.build(template, stacked_keys=self.stacked_keys)
+        self.build_partition(params)
         opt_state = self.optimizer.init(params)
         comm = self.init_comm(params)
         return DecentralizedState(params, opt_state, jnp.zeros((), jnp.int32), comm)
@@ -105,8 +113,15 @@ class DecentralizedTrainer:
         return self._partition
 
     def build_partition(self, params_K) -> LayerPartition:
-        template = jax.tree.map(lambda x: x[0], params_K)
+        template = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), params_K
+        )
         self._partition = LayerPartition.build(template, stacked_keys=self.stacked_keys)
+        self._layout = (
+            build_slab_layout(self._partition, template)
+            if self.cfg.consensus_path == "slab" and slab_template_supported(template)
+            else None  # non-float leaves: consensus falls back to the oracle
+        )
         return self._partition
 
     # -- step functions (pure; jit/vmap-friendly) ------------------------------
@@ -135,36 +150,28 @@ class DecentralizedTrainer:
         configured wire codec the exchange is compressed and any per-agent
         error-feedback residual is threaded through ``state.comm``; ``rng``
         seeds stochastic codecs (defaults to a step-derived key).
+
+        On the default ``consensus_path="slab"`` the agent-stacked tree is
+        packed once, all rounds run on the flat (K, D) slab, and the tree is
+        unpacked once at the end (see :mod:`repro.core.packing`).
         """
-        partition = self.partition
-        params = state.params
-        A_last = None
-        if self.codec is None:
-            for _ in range(self.cfg.consensus_steps):
-                params, A_last = gather_consensus_step(
-                    partition,
-                    params,
-                    self._C,
-                    self.cfg.drt,
-                    algorithm=self.cfg.algorithm,
-                    metropolis=self._metropolis,
-                )
-            return DecentralizedState(params, state.opt_state, state.step, state.comm), A_last
-        if rng is None:
+        if self.codec is not None and rng is None:
             rng = jax.random.fold_in(jax.random.key(0), state.step)
-        comm = state.comm
-        for r in range(self.cfg.consensus_steps):
-            params, A_last, comm = gather_consensus_step(
-                partition,
-                params,
-                self._C,
-                self.cfg.drt,
-                algorithm=self.cfg.algorithm,
-                metropolis=self._metropolis,
-                codec=self.codec,
-                codec_state=comm,
-                rng=jax.random.fold_in(rng, r),
-            )
+        params, A_last, comm = gather_consensus_rounds(
+            self.partition,
+            state.params,
+            self._C,
+            self.cfg.drt,
+            rounds=self.cfg.consensus_steps,
+            algorithm=self.cfg.algorithm,
+            metropolis=self._metropolis,
+            codec=self.codec,
+            codec_state=state.comm,
+            rng=rng,
+            layout=self._layout,
+            path=self.cfg.consensus_path,
+            use_kernels=self.cfg.use_kernels,
+        )
         return DecentralizedState(params, state.opt_state, state.step, comm), A_last
 
     def disagreement(self, params_K) -> jax.Array:

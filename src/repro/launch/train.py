@@ -19,8 +19,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.comm import WireCodec, init_comm_state, make_codec
-from repro.core.consensus import gather_consensus_step
+from repro.core import consensus as _consensus
+from repro.core.consensus import gather_consensus_rounds
 from repro.core.decentralized import TrainerConfig
+from repro.core.packing import (
+    build_slab_layout,
+    slab_codec_supported,
+    slab_template_supported,
+)
 from repro.core.topology import Topology, make_topology
 from repro.models.registry import ModelBundle
 from repro.optim.optimizers import Optimizer
@@ -94,6 +100,12 @@ def make_train_step(
     stateful codecs (top-k error feedback) thread their per-agent residual
     through ``state.comm``.  ``exchange_dtype`` is the deprecated spelling of
     ``codec='bf16'``.
+
+    On ``tcfg.consensus_path="slab"`` (the default) both engines pack the
+    parameters into the flat slab ONCE per step, run every consensus round on
+    it, and unpack once — see :mod:`repro.core.packing`;
+    ``tcfg.use_kernels=True`` routes the slab inner loops through the Pallas
+    kernels.
     """
     cfg = bundle.cfg
     K = cfg.num_agents
@@ -128,6 +140,8 @@ def make_train_step(
             norm_reduce_axes=inner_axes,
             exchange_dtype=exchange_dtype,
             codec=wire_codec,
+            path=tcfg.consensus_path,
+            use_kernels=tcfg.use_kernels,
         )
         # codec state mirrors the params leaf-for-leaf -> identical sharding
         comm_specs = (
@@ -136,10 +150,11 @@ def make_train_step(
 
         if wire_codec is None:
 
-            def one_round(params, comm, rkey):
+            # pack once, run ALL rounds on the slab inside one shard_map call
+            def consensus(params, comm, ckey):
                 def body(local):
                     sq = jax.tree.map(lambda x: x[0], local)
-                    out = engine(sq)
+                    out = engine(sq, rounds=consensus_rounds)
                     return jax.tree.map(lambda x: x[None], out)
 
                 new = shard_map(
@@ -150,11 +165,13 @@ def make_train_step(
 
         else:
 
-            def one_round(params, comm, rkey):
+            def consensus(params, comm, ckey):
                 def body(local, lcomm, k):
                     sq = jax.tree.map(lambda x: x[0], local)
                     sc = jax.tree.map(lambda x: x[0], lcomm)
-                    out, nc = engine(sq, codec_state=sc, rng=k)
+                    out, nc = engine(
+                        sq, codec_state=sc, rng=k, rounds=consensus_rounds
+                    )
                     return (
                         jax.tree.map(lambda x: x[None], out),
                         jax.tree.map(lambda x: x[None], nc),
@@ -166,34 +183,43 @@ def make_train_step(
                     in_specs=(param_specs, comm_specs, P()),
                     out_specs=(param_specs, comm_specs),
                     check_rep=False,
-                )(params, comm, rkey)
+                )(params, comm, ckey)
 
     else:
+        # the deprecated exchange_dtype spelling resolves to the cast codec
+        # here (warning once, at build time); the key flow below still follows
+        # the original wire_codec so stochastic-codec rng handling is unchanged
+        effective_codec = (
+            _consensus._resolve_codec(None, exchange_dtype)
+            if exchange_dtype is not None
+            else wire_codec
+        )
+        layout = None
+        p1_template = jax.eval_shape(bundle.init, jax.random.key(0))
+        if (
+            tcfg.consensus_path == "slab"
+            and slab_codec_supported(effective_codec)
+            and slab_template_supported(p1_template)
+        ):
+            layout = build_slab_layout(partition, p1_template)
 
-        def one_round(params, comm, rkey):
-            if wire_codec is None:
-                new, _ = gather_consensus_step(
-                    partition,
-                    params,
-                    C,
-                    tcfg.drt,
-                    algorithm=tcfg.algorithm,
-                    metropolis=metro,
-                    exchange_dtype=exchange_dtype,
-                )
-                return new, comm
-            new, _, comm = gather_consensus_step(
+        def consensus(params, comm, ckey):
+            new, _, new_comm = gather_consensus_rounds(
                 partition,
                 params,
                 C,
                 tcfg.drt,
+                rounds=consensus_rounds,
                 algorithm=tcfg.algorithm,
                 metropolis=metro,
-                codec=wire_codec,
+                codec=effective_codec,
                 codec_state=comm,
-                rng=rkey,
+                rng=ckey,
+                layout=layout,
+                path=tcfg.consensus_path,
+                use_kernels=tcfg.use_kernels,
             )
-            return new, comm
+            return new, comm if effective_codec is None else new_comm
 
     def step(state: TrainState, batch_K, key):
         if wire_codec is None:
@@ -217,8 +243,7 @@ def make_train_step(
             # not passed): initialize the residual here, matching the gather
             # engine's auto-init, instead of tripping a shard_map spec mismatch
             comm = init_comm_state(wire_codec, params)
-        for r in range(consensus_rounds):
-            params, comm = one_round(params, comm, jax.random.fold_in(ckey, r))
+        params, comm = consensus(params, comm, ckey)
         return (
             TrainState(params, opt_state, state.step + 1, comm),
             {"loss": jnp.mean(losses)},

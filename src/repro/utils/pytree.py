@@ -124,7 +124,18 @@ class LayerPartition:
             offset += n
         return LayerPartition(groups=tuple(groups), num_layers=offset)
 
-    # -- per-layer reductions ------------------------------------------------
+    # -- flat-slab hot path ---------------------------------------------------
+
+    def slab_layout(self, template: PyTree, dtype=jnp.float32):
+        """Static flat-slab packing plan for this partition (the consensus
+        hot path packs once per round-set and runs segment reductions on the
+        slab; see :mod:`repro.core.packing`).  ``template``: single-agent tree
+        of arrays or ShapeDtypeStructs."""
+        from repro.core.packing import build_slab_layout  # lazy: avoid cycle
+
+        return build_slab_layout(self, template, dtype=dtype)
+
+    # -- per-layer reductions (reference oracle for the slab path) ------------
 
     def sq_norms(self, tree: PyTree) -> jax.Array:
         """Per-DRT-layer squared norms: returns ``(L,)`` float32."""

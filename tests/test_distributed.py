@@ -130,15 +130,17 @@ def test_sharded_train_step_executes():
 def test_engines_agree_under_every_codec():
     """Acceptance: gather and permute engines produce matching combined
     parameters (within codec tolerance) for EVERY registered codec on
-    ring / hypercube / torus2d.  Both engines share the fold_in(rng, agent)
-    key derivation, so stochastic codecs emit identical wire trees and the
-    engines agree to collective-reduction-order noise, not codec noise."""
+    ring / hypercube / torus2d, on both the slab hot path and the per-leaf
+    tree oracle, including multi-round round-sets.  Both engines share the
+    fold_in(fold_in(rng, round), agent) key derivation, so stochastic codecs
+    emit identical wire slabs/trees and the engines agree to
+    collective-reduction-order noise, not codec noise."""
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from jax.experimental.shard_map import shard_map
         from repro.core import ring, hypercube, torus2d, DRTConfig
-        from repro.core.consensus import PermuteConsensus, gather_consensus_step
+        from repro.core.consensus import PermuteConsensus, gather_consensus_rounds
         from repro.utils.pytree import LayerPartition
 
         K = 4
@@ -158,21 +160,23 @@ def test_engines_agree_under_every_codec():
             cfg = DRTConfig()
             C = jnp.asarray(topo.c_matrix(), jnp.float32)
             for codec in ("identity", "bf16", "f16", "int8", "topk:0.25"):
-                want, A, _ = gather_consensus_step(
-                    part, pK, C, cfg, algorithm="drt", codec=codec, rng=rng)
-                eng = PermuteConsensus(part, topo, cfg, axis_name="data",
-                                       codec=codec)
-                def body(local):
-                    sq = jax.tree.map(lambda x: x[0], local)
-                    out, _ = eng(sq, rng=rng)
-                    return jax.tree.map(lambda x: x[None], out)
-                got = shard_map(body, mesh=mesh, in_specs=(specs,),
-                                out_specs=specs, check_rep=False)(pK)
-                for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
-                    np.testing.assert_allclose(
-                        np.asarray(a, np.float32), np.asarray(b, np.float32),
-                        rtol=2e-4, atol=2e-5,
-                        err_msg=f"{topo.name}/{codec}")
+                for path, rounds in (("slab", 1), ("slab", 3), ("tree", 1)):
+                    want, A, _ = gather_consensus_rounds(
+                        part, pK, C, cfg, algorithm="drt", codec=codec,
+                        rng=rng, rounds=rounds, path=path)
+                    eng = PermuteConsensus(part, topo, cfg, axis_name="data",
+                                           codec=codec, path=path)
+                    def body(local):
+                        sq = jax.tree.map(lambda x: x[0], local)
+                        out, _ = eng(sq, rng=rng, rounds=rounds)
+                        return jax.tree.map(lambda x: x[None], out)
+                    got = shard_map(body, mesh=mesh, in_specs=(specs,),
+                                    out_specs=specs, check_rep=False)(pK)
+                    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+                        np.testing.assert_allclose(
+                            np.asarray(a, np.float32), np.asarray(b, np.float32),
+                            rtol=2e-4, atol=2e-5,
+                            err_msg=f"{topo.name}/{codec}/{path}/r{rounds}")
         print("CODEC-ENGINES-MATCH")
     """, devices=4)
     assert "CODEC-ENGINES-MATCH" in out
