@@ -1,0 +1,69 @@
+"""CI regression gate for the consensus hot path.
+
+Reads the TRACKED ``BENCH_consensus.json`` (committed at the repo root),
+runs a fresh ``combine_micro`` sweep into ``results/BENCH_consensus.json``
+(the committed baseline is never touched — re-baselining stays a deliberate,
+reviewed act), and FAILS (exit 1) when the fresh slab-vs-tree speedup
+regresses more than ``--threshold`` (default 25%) below the tracked value.
+The slab speedup is a *ratio* of interleaved medians on the same machine, so
+it is robust to absolute CI-runner speed; the wide threshold absorbs the
+remaining noise.
+
+Run:  PYTHONPATH=src python benchmarks/check_regression.py
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import combine_micro  # noqa: E402
+
+
+FRESH_JSON = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "results",
+    "BENCH_consensus.json",
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max fractional slab-speedup regression vs tracked")
+    ap.add_argument("--baseline", default=combine_micro.BENCH_JSON,
+                    help="tracked BENCH_consensus.json to gate against")
+    ap.add_argument("--out", default=FRESH_JSON,
+                    help="where to write the fresh run (CI artifact); the "
+                         "tracked baseline is never overwritten")
+    args = ap.parse_args(argv)
+
+    tracked = None
+    if os.path.exists(args.baseline):
+        with open(args.baseline) as f:
+            tracked = json.load(f).get("speedup_slab_vs_tree")
+
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    fresh_doc = combine_micro.write_bench_json(path=args.out)
+    fresh = fresh_doc["speedup_slab_vs_tree"]
+
+    if tracked is None:
+        print(f"no tracked baseline at {args.baseline}; "
+              f"wrote fresh speedup {fresh:.2f}x to {args.out} (gate skipped)")
+        return 0
+
+    floor = tracked * (1.0 - args.threshold)
+    status = "OK" if fresh >= floor else "REGRESSION"
+    print(f"slab-vs-tree speedup: tracked {tracked:.2f}x, fresh {fresh:.2f}x, "
+          f"floor {floor:.2f}x ({args.threshold:.0%} tolerance) -> {status}")
+    if fresh < floor:
+        print("consensus slab hot path regressed; investigate before merging "
+              "(or re-baseline BENCH_consensus.json if the change is intended)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -112,7 +112,9 @@ def save_train_state(directory: str, state) -> str:
 def restore_train_state(directory: str, step: int | None = None):
     """Returns ``(tree, step)`` with ``tree`` holding ``params``,
     ``opt_state``, ``step`` and ``comm`` (``()`` when the run was stateless —
-    empty subtrees contribute no npz entries)."""
+    empty subtrees contribute no npz entries, so both ``comm`` and a
+    stateless optimizer's ``opt_state`` restore as ``()``)."""
     tree, step = restore_checkpoint(directory, step)
     tree.setdefault("comm", ())
+    tree.setdefault("opt_state", ())
     return tree, step

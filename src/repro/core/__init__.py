@@ -23,11 +23,21 @@ from repro.core.diffusion import (
     classical_combine,
     metropolis_matrix,
 )
+from repro.core.dynamic import (
+    TopologySchedule,
+    StaticSchedule,
+    PeriodicSchedule,
+    RandomGossipSchedule,
+    ChurnSchedule,
+    one_peer_exponential,
+    make_schedule,
+)
 from repro.core.consensus import (
     gather_consensus_step,
     gather_consensus_rounds,
     PermuteConsensus,
     permutation_decomposition,
+    matching_decomposition,
     collective_bytes_per_step,
 )
 from repro.core.packing import (
@@ -61,8 +71,16 @@ __all__ = [
     "classical_mixing_matrices",
     "classical_combine",
     "metropolis_matrix",
+    "TopologySchedule",
+    "StaticSchedule",
+    "PeriodicSchedule",
+    "RandomGossipSchedule",
+    "ChurnSchedule",
+    "one_peer_exponential",
+    "make_schedule",
     "gather_consensus_step",
     "gather_consensus_rounds",
+    "matching_decomposition",
     "SlabLayout",
     "build_slab_layout",
     "cached_slab_layout",

@@ -116,6 +116,29 @@ def _template_sds(psi_K):
     )
 
 
+def _per_round(mat, rounds: int, name: str):
+    """Normalize a mixing structure to a per-round indexer.
+
+    ``mat`` may be a static ``(K, K)`` matrix (every round identical — the
+    indexer returns the SAME object so the static path stays bit-identical)
+    or a ``(rounds, K, K)`` stack from a
+    :class:`~repro.core.dynamic.TopologySchedule` (round ``r`` gets slice
+    ``mat[r]``).  ``None`` passes through (classical-only ``metropolis``).
+    """
+    if mat is None:
+        return lambda r: None
+    if mat.ndim == 2:
+        return lambda r: mat
+    if mat.ndim == 3:
+        if mat.shape[0] != rounds:
+            raise ValueError(
+                f"per-round {name} stack has {mat.shape[0]} rounds, "
+                f"round-set runs {rounds}"
+            )
+        return lambda r: mat[r]
+    raise ValueError(f"{name} must be (K, K) or (rounds, K, K), got {mat.shape}")
+
+
 # ---------------------------------------------------------------------------
 # global (gather/einsum) engine — per-leaf reference oracle
 # ---------------------------------------------------------------------------
@@ -290,8 +313,14 @@ def gather_consensus_rounds(
     DRT recomputes the mixing matrices each round (time varying); classical
     diffusion reuses the static ``metropolis`` matrix.  For EXACT exchanges
     (no codec / identity) the round loop runs entirely on the (L, K, K) Gram
-    matrices via the recurrence ``G' = A^T G A`` — two passes over the
+    matrices via the recurrence ``G' = A_t^T G A_t`` — two passes over the
     parameters total, independent of ``rounds``.
+
+    Dynamic graphs: ``C`` and ``metropolis`` may be per-round
+    ``(rounds, K, K)`` stacks (from
+    :meth:`repro.core.dynamic.TopologySchedule.mixing_stacks`) instead of a
+    single ``(K, K)`` matrix — round ``r`` then mixes over graph ``r`` of the
+    stack on every path, including the Gram recurrence.
 
     Returns ``(new_K, A_last, new_codec_state)``.  ``path="tree"`` (or a
     codec without a slab fast path) falls back to looping the per-leaf
@@ -307,6 +336,8 @@ def gather_consensus_rounds(
         path = "tree"
     if rounds <= 0:
         return psi_K, None, codec_state if codec_state is not None else ()
+    C_at = _per_round(C, rounds, "C")
+    metro_at = _per_round(metropolis, rounds, "metropolis")
 
     if path == "tree":
         A_last = None
@@ -314,13 +345,13 @@ def gather_consensus_rounds(
         for r in range(rounds):
             if wire_codec is None:
                 psi_K, A_last = gather_consensus_step(
-                    partition, psi_K, C, cfg,
-                    algorithm=algorithm, metropolis=metropolis,
+                    partition, psi_K, C_at(r), cfg,
+                    algorithm=algorithm, metropolis=metro_at(r),
                 )
             else:
                 psi_K, A_last, state = gather_consensus_step(
-                    partition, psi_K, C, cfg,
-                    algorithm=algorithm, metropolis=metropolis,
+                    partition, psi_K, C_at(r), cfg,
+                    algorithm=algorithm, metropolis=metro_at(r),
                     codec=wire_codec, codec_state=state,
                     rng=jax.random.fold_in(rng, r) if rng is not None else None,
                 )
@@ -348,24 +379,28 @@ def gather_consensus_rounds(
     if exact:
         # Exact exchange: the combine is linear, so the whole round-set runs
         # on the (L, K, K) Gram matrices — ONE Gram pass over the slab before
-        # the loop (psi' = A^T psi per layer implies G' = A^T G A), tiny
-        # (K, K) algebra per round, and ONE combine with the accumulated
-        # mixing product at the end.  Two passes over the D parameters total,
+        # the loop (psi' = A_t^T psi per layer implies G' = A_t^T G A_t, which
+        # holds per round for a CHANGING mixing matrix too), tiny (K, K)
+        # algebra per round, and ONE combine with the accumulated mixing
+        # product at the end.  Two passes over the D parameters total,
         # independent of the round count, vs two per round on the tree path.
         A_last = None
         M = None  # accumulated product A_1 @ ... @ A_r per layer
         if algorithm == "classical":
             A_last = jnp.broadcast_to(
-                metropolis, (partition.num_layers, *metropolis.shape)
+                metro_at(0), (partition.num_layers, K, K)
             )
             M = A_last
-            for _ in range(rounds - 1):
+            for r in range(1, rounds):
+                A_last = jnp.broadcast_to(
+                    metro_at(r), (partition.num_layers, K, K)
+                )
                 M = jnp.einsum("pij,pjk->pik", M, A_last)
         elif algorithm == "drt":
             G = layout.gram(regions)
-            for _ in range(rounds):
+            for r in range(rounds):
                 d2, n2 = packing.gram_sq_dists(G)
-                A_last = drt_mod.drt_mixing_matrices(d2, n2, C, cfg)
+                A_last = drt_mod.drt_mixing_matrices(d2, n2, C_at(r), cfg)
                 G = packing.gram_update(G, A_last)
                 M = A_last if M is None else jnp.einsum(
                     "pij,pjk->pik", M, A_last
@@ -399,7 +434,8 @@ def gather_consensus_rounds(
             )(regions, keys)
         decoded = packing.slab_decode(wire_codec, layout, wire)  # f32 regions
         A_last = _slab_mixing(
-            layout, decoded, C, cfg, algorithm, metropolis, partition.num_layers
+            layout, decoded, C_at(r), cfg, algorithm, metro_at(r),
+            partition.num_layers,
         )
         eye = jnp.eye(K, dtype=A_last.dtype)
         A_off = A_last * (1.0 - eye)[None]
@@ -469,6 +505,45 @@ def permutation_decomposition(topology: Topology) -> list[np.ndarray] | None:
     return None
 
 
+def matching_decomposition(topology: Topology) -> list[np.ndarray]:
+    """Decompose ANY graph's edge set into matchings via greedy proper edge
+    coloring (at most ``2*max_degree - 1`` rounds).
+
+    Each matching is returned as an involutive permutation; agents unmatched
+    in a round map to THEMSELVES (``perm[k] = k``) — the permute engine masks
+    the resulting self-receives out of the mixing weights, so irregular
+    graphs (chain endpoints, churn-realized topologies, single matchings)
+    become ppermute-able.  Every undirected edge lands in exactly one
+    matching, i.e. each agent receives each neighbour exactly once across the
+    rounds.
+    """
+    K = topology.num_agents
+    A = topology.adjacency
+    classes: list[list[tuple[int, int]]] = []
+    used: list[np.ndarray] = []  # per class: endpoint already matched?
+    for i in range(K):
+        for j in range(i + 1, K):
+            if not A[i, j]:
+                continue
+            for c in range(len(classes)):
+                if not used[c][i] and not used[c][j]:
+                    classes[c].append((i, j))
+                    used[c][i] = used[c][j] = True
+                    break
+            else:
+                classes.append([(i, j)])
+                u = np.zeros(K, dtype=bool)
+                u[i] = u[j] = True
+                used.append(u)
+    perms = []
+    for cls in classes:
+        p = np.arange(K)
+        for i, j in cls:
+            p[i], p[j] = j, i
+        perms.append(p)
+    return perms
+
+
 @dataclasses.dataclass(frozen=True)
 class PermuteConsensus:
     """Neighbour-exchange consensus engine for use inside ``shard_map``.
@@ -488,6 +563,17 @@ class PermuteConsensus:
     engine then returns ``(combined, new_codec_state)`` instead of just the
     tree.  ``exchange_dtype`` remains as the deprecated alias for the cast
     codec.
+
+    Dynamic graphs: with a ``schedule``
+    (:class:`~repro.core.dynamic.TopologySchedule`) the engine RE-DERIVES the
+    exchange decomposition per round from ``schedule.topology_at(start_round
+    + r)``.  Realized graphs without a structured decomposition (churned
+    rings, single matchings, chains) fall back to
+    :func:`matching_decomposition`; agents unmatched in an exchange round
+    "receive" themselves and are masked out of the mixing weights, so a
+    dropped agent keeps its own iterate exactly.  Because the decomposition
+    is host-side Python, ``start_round`` must be a concrete int — dynamic
+    schedules under a fully-jitted step belong on the gather engine.
     """
 
     partition: LayerPartition
@@ -503,31 +589,63 @@ class PermuteConsensus:
     codec: "WireCodec | str | None" = None
     path: ConsensusPath = "slab"
     use_kernels: bool = False
+    # optional repro.core.dynamic.TopologySchedule (duck-typed: needs
+    # .topology_at(t) and .num_agents); None keeps the static topology
+    schedule: object | None = None
 
-    def _perms(self) -> list[list[tuple[int, int]]]:
-        decomp = permutation_decomposition(self.topology)
+    def _round_topology(self, start_round: int, r: int) -> Topology:
+        if self.schedule is None:
+            return self.topology
+        return self.schedule.topology_at(start_round + r)
+
+    def _round_ctx(self, start_round: int, r: int, static_ctx):
+        """(topology, perms, inv_srcs, Cmat) for round ``r`` — the memoized
+        ``static_ctx`` when the engine has no schedule (the decomposition is
+        loop invariant there; re-deriving it per round would redo the
+        O(K^2) edge coloring and host->device constants every round of every
+        trace)."""
+        if static_ctx is not None:
+            return static_ctx
+        topo = self._round_topology(start_round, r)
+        perms, inv_srcs = self._round_perms(topo)
+        return topo, perms, inv_srcs, jnp.asarray(topo.c_matrix(), jnp.float32)
+
+    @staticmethod
+    def _round_perms(topo: Topology):
+        """Per-round exchange structure: ``(perms, inv_srcs)`` where perms
+        are ppermute (src, dst) pair lists and ``inv_srcs[e][k]`` is the
+        agent whose tree k receives in exchange ``e`` (``k`` itself for a
+        masked phantom pair)."""
+        decomp = permutation_decomposition(topo)
         if decomp is None:
-            raise ValueError(
-                f"topology {self.topology.name!r} has no permutation decomposition; "
-                "use the gather engine"
-            )
-        return [[(int(s), int(p[s])) for s in range(len(p))] for p in decomp]
+            decomp = matching_decomposition(topo)
+        perms = [[(int(s), int(p[s])) for s in range(len(p))] for p in decomp]
+        inv_srcs = []
+        for p in decomp:
+            inv = np.empty(len(p), np.int64)
+            inv[p] = np.arange(len(p))
+            inv_srcs.append(jnp.asarray(inv))
+        return perms, inv_srcs
 
-    def _mix_weights(self, d2, n2, cw, srcs, my):
+    def _mix_weights(self, topo: Topology, d2, n2, cw, srcs, my):
         """Local column of A from stacked neighbour stats.
 
         ``d2``/``n2``: (n_nbrs, L) per-neighbour per-layer stats; ``cw``:
-        (n_nbrs,) edge weights; ``srcs``: (n_nbrs,) source agent ids.
+        (n_nbrs,) edge weights — 0 marks a masked phantom pair (an agent
+        unmatched in that exchange round received its own tree), which gets
+        combine weight 0; ``srcs``: (n_nbrs,) source agent ids.
         Returns ``(w_self (L,), w_nbrs (n_nbrs, L))``.
         """
         n_nbrs, L = d2.shape
+        mask = cw > 0  # (n_nbrs,)
         if self.algorithm == "classical":
-            M = jnp.asarray(self.topology.metropolis(), jnp.float32)
-            w_nbrs = jnp.broadcast_to(M[srcs, my][:, None], (n_nbrs, L))
+            M = jnp.asarray(topo.metropolis(), jnp.float32)
+            w_nbrs = jnp.where(mask[:, None], M[srcs, my][:, None], 0.0)
+            w_nbrs = jnp.broadcast_to(w_nbrs, (n_nbrs, L))
             w_self = jnp.broadcast_to(M[my, my][None], (L,))
             return w_self, w_nbrs
         kappa = self.cfg.kappa
-        N = self.cfg.resolve_N(self.topology.num_agents)
+        N = self.cfg.resolve_N(topo.num_agents)
         log_prod = jnp.sum(jnp.log1p(d2 / (n2 + kappa)), axis=1, keepdims=True) + (
             L + 1
         ) * jnp.log(2.0)
@@ -535,13 +653,24 @@ class PermuteConsensus:
             log_denom = jnp.log(d2 + kappa)
         else:
             log_denom = jnp.log(n2 + kappa + d2)
-        log_a = log_prod - log_denom + jnp.log(cw)[:, None]  # (n_nbrs, L)
-        log_min = jnp.min(log_a, axis=0)  # smallest positive per layer
+        neg_inf = drt_mod._NEG_INF
+        log_a = (
+            log_prod - log_denom + jnp.log(jnp.where(mask, cw, 1.0))[:, None]
+        )  # (n_nbrs, L)
+        log_a = jnp.where(mask[:, None], log_a, neg_inf)
+        # smallest positive per layer — over REAL neighbours only
+        log_min = jnp.min(jnp.where(mask[:, None], log_a, -neg_inf), axis=0)
         log_a = jnp.minimum(log_a, jnp.log(N) + log_min)
-        Cmat = jnp.asarray(self.topology.c_matrix(), jnp.float32)
+        Cmat = jnp.asarray(topo.c_matrix(), jnp.float32)
         c_kk = Cmat[my, my]
-        log_self = jnp.log(c_kk / n_nbrs) + jax.nn.logsumexp(log_a, axis=0)
-        # normalize over {self} + neighbours per layer
+        n_eff = jnp.sum(mask)  # surviving neighbourhood size
+        log_self = jnp.where(
+            n_eff > 0,
+            jnp.log(c_kk / jnp.maximum(n_eff, 1))
+            + jax.nn.logsumexp(log_a, axis=0),
+            0.0,  # isolated agent: self weight 1, everything else masked
+        )
+        # normalize over {self} + surviving neighbours per layer
         log_all = jnp.concatenate([log_self[None], log_a], axis=0)
         m = jnp.max(log_all, axis=0, keepdims=True)
         ex = jnp.exp(log_all - m)
@@ -555,6 +684,7 @@ class PermuteConsensus:
         rng: jax.Array | None = None,
         *,
         rounds: int = 1,
+        start_round: int = 0,
     ):
         """psi_local: single-agent tree (leaves WITHOUT leading agent axis).
 
@@ -562,7 +692,24 @@ class PermuteConsensus:
         ``rounds`` consensus rounds (pack/encode once per round, exchange,
         combine) and returns the combined single-agent tree — or
         ``(combined, new_codec_state)`` when the engine has a codec.
+
+        With a ``schedule``, round ``r`` exchanges over
+        ``schedule.topology_at(start_round + r)``; ``start_round`` must be a
+        concrete Python int (the decomposition is re-derived on the host).
         """
+        if self.schedule is not None:
+            if not isinstance(start_round, (int, np.integer)):
+                raise TypeError(
+                    "PermuteConsensus re-derives its ppermute decomposition "
+                    "per round on the host; start_round must be a concrete "
+                    "Python int.  Dynamic schedules driven by a traced step "
+                    "need consensus_impl='gather'."
+                )
+            if self.schedule.num_agents != self.topology.num_agents:
+                raise ValueError(
+                    f"schedule K={self.schedule.num_agents} != topology "
+                    f"K={self.topology.num_agents}"
+                )
         wire_codec = _resolve_codec(self.codec, self.exchange_dtype)
         path = self.path
         if path == "slab" and not (
@@ -570,16 +717,20 @@ class PermuteConsensus:
             and packing.slab_template_supported(psi_local)
         ):
             path = "tree"
+        start_round = int(start_round) if self.schedule is not None else 0
         if path == "tree":
-            return self._call_tree(psi_local, codec_state, rng, rounds, wire_codec)
-        return self._call_slab(psi_local, codec_state, rng, rounds, wire_codec)
+            return self._call_tree(
+                psi_local, codec_state, rng, rounds, wire_codec, start_round
+            )
+        return self._call_slab(
+            psi_local, codec_state, rng, rounds, wire_codec, start_round
+        )
 
     # -- slab hot path -------------------------------------------------------
 
-    def _call_slab(self, psi_local, codec_state, rng, rounds, wire_codec):
+    def _call_slab(self, psi_local, codec_state, rng, rounds, wire_codec, start_round):
         part = self.partition
         ax = self.axis_name
-        perms = self._perms()
         my = jax.lax.axis_index(ax)
         has_codec = self.codec is not None
         if wire_codec is not None and isinstance(wire_codec, IdentityCodec):
@@ -601,14 +752,6 @@ class PermuteConsensus:
                 res = layout.pack_regions(codec_state)
         if wire_codec is not None:
             base_rng = _require_rng(wire_codec, rng)
-
-        Cmat = jnp.asarray(self.topology.c_matrix(), jnp.float32)
-        inv_srcs = []
-        for perm in perms:
-            inv = np.empty(len(perm), np.int64)
-            for s, d in perm:
-                inv[d] = s
-            inv_srcs.append(jnp.asarray(inv))
 
         def _norms(regs):
             n = layout.layer_sq_norms(regs)
@@ -633,7 +776,10 @@ class PermuteConsensus:
             diff = jax.tree.map(jnp.subtract, self_hat, recv)
             return _norms(diff), _norms(recv)
 
+        static = self.schedule is None or getattr(self.schedule, "static", False)
+        static_ctx = self._round_ctx(start_round, 0, None) if static else None
         for r in range(rounds):
+            topo, perms, inv_srcs, Cmat = self._round_ctx(start_round, r, static_ctx)
             if wire_codec is not None:
                 key = jax.random.fold_in(jax.random.fold_in(base_rng, r), my)
                 wire, res = packing.slab_encode(wire_codec, layout, regions, res, key)
@@ -645,6 +791,10 @@ class PermuteConsensus:
             else:
                 wire = regions
                 self_hat = regions
+            if not perms:
+                # fully-churned round (no edges anywhere): every agent keeps
+                # its iterate; a stateful codec's residual still advanced
+                continue
 
             recvs, d2s, n2s, cws, srcs = [], [], [], [], []
             for perm, inv in zip(perms, inv_srcs):
@@ -664,11 +814,14 @@ class PermuteConsensus:
                 recvs.append(recv)
                 d2s.append(d2)
                 n2s.append(n2)
-                cws.append(Cmat[src, my])
+                # cw = 0 marks a phantom pair: an agent left unmatched by a
+                # matching round receives its own tree and must not weight it
+                cws.append(jnp.where(src != my, Cmat[src, my], 0.0))
                 srcs.append(src)
 
             w_self, w_nbrs = self._mix_weights(
-                jnp.stack(d2s), jnp.stack(n2s), jnp.stack(cws), jnp.stack(srcs), my
+                topo, jnp.stack(d2s), jnp.stack(n2s), jnp.stack(cws),
+                jnp.stack(srcs), my,
             )
             w_all = jnp.concatenate([w_self[None], w_nbrs], axis=0)  # (1+n, L)
             if self.use_kernels:
@@ -712,10 +865,9 @@ class PermuteConsensus:
 
     # -- per-leaf reference oracle -------------------------------------------
 
-    def _call_tree(self, psi_local, codec_state, rng, rounds, wire_codec):
+    def _call_tree(self, psi_local, codec_state, rng, rounds, wire_codec, start_round):
         part = self.partition
         ax = self.axis_name
-        perms = self._perms()
         my = jax.lax.axis_index(ax)
         has_codec = self.codec is not None
         if wire_codec is not None and isinstance(wire_codec, IdentityCodec):
@@ -730,8 +882,10 @@ class PermuteConsensus:
             return n
 
         new_state = codec_state
-        Cmat = jnp.asarray(self.topology.c_matrix(), jnp.float32)
+        static = self.schedule is None or getattr(self.schedule, "static", False)
+        static_ctx = self._round_ctx(start_round, 0, None) if static else None
         for r in range(rounds):
+            topo, perms, inv_srcs, Cmat = self._round_ctx(start_round, r, static_ctx)
             if wire_codec is not None:
                 if wire_codec.stateful and (new_state is None or new_state == ()):
                     new_state = wire_codec.init_state(psi_local)
@@ -746,10 +900,12 @@ class PermuteConsensus:
             else:
                 wire = psi_local
                 psi_self_hat = psi_local
+            if not perms:
+                continue  # fully-churned round: keep the iterate
 
             # --- exchange: collect neighbour trees + their per-layer stats --
             recvs, d2s, n2s, cws, srcs = [], [], [], [], []
-            for perm in perms:
+            for perm, inv in zip(perms, inv_srcs):
                 recv_wire = jax.tree.map(lambda x: jax.lax.ppermute(x, ax, perm), wire)
                 if wire_codec is not None:
                     recv_wire = jax.lax.optimization_barrier(recv_wire)
@@ -762,18 +918,16 @@ class PermuteConsensus:
                     recv,
                 )
                 # which agent did we receive from? inverse permutation at `my`
-                inv = np.empty(len(perm), np.int64)
-                for s, d in perm:
-                    inv[d] = s
-                src = jnp.asarray(inv)[my]
+                src = inv[my]
                 recvs.append(recv)
                 d2s.append(_norms(diff))
                 n2s.append(_norms(recv))
-                cws.append(Cmat[src, my])
+                cws.append(jnp.where(src != my, Cmat[src, my], 0.0))
                 srcs.append(src)
 
             w_self, w_nbrs = self._mix_weights(
-                jnp.stack(d2s), jnp.stack(n2s), jnp.stack(cws), jnp.stack(srcs), my
+                topo, jnp.stack(d2s), jnp.stack(n2s), jnp.stack(cws),
+                jnp.stack(srcs), my,
             )
 
             # --- combine ----------------------------------------------------

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.comm import WireCodec, init_comm_state, make_codec
 from repro.core.consensus import Algorithm, ConsensusPath, gather_consensus_rounds
 from repro.core.drt import DRTConfig
+from repro.core.dynamic import make_schedule
 from repro.core.packing import SlabLayout, build_slab_layout, slab_template_supported
 from repro.core.topology import Topology
 from repro.optim.optimizers import Optimizer
@@ -57,6 +58,12 @@ class TrainerConfig:
     # run the slab combine/stats through the Pallas kernels (interpret mode
     # on CPU, real kernels on TPU)
     use_kernels: bool = False
+    # time-varying communication graph: a repro.core.dynamic.TopologySchedule
+    # (or a spec string resolved against the trainer's K, e.g.
+    # "periodic:ring,hypercube" or "gossip:0.3").  None keeps the static
+    # topology — bit-identical to pre-schedule behavior.  Consensus round t
+    # of step s mixes over graph ``s * consensus_steps + t``.
+    schedule: object | None = None
 
 
 class DecentralizedTrainer:
@@ -81,8 +88,17 @@ class DecentralizedTrainer:
         self.codec: WireCodec | None = (
             make_codec(cfg.codec) if cfg.codec is not None else None
         )
-        self._C = jnp.asarray(topology.c_matrix(), jnp.float32)
-        self._metropolis = jnp.asarray(topology.metropolis(), jnp.float32)
+        self.schedule = (
+            make_schedule(cfg.schedule, self.K) if cfg.schedule is not None else None
+        )
+        mix_topo = topology
+        if self.schedule is not None and self.schedule.static:
+            # a static schedule IS a static topology: take the schedule-free
+            # fast path (bit-identical) on the schedule's graph
+            mix_topo = self.schedule.topology_at(0)
+            self.schedule = None
+        self._C = jnp.asarray(mix_topo.c_matrix(), jnp.float32)
+        self._metropolis = jnp.asarray(mix_topo.metropolis(), jnp.float32)
         self._partition: LayerPartition | None = None
         self._layout: SlabLayout | None = None
 
@@ -154,17 +170,26 @@ class DecentralizedTrainer:
         On the default ``consensus_path="slab"`` the agent-stacked tree is
         packed once, all rounds run on the flat (K, D) slab, and the tree is
         unpacked once at the end (see :mod:`repro.core.packing`).
+
+        With a dynamic ``cfg.schedule`` round ``t`` of this round-set mixes
+        over graph ``state.step * consensus_steps + t`` — a deterministic
+        function of the step, so checkpoint resume replays the sequence.
         """
         if self.codec is not None and rng is None:
             rng = jax.random.fold_in(jax.random.key(0), state.step)
+        C, metropolis = self._C, self._metropolis
+        if self.schedule is not None:
+            C, metropolis = self.schedule.mixing_stacks(
+                state.step * self.cfg.consensus_steps, self.cfg.consensus_steps
+            )
         params, A_last, comm = gather_consensus_rounds(
             self.partition,
             state.params,
-            self._C,
+            C,
             self.cfg.drt,
             rounds=self.cfg.consensus_steps,
             algorithm=self.cfg.algorithm,
-            metropolis=self._metropolis,
+            metropolis=metropolis,
             codec=self.codec,
             codec_state=state.comm,
             rng=rng,

@@ -1,0 +1,385 @@
+"""Time-varying topologies: mixing-structure schedules for dynamic graphs.
+
+The paper's experiments (and the static :class:`~repro.core.topology.Topology`
+plumbing) fix one communication graph for the whole run.  Real decentralized
+deployments are time varying — gossip schedules, stragglers, agents joining
+and leaving — and consensus distance under *changing* graphs is what governs
+convergence (Kong et al., Consensus Control for Decentralized Deep Learning;
+Balu et al., Momentum-Accelerated Consensus).  A
+:class:`TopologySchedule` maps a global consensus-round index ``t`` to the
+round's mixing structure and realizes whole round-sets as stacked per-round
+``(C_t, metropolis_t)`` arrays that both consensus engines consume.
+
+Two views of every schedule, guaranteed consistent:
+
+* ``mixing_stacks(start_round, rounds)`` — the *traced* view: pure jax, so
+  ``start_round`` may be a traced scalar (jitted train steps index schedules
+  with ``state.step``).  Feeds ``gather_consensus_rounds`` (slab Gram
+  recurrence ``G' = A_t^T G A_t`` included) as ``(rounds, K, K)`` stacks.
+* ``topology_at(t)`` — the *host* view for a concrete Python round index:
+  a realized :class:`Topology` whose adjacency matches round ``t`` of the
+  traced view bit for bit.  Feeds ``PermuteConsensus`` (which re-derives its
+  per-round ppermute decomposition from it), property tests and benchmarks.
+
+Churn semantics (``ChurnSchedule``): a dropped agent loses every incident
+edge for that round but RETAINS its self loop — it keeps its own iterate
+exactly (Metropolis column becomes ``e_k``; the DRT support ``C_t`` shrinks
+to ``c_kk`` and the DRT normalization renormalizes the surviving
+neighbourhood automatically).  Dropped edges are removed symmetrically.
+
+Schedules are stateless: everything is a deterministic function of
+``(seed, t)``, so checkpoint resume (which restores only ``step``) replays
+the exact graph sequence.  The randomized schedules (gossip, churn) realize
+a seeded ``cycle`` of draws in numpy at construction and repeat it with
+period ``cycle`` — that keeps the host and traced views bit-identical (the
+traced view is a table lookup at ``t % cycle``) without host callbacks from
+inside traces; raise ``cycle`` for longer unique sequences.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.topology import Topology, make_topology
+
+
+def c_from_adjacency(adj: jax.Array) -> jax.Array:
+    """The paper's support matrix C from a (…, K, K) 0/1 adjacency: edges
+    plus the always-retained self loops."""
+    adj = jnp.asarray(adj, jnp.float32)
+    K = adj.shape[-1]
+    eye = jnp.eye(K, dtype=adj.dtype)
+    return jnp.where(eye > 0, 1.0, adj)
+
+
+def metropolis_from_adjacency(adj: jax.Array) -> jax.Array:
+    """Metropolis-Hastings weights (eq. 5) from a (…, K, K) 0/1 adjacency,
+    traced-compatible.  Doubly stochastic for every realization; an isolated
+    agent (churn) gets the identity column — it keeps its own iterate."""
+    adj = jnp.asarray(adj, jnp.float32)
+    deg = jnp.sum(adj, axis=-1) + 1.0  # n_k includes the self loop
+    n_max = jnp.maximum(deg[..., :, None], deg[..., None, :])
+    A = adj / n_max
+    K = adj.shape[-1]
+    eye = jnp.eye(K, dtype=adj.dtype)
+    diag = 1.0 - jnp.sum(A, axis=-2)  # column sums (symmetric anyway)
+    return A + eye * diag[..., None, :]
+
+
+def _stacks_from_adjacency(adj_stack: jax.Array) -> tuple[jax.Array, jax.Array]:
+    return c_from_adjacency(adj_stack), metropolis_from_adjacency(adj_stack)
+
+
+class TopologySchedule:
+    """Base class: a deterministic map from round index to communication graph.
+
+    Subclasses implement :meth:`adjacency_at`; the default
+    :meth:`mixing_stacks` / :meth:`topology_at` derive both views from it.
+    """
+
+    #: True when every round realizes the same graph (the engines keep their
+    #: static fast paths; ``make_train_step`` allows the permute engine).
+    static: bool = False
+
+    @property
+    def num_agents(self) -> int:
+        raise NotImplementedError
+
+    def adjacency_at(self, t) -> jax.Array:
+        """(K, K) float 0/1 adjacency of round ``t`` (``t`` may be traced)."""
+        raise NotImplementedError
+
+    def mixing_stacks(self, start_round, rounds: int) -> tuple[jax.Array, jax.Array]:
+        """Per-round mixing structures for one round-set.
+
+        Returns ``(C_stack, metropolis_stack)``, both ``(rounds, K, K)``
+        float32; ``start_round`` may be a traced scalar (e.g.
+        ``state.step * consensus_steps``).
+        """
+        ts = jnp.asarray(start_round) + jnp.arange(rounds)
+        adj = jax.vmap(self.adjacency_at)(ts)
+        return _stacks_from_adjacency(adj)
+
+    def topology_at(self, t: int) -> Topology:
+        """Concrete host-side realization of round ``t`` (Python int).
+
+        Must be pure host Python/numpy: the permute engine calls it while
+        tracing a ``shard_map`` body, where any jax op — even on constants —
+        is lifted into the trace.  The built-ins realize from numpy tables;
+        subclasses with a jax-level ``adjacency_at`` must override this with
+        a matching host computation.
+        """
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticSchedule(TopologySchedule):
+    """Today's behavior as a schedule: the same graph every round.
+
+    ``mixing_stacks`` broadcasts the topology's own (float64-derived)
+    ``c_matrix``/``metropolis`` so a static schedule is bit-identical to the
+    schedule-free path."""
+
+    topology: Topology
+    static: bool = dataclasses.field(default=True, init=False)
+
+    @property
+    def num_agents(self) -> int:
+        return self.topology.num_agents
+
+    def adjacency_at(self, t) -> jax.Array:
+        del t
+        return jnp.asarray(self.topology.adjacency, jnp.float32)
+
+    def mixing_stacks(self, start_round, rounds: int):
+        C = jnp.asarray(self.topology.c_matrix(), jnp.float32)
+        M = jnp.asarray(self.topology.metropolis(), jnp.float32)
+        K = self.topology.num_agents
+        return (
+            jnp.broadcast_to(C, (rounds, K, K)),
+            jnp.broadcast_to(M, (rounds, K, K)),
+        )
+
+    def topology_at(self, t: int) -> Topology:
+        del t
+        return self.topology
+
+
+@dataclasses.dataclass(frozen=True)
+class PeriodicSchedule(TopologySchedule):
+    """Cycle through a topology list: round ``t`` uses
+    ``topologies[(t // rounds_per_topology) % len(topologies)]``.
+
+    Mixing matrices are precomputed on the host per phase (full float64
+    Metropolis, like the static path) and gathered by traced round index."""
+
+    topologies: tuple[Topology, ...]
+    rounds_per_topology: int = 1
+
+    def __post_init__(self):
+        if not self.topologies:
+            raise ValueError("PeriodicSchedule needs at least one topology")
+        object.__setattr__(self, "topologies", tuple(self.topologies))
+        Ks = {t.num_agents for t in self.topologies}
+        if len(Ks) != 1:
+            raise ValueError(f"topologies disagree on K: {sorted(Ks)}")
+        if self.rounds_per_topology < 1:
+            raise ValueError("rounds_per_topology must be >= 1")
+
+    @property
+    def num_agents(self) -> int:
+        return self.topologies[0].num_agents
+
+    def _phase(self, t):
+        return (t // self.rounds_per_topology) % len(self.topologies)
+
+    def adjacency_at(self, t) -> jax.Array:
+        table = jnp.stack(
+            [jnp.asarray(tp.adjacency, jnp.float32) for tp in self.topologies]
+        )
+        return table[self._phase(jnp.asarray(t))]
+
+    def mixing_stacks(self, start_round, rounds: int):
+        C_table = jnp.stack(
+            [jnp.asarray(tp.c_matrix(), jnp.float32) for tp in self.topologies]
+        )
+        M_table = jnp.stack(
+            [jnp.asarray(tp.metropolis(), jnp.float32) for tp in self.topologies]
+        )
+        phases = self._phase(jnp.asarray(start_round) + jnp.arange(rounds))
+        return C_table[phases], M_table[phases]
+
+    def topology_at(self, t: int) -> Topology:
+        return self.topologies[int(self._phase(int(t)))]
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomGossipSchedule(TopologySchedule):
+    """Seeded random gossip: round ``t`` is an independent Erdos-Renyi
+    ``G(K, p)`` draw (deterministic per ``(seed, t % cycle)``).  Single
+    rounds may be disconnected — connectivity only needs to hold jointly over
+    time (Assumption 1 in expectation), which is the regime consensus-control
+    papers study."""
+
+    K: int
+    p: float = 0.5
+    seed: int = 0
+    cycle: int = 64  # draws repeat after this many rounds (see module doc)
+
+    def __post_init__(self):
+        if self.K < 2:
+            raise ValueError(f"gossip needs K >= 2, got {self.K}")
+        if not 0.0 < self.p <= 1.0:
+            raise ValueError(f"gossip edge probability must be in (0, 1], got {self.p}")
+        if self.cycle < 1:
+            raise ValueError(f"cycle must be >= 1, got {self.cycle}")
+
+    @property
+    def num_agents(self) -> int:
+        return self.K
+
+    @functools.cached_property
+    def _table(self) -> np.ndarray:
+        """(cycle, K, K) bool: the realized graph sequence (host canonical)."""
+        out = np.zeros((self.cycle, self.K, self.K), dtype=bool)
+        for t in range(self.cycle):
+            rng = np.random.default_rng(
+                np.random.SeedSequence(entropy=self.seed, spawn_key=(t,))
+            )
+            upper = np.triu(rng.random((self.K, self.K)) < self.p, k=1)
+            out[t] = upper | upper.T
+        return out
+
+    def adjacency_at(self, t) -> jax.Array:
+        table = jnp.asarray(self._table, jnp.float32)
+        return table[jnp.asarray(t) % self.cycle]
+
+    def topology_at(self, t: int) -> Topology:
+        return Topology(f"gossip@{int(t)}", self._table[int(t) % self.cycle])
+
+
+def one_peer_exponential(K: int) -> PeriodicSchedule:
+    """One-peer exponential graphs (Assran et al., SGP): round ``t`` pairs
+    agent ``i`` with ``i XOR 2^(t mod log2 K)`` — perfect matchings cycling
+    through the hypercube dimensions.  Each round every agent talks to exactly
+    ONE peer; the union over ``log2 K`` rounds is the full hypercube."""
+    d = K.bit_length() - 1
+    if K < 2 or (1 << d) != K:
+        raise ValueError(f"one-peer exponential needs K a power of two, got {K}")
+    topos = []
+    for b in range(d):
+        A = np.zeros((K, K), dtype=bool)
+        for i in range(K):
+            A[i, i ^ (1 << b)] = True
+        topos.append(Topology(f"onepeer2^{b}", A))
+    return PeriodicSchedule(tuple(topos))
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnSchedule(TopologySchedule):
+    """Per-round agent/edge failure injector wrapping a base schedule.
+
+    Each round, every agent independently drops with probability
+    ``agent_drop`` (losing ALL incident edges — but keeping its self loop, so
+    it carries its iterate unchanged through the round) and every surviving
+    edge independently drops with probability ``edge_drop`` (symmetrically).
+    Deterministic per ``(seed, t % cycle)``."""
+
+    base: TopologySchedule
+    agent_drop: float = 0.0
+    edge_drop: float = 0.0
+    seed: int = 0
+    cycle: int = 64  # failure draws repeat after this many rounds
+
+    def __post_init__(self):
+        for name in ("agent_drop", "edge_drop"):
+            v = getattr(self, name)
+            if not 0.0 <= v < 1.0:
+                raise ValueError(f"{name} must be in [0, 1), got {v}")
+        if self.cycle < 1:
+            raise ValueError(f"cycle must be >= 1, got {self.cycle}")
+
+    @property
+    def num_agents(self) -> int:
+        return self.base.num_agents
+
+    @functools.cached_property
+    def _mask_table(self) -> np.ndarray:
+        """(cycle, K, K) bool edge-survival masks (host canonical): the
+        agent-drop outer product AND the symmetric edge-drop keep mask."""
+        K = self.base.num_agents
+        out = np.zeros((self.cycle, K, K), dtype=bool)
+        for t in range(self.cycle):
+            # spawn_key tagged (1, t): distinct stream from RandomGossip's
+            # (t,), so churn failures stay independent of the base graph's
+            # draws even when both share one user-facing seed
+            rng = np.random.default_rng(
+                np.random.SeedSequence(entropy=self.seed, spawn_key=(1, t))
+            )
+            alive = rng.random(K) >= self.agent_drop
+            keep_u = np.triu(rng.random((K, K)) >= self.edge_drop, k=1)
+            out[t] = (keep_u | keep_u.T) & alive[:, None] & alive[None, :]
+        return out
+
+    def adjacency_at(self, t) -> jax.Array:
+        adj = self.base.adjacency_at(t)
+        mask = jnp.asarray(self._mask_table, jnp.float32)
+        return adj * mask[jnp.asarray(t) % self.cycle]
+
+    def topology_at(self, t: int) -> Topology:
+        base_adj = self.base.topology_at(int(t)).adjacency
+        adj = base_adj & self._mask_table[int(t) % self.cycle]
+        return Topology(f"churn({self.base.topology_at(int(t)).name})@{int(t)}", adj)
+
+
+# ---------------------------------------------------------------------------
+# spec parser (CLI / TrainerConfig convenience)
+# ---------------------------------------------------------------------------
+
+
+def make_schedule(
+    spec: "str | TopologySchedule | Topology | None",
+    K: int,
+    *,
+    agent_drop: float = 0.0,
+    edge_drop: float = 0.0,
+    seed: int = 0,
+) -> "TopologySchedule | None":
+    """Build a schedule from a spec string (the ``launch.train`` CLI surface).
+
+    Specs::
+
+        <topology-name>                 static graph (e.g. "ring")
+        static:<topology-name>          same, explicit
+        periodic:<a>,<b>[,...][@n]     cycle the named topologies, n rounds
+                                        per topology (default 1)
+        gossip[:p]                      per-round Erdos-Renyi G(K, p) draw
+        onepeer                         one-peer exponential matchings
+
+    ``agent_drop``/``edge_drop`` > 0 wrap the result in a
+    :class:`ChurnSchedule`.  ``None`` stays ``None`` unless churn is
+    requested (then the caller must name a base graph).  A ``Topology`` or
+    ``TopologySchedule`` passes through (churn-wrapped if requested).
+    """
+    sched: TopologySchedule | None
+    if spec is None:
+        sched = None
+    elif isinstance(spec, TopologySchedule):
+        sched = spec
+    elif isinstance(spec, Topology):
+        sched = StaticSchedule(spec)
+    elif isinstance(spec, str):
+        head, _, rest = spec.partition(":")
+        if head == "static":
+            sched = StaticSchedule(make_topology(rest, K))
+        elif head == "periodic":
+            names, _, rpt = rest.partition("@")
+            topos = tuple(make_topology(n.strip(), K) for n in names.split(",") if n.strip())
+            sched = PeriodicSchedule(topos, rounds_per_topology=int(rpt) if rpt else 1)
+        elif head == "gossip":
+            sched = RandomGossipSchedule(K, p=float(rest) if rest else 0.5, seed=seed)
+        elif head == "onepeer":
+            sched = one_peer_exponential(K)
+        else:
+            try:
+                sched = StaticSchedule(make_topology(spec, K))
+            except KeyError:
+                raise ValueError(
+                    f"unknown schedule spec {spec!r}; expected a topology name, "
+                    "'static:<name>', 'periodic:<a>,<b>[@n]', 'gossip[:p]' or "
+                    "'onepeer'"
+                ) from None
+    else:
+        raise TypeError(f"cannot build a schedule from {type(spec).__name__}")
+
+    if agent_drop or edge_drop:
+        if sched is None:
+            raise ValueError("churn (agent/edge drop) needs a base schedule or topology")
+        sched = ChurnSchedule(sched, agent_drop=agent_drop, edge_drop=edge_drop, seed=seed)
+    if sched is not None and sched.num_agents != K:
+        raise ValueError(f"schedule has K={sched.num_agents}, expected {K}")
+    return sched

@@ -130,7 +130,7 @@ def star(K: int) -> Topology:
 def hypercube(K: int) -> Topology:
     d = int(np.log2(K))
     if 2**d != K:
-        raise ValueError(f"hypercube needs K = 2^d, got {K}")
+        raise ValueError(f"hypercube needs K a power of two (K = 2^d), got K={K}")
     A = np.zeros((K, K), dtype=bool)
     for k in range(K):
         for bit in range(d):
@@ -142,7 +142,7 @@ def hypercube(K: int) -> Topology:
 def torus2d(K: int) -> Topology:
     s = int(round(np.sqrt(K)))
     if s * s != K:
-        raise ValueError(f"torus2d needs a square K, got {K}")
+        raise ValueError(f"torus2d needs K a perfect square (K = s^2), got K={K}")
     A = np.zeros((K, K), dtype=bool)
 
     def idx(r, c):
@@ -192,6 +192,30 @@ _BUILDERS = {
 
 
 def make_topology(name: str, K: int, **kwargs) -> Topology:
+    """Build a named topology over ``K`` agents.
+
+    Validates the factory surface up front: the name must be registered,
+    ``K`` must be an int with at least 2 agents, and every kwarg must be
+    accepted by the builder — an unknown kwarg is a TypeError naming the
+    valid ones, never silently dropped.  Builder-specific ``K`` constraints
+    (hypercube: power of two; torus2d: perfect square) are enforced by the
+    builders themselves with equally clear errors.
+    """
     if name not in _BUILDERS:
         raise KeyError(f"unknown topology {name!r}; have {sorted(_BUILDERS)}")
-    return _BUILDERS[name](K, **kwargs)
+    if isinstance(K, bool) or not isinstance(K, (int, np.integer)):
+        raise TypeError(f"K must be an int, got {type(K).__name__}")
+    if K < 2:
+        raise ValueError(f"topology {name!r} needs K >= 2 agents, got K={K}")
+    builder = _BUILDERS[name]
+    import inspect
+
+    params = inspect.signature(builder).parameters
+    valid = [p for p in params if p != "K"]
+    unknown = sorted(set(kwargs) - set(valid))
+    if unknown:
+        raise TypeError(
+            f"topology {name!r} got unknown kwargs {unknown}; valid kwargs: "
+            f"{valid or 'none'}"
+        )
+    return builder(K, **kwargs)

@@ -1,5 +1,10 @@
 from repro.data.synthetic import SyntheticTokenStream, TokenStreamConfig
 from repro.data.cifar_like import CifarLike, CifarLikeConfig, agent_minibatches
+from repro.data.partition import (
+    dirichlet_partition,
+    dirichlet_shards,
+    label_distribution,
+)
 
 __all__ = [
     "SyntheticTokenStream",
@@ -7,4 +12,7 @@ __all__ = [
     "CifarLike",
     "CifarLikeConfig",
     "agent_minibatches",
+    "dirichlet_partition",
+    "dirichlet_shards",
+    "label_distribution",
 ]

@@ -73,6 +73,28 @@ class CifarLike:
             shards.append(self.sample(n, rng, classes=classes))
         return shards
 
+    # -- Dirichlet label-skew partition (Hsu et al.) -------------------------
+
+    def dirichlet_partition(
+        self,
+        num_agents: int = 16,
+        alpha: float = 0.3,
+        samples_per_agent: int = 256,
+        seed: int = 0,
+    ):
+        """Per-agent shards with Dirichlet(alpha) label skew: sample a shared
+        pool, then split it with :func:`repro.data.partition.dirichlet_partition`
+        (alpha -> 0 = near-disjoint labels, alpha -> inf = IID).  Same output
+        format as :meth:`paper_partition`."""
+        from repro.data.partition import dirichlet_shards
+
+        rng = np.random.default_rng(seed)
+        x, y = self.sample(num_agents * samples_per_agent, rng)
+        return dirichlet_shards(
+            x, y, num_agents, alpha=alpha, seed=seed,
+            min_per_agent=max(1, samples_per_agent // 4),
+        )
+
     def test_set(self, n: int = 2000, seed: int = 10_000):
         rng = np.random.default_rng(seed)
         return self.sample(n, rng)

@@ -22,6 +22,7 @@ from repro.comm import WireCodec, init_comm_state, make_codec
 from repro.core import consensus as _consensus
 from repro.core.consensus import gather_consensus_rounds
 from repro.core.decentralized import TrainerConfig
+from repro.core.dynamic import make_schedule
 from repro.core.packing import (
     build_slab_layout,
     slab_codec_supported,
@@ -106,12 +107,29 @@ def make_train_step(
     it, and unpack once — see :mod:`repro.core.packing`;
     ``tcfg.use_kernels=True`` routes the slab inner loops through the Pallas
     kernels.
+
+    ``tcfg.schedule`` (a :class:`repro.core.dynamic.TopologySchedule` or spec
+    string) makes the communication graph time varying: consensus round ``r``
+    of step ``s`` mixes over graph ``s * consensus_rounds + r``.  The gather
+    engine realizes the schedule as traced per-round ``(C_t, metropolis_t)``
+    stacks indexed by ``state.step``; the permute engine re-derives its
+    ppermute decomposition on the HOST and therefore cannot follow a dynamic
+    schedule from inside a jitted step — pass ``consensus_impl="gather"``
+    (static schedules are folded into the topology and remain fine).
     """
     cfg = bundle.cfg
     K = cfg.num_agents
     if topology.num_agents != K:
         raise ValueError(f"topology K={topology.num_agents} != cfg K={K}")
     partition = build_partition(bundle)
+    schedule = (
+        make_schedule(tcfg.schedule, K) if tcfg.schedule is not None else None
+    )
+    if schedule is not None and schedule.static:
+        # a static schedule IS a static topology: fold it in and take the
+        # schedule-free (bit-identical) path on the schedule's graph
+        topology = schedule.topology_at(0)
+        schedule = None
     C = jnp.asarray(topology.c_matrix(), jnp.float32)
     metro = jnp.asarray(topology.metropolis(), jnp.float32)
     if codec is None:
@@ -121,6 +139,14 @@ def make_train_step(
         raise ValueError("pass either codec or (deprecated) exchange_dtype, not both")
 
     if consensus_impl == "permute":
+        if schedule is not None:
+            raise ValueError(
+                "the permute engine re-derives its ppermute decomposition on "
+                "the host and cannot follow a dynamic schedule from a jitted "
+                "step; use consensus_impl='gather' (or drive "
+                "PermuteConsensus(schedule=...) with a concrete start_round "
+                "outside jit)"
+            )
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
 
@@ -151,7 +177,7 @@ def make_train_step(
         if wire_codec is None:
 
             # pack once, run ALL rounds on the slab inside one shard_map call
-            def consensus(params, comm, ckey):
+            def consensus(params, comm, ckey, step):
                 def body(local):
                     sq = jax.tree.map(lambda x: x[0], local)
                     out = engine(sq, rounds=consensus_rounds)
@@ -165,7 +191,7 @@ def make_train_step(
 
         else:
 
-            def consensus(params, comm, ckey):
+            def consensus(params, comm, ckey, step):
                 def body(local, lcomm, k):
                     sq = jax.tree.map(lambda x: x[0], local)
                     sc = jax.tree.map(lambda x: x[0], lcomm)
@@ -203,15 +229,22 @@ def make_train_step(
         ):
             layout = build_slab_layout(partition, p1_template)
 
-        def consensus(params, comm, ckey):
+        def consensus(params, comm, ckey, step):
+            if schedule is None:
+                C_t, metro_t = C, metro
+            else:
+                # per-round graph stacks, traced off the step counter
+                C_t, metro_t = schedule.mixing_stacks(
+                    step * consensus_rounds, consensus_rounds
+                )
             new, _, new_comm = gather_consensus_rounds(
                 partition,
                 params,
-                C,
+                C_t,
                 tcfg.drt,
                 rounds=consensus_rounds,
                 algorithm=tcfg.algorithm,
-                metropolis=metro,
+                metropolis=metro_t,
                 codec=effective_codec,
                 codec_state=comm,
                 rng=ckey,
@@ -243,7 +276,7 @@ def make_train_step(
             # not passed): initialize the residual here, matching the gather
             # engine's auto-init, instead of tripping a shard_map spec mismatch
             comm = init_comm_state(wire_codec, params)
-        params, comm = consensus(params, comm, ckey)
+        params, comm = consensus(params, comm, ckey, state.step)
         return (
             TrainState(params, opt_state, state.step + 1, comm),
             {"loss": jnp.mean(losses)},
@@ -277,13 +310,39 @@ def main(argv=None) -> None:
         help="wire codec for the consensus exchange: identity|bf16|f16|int8|"
              "topk[:frac] (default: exact f32 exchange)",
     )
+    ap.add_argument(
+        "--schedule", default=None,
+        help="time-varying communication graph: a topology name, "
+             "'periodic:<a>,<b>[@n]', 'gossip[:p]' or 'onepeer' "
+             "(default: the static --topology graph)",
+    )
+    ap.add_argument(
+        "--agent-dropout", type=float, default=0.0,
+        help="per-round probability an agent drops all its edges (it keeps "
+             "its own iterate); wraps the schedule in a churn injector",
+    )
+    ap.add_argument(
+        "--edge-dropout", type=float, default=0.0,
+        help="per-round probability each surviving edge drops (symmetric)",
+    )
+    ap.add_argument("--schedule-seed", type=int, default=0,
+                    help="seed for gossip draws and churn failures")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args(argv)
 
     bundle = get_bundle(args.arch, num_agents=args.agents)
     topo = make_topology(args.topology, args.agents)
     opt = momentum(args.lr, 0.9)
-    tcfg = TrainerConfig(algorithm=args.algorithm, codec=args.codec)
+    schedule = make_schedule(
+        args.schedule
+        if args.schedule is not None
+        else (args.topology if (args.agent_dropout or args.edge_dropout) else None),
+        args.agents,
+        agent_drop=args.agent_dropout,
+        edge_drop=args.edge_dropout,
+        seed=args.schedule_seed,
+    )
+    tcfg = TrainerConfig(algorithm=args.algorithm, codec=args.codec, schedule=schedule)
     step = jax.jit(
         make_train_step(bundle, topo, opt, tcfg, consensus_rounds=args.consensus_rounds)
     )

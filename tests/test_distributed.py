@@ -182,6 +182,74 @@ def test_engines_agree_under_every_codec():
     assert "CODEC-ENGINES-MATCH" in out
 
 
+def test_engines_agree_under_dynamic_schedule_every_codec():
+    """Satellite parity matrix under a CHANGING per-round mixing matrix:
+    the permute engine (re-deriving its decomposition per round, masking
+    churn-dropped agents) matches the gather engine driven by the same
+    schedule's (C_t, metropolis_t) stacks — every codec, slab and tree
+    paths, 3-round round-sets starting mid-sequence."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.core import (ring, hypercube, DRTConfig, PeriodicSchedule,
+                                ChurnSchedule)
+        from repro.core.consensus import PermuteConsensus, gather_consensus_rounds
+        from repro.utils.pytree import LayerPartition
+
+        K = 4
+        mesh = jax.make_mesh((K,), ("data",))
+
+        def tree_init(k):
+            k1, k2 = jax.random.split(k)
+            return {"embed": {"w": jax.random.normal(k1, (4, 8))},
+                    "blocks": {"w": jax.random.normal(k2, (3, 8, 8))}}
+
+        pK = jax.vmap(tree_init)(jax.random.split(jax.random.key(0), K))
+        part = LayerPartition.build(jax.tree.map(lambda x: x[0], pK))
+        rng = jax.random.key(7)
+        specs = jax.tree.map(lambda _: P("data"), pK)
+
+        sched = ChurnSchedule(PeriodicSchedule((ring(K), hypercube(K))),
+                              agent_drop=0.25, seed=9)
+        Cs, Ms = sched.mixing_stacks(2, 3)
+        for codec in ("identity", "bf16", "f16", "int8", "topk:0.25"):
+            for path in ("slab", "tree"):
+                want, A, _ = gather_consensus_rounds(
+                    part, pK, Cs, DRTConfig(), algorithm="drt", metropolis=Ms,
+                    codec=codec, rng=rng, rounds=3, path=path)
+                eng = PermuteConsensus(part, ring(K), DRTConfig(),
+                                       axis_name="data", codec=codec,
+                                       path=path, schedule=sched)
+                def body(local):
+                    sq = jax.tree.map(lambda x: x[0], local)
+                    out, _ = eng(sq, rng=rng, rounds=3, start_round=2)
+                    return jax.tree.map(lambda x: x[None], out)
+                got = shard_map(body, mesh=mesh, in_specs=(specs,),
+                                out_specs=specs, check_rep=False)(pK)
+                for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+                    np.testing.assert_allclose(
+                        np.asarray(a, np.float32), np.asarray(b, np.float32),
+                        rtol=2e-4, atol=2e-5, err_msg=f"{codec}/{path}")
+        # classical too (identity wire): churned Metropolis agrees
+        want, A, _ = gather_consensus_rounds(
+            part, pK, Cs, DRTConfig(), algorithm="classical", metropolis=Ms,
+            rounds=3, path="slab")
+        eng = PermuteConsensus(part, ring(K), DRTConfig(), axis_name="data",
+                               algorithm="classical", schedule=sched)
+        def bodyc(local):
+            sq = jax.tree.map(lambda x: x[0], local)
+            return jax.tree.map(lambda x: x[None], eng(sq, rounds=3, start_round=2))
+        got = shard_map(bodyc, mesh=mesh, in_specs=(specs,),
+                        out_specs=specs, check_rep=False)(pK)
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=2e-5)
+        print("DYNAMIC-ENGINES-MATCH")
+    """, devices=4)
+    assert "DYNAMIC-ENGINES-MATCH" in out
+
+
 def test_permute_train_step_threads_codec_state():
     """End-to-end: the permute engine inside shard_map threads the top-k
     error-feedback residual through TrainState.comm, sharded like params."""

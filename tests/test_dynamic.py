@@ -1,0 +1,496 @@
+"""Time-varying topology schedules: invariants of every emitted graph,
+host/traced view consistency, churn semantics (self-loop retention), the
+matching decomposition, and the dynamic-schedule training acceptance path
+(periodic ring<->hypercube with 10% agent dropout through make_train_step
+on both consensus paths)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ChurnSchedule,
+    DRTConfig,
+    DecentralizedTrainer,
+    PeriodicSchedule,
+    RandomGossipSchedule,
+    StaticSchedule,
+    TrainerConfig,
+    Topology,
+    gather_consensus_rounds,
+    hypercube,
+    make_schedule,
+    matching_decomposition,
+    one_peer_exponential,
+    ring,
+    torus2d,
+)
+from repro.core.dynamic import c_from_adjacency, metropolis_from_adjacency
+from repro.optim import sgd
+from repro.utils.pytree import LayerPartition
+
+K = 8
+
+
+def _all_schedules():
+    return {
+        "static": StaticSchedule(ring(K)),
+        "periodic": PeriodicSchedule((ring(K), hypercube(K))),
+        "periodic@2": PeriodicSchedule((ring(K), hypercube(K)), rounds_per_topology=2),
+        "gossip": RandomGossipSchedule(K, p=0.4, seed=3),
+        "onepeer": one_peer_exponential(K),
+        "churn": ChurnSchedule(
+            PeriodicSchedule((ring(K), hypercube(K))), agent_drop=0.25,
+            edge_drop=0.1, seed=5,
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# every graph a schedule emits satisfies the Topology invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", list(_all_schedules()))
+def test_emitted_graphs_pass_topology_invariants(name):
+    sched = _all_schedules()[name]
+    assert sched.num_agents == K
+    for t in range(10):
+        topo = sched.topology_at(t)
+        A = topo.adjacency  # Topology.__post_init__ validates square/sym/diag
+        assert A.shape == (K, K)
+        assert not np.any(np.diag(A))
+        assert np.array_equal(A, A.T)
+        # metropolis of the realized graph is doubly stochastic + nonneg
+        M = topo.metropolis()
+        np.testing.assert_allclose(M.sum(0), 1.0, atol=1e-12)
+        np.testing.assert_allclose(M.sum(1), 1.0, atol=1e-12)
+        assert (M >= -1e-15).all()
+
+
+@pytest.mark.parametrize("name", list(_all_schedules()))
+def test_traced_view_matches_host_view(name):
+    """adjacency_at (the traced realization feeding mixing_stacks) and
+    topology_at (the host realization feeding the permute engine) are the
+    SAME graph sequence."""
+    sched = _all_schedules()[name]
+    for t in range(8):
+        adj_traced = np.asarray(sched.adjacency_at(jnp.asarray(t))) > 0
+        np.testing.assert_array_equal(adj_traced, sched.topology_at(t).adjacency)
+
+
+@pytest.mark.parametrize("name", list(_all_schedules()))
+def test_mixing_stacks_match_per_round_topologies(name):
+    sched = _all_schedules()[name]
+    rounds = 6
+    C, M = sched.mixing_stacks(2, rounds)
+    assert C.shape == (rounds, K, K) and M.shape == (rounds, K, K)
+    for r in range(rounds):
+        topo = sched.topology_at(2 + r)
+        np.testing.assert_allclose(
+            np.asarray(C[r]), topo.c_matrix().astype(np.float32), atol=0
+        )
+        np.testing.assert_allclose(
+            np.asarray(M[r]), topo.metropolis().astype(np.float32), atol=1e-6
+        )
+        # column stochastic over the support
+        np.testing.assert_allclose(np.asarray(M[r]).sum(0), 1.0, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", list(_all_schedules()))
+def test_schedules_are_deterministic_and_traceable(name):
+    """Same construction -> same graphs; mixing_stacks works with a TRACED
+    start_round under jit and agrees with the eager realization."""
+    a = _all_schedules()[name]
+    b = _all_schedules()[name]
+    for t in range(6):
+        np.testing.assert_array_equal(
+            a.topology_at(t).adjacency, b.topology_at(t).adjacency
+        )
+    C1, M1 = jax.jit(lambda s: a.mixing_stacks(s, 3))(jnp.asarray(4))
+    C2, M2 = a.mixing_stacks(4, 3)
+    np.testing.assert_array_equal(np.asarray(C1), np.asarray(C2))
+    np.testing.assert_array_equal(np.asarray(M1), np.asarray(M2))
+
+
+def test_periodic_schedule_cycles():
+    s = PeriodicSchedule((ring(K), hypercube(K)), rounds_per_topology=2)
+    names = [s.topology_at(t).name for t in range(8)]
+    assert names == ["ring", "ring", "hypercube", "hypercube"] * 2
+
+
+def test_random_gossip_repeats_after_cycle():
+    s = RandomGossipSchedule(K, p=0.5, seed=1, cycle=4)
+    for t in range(4):
+        np.testing.assert_array_equal(
+            s.topology_at(t).adjacency, s.topology_at(t + 4).adjacency
+        )
+    # different seeds give different sequences (overwhelmingly)
+    other = RandomGossipSchedule(K, p=0.5, seed=2, cycle=4)
+    assert any(
+        not np.array_equal(s.topology_at(t).adjacency, other.topology_at(t).adjacency)
+        for t in range(4)
+    )
+
+
+# ---------------------------------------------------------------------------
+# churn semantics: dropped agents keep their iterate (self-loop retention)
+# ---------------------------------------------------------------------------
+
+
+def test_churn_dropped_agent_keeps_self_loop_and_identity_column():
+    sched = ChurnSchedule(StaticSchedule(ring(K)), agent_drop=0.5, seed=0)
+    saw_isolated = False
+    for t in range(12):
+        topo = sched.topology_at(t)
+        iso = np.flatnonzero(topo.adjacency.sum(1) == 0)
+        C, M = sched.mixing_stacks(t, 1)
+        for k in iso:
+            saw_isolated = True
+            e_k = np.zeros(K, np.float32)
+            e_k[k] = 1.0
+            # metropolis column: keep own iterate exactly
+            np.testing.assert_array_equal(np.asarray(M[0])[:, k], e_k)
+            # DRT support: only the self loop survives
+            np.testing.assert_array_equal(np.asarray(C[0])[:, k], e_k)
+    assert saw_isolated  # p=0.5 over 12 rounds: an isolated agent occurred
+
+
+def test_churn_edges_are_subset_of_base():
+    base = PeriodicSchedule((ring(K), hypercube(K)))
+    sched = ChurnSchedule(base, agent_drop=0.2, edge_drop=0.2, seed=2)
+    for t in range(8):
+        churned = sched.topology_at(t).adjacency
+        full = base.topology_at(t).adjacency
+        assert not np.any(churned & ~full)  # no invented edges
+
+
+def test_drt_mixing_keeps_dropped_agent_iterate_exactly():
+    """Engine-level churn semantics: a fully-isolated agent's parameters pass
+    through a DRT round-set UNCHANGED (gather engine, both paths)."""
+    sched = ChurnSchedule(StaticSchedule(ring(4)), agent_drop=0.5, seed=0)
+    # find a round with an isolated agent
+    t, iso = next(
+        (t, np.flatnonzero(sched.topology_at(t).adjacency.sum(1) == 0))
+        for t in range(20)
+        if (sched.topology_at(t).adjacency.sum(1) == 0).any()
+    )
+    C, M = sched.mixing_stacks(t, 1)
+
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        return {"embed": {"w": jax.random.normal(k1, (4, 8))},
+                "blocks": {"w": jax.random.normal(k2, (3, 8, 8))}}
+
+    pK = jax.vmap(one)(jax.random.split(jax.random.key(0), 4))
+    part = LayerPartition.build(jax.tree.map(lambda x: x[0], pK))
+    for path in ("slab", "tree"):
+        new, A, _ = gather_consensus_rounds(
+            part, pK, C, DRTConfig(), rounds=1, algorithm="drt",
+            metropolis=M, path=path,
+        )
+        for k in iso:
+            e_k = np.zeros(4, np.float32)
+            e_k[k] = 1.0
+            col = np.asarray(A)[:, :, k]  # (L, K) per-layer column of agent k
+            np.testing.assert_allclose(
+                col, np.broadcast_to(e_k, col.shape), atol=1e-7
+            )
+            for a, b in zip(jax.tree.leaves(new), jax.tree.leaves(pK)):
+                np.testing.assert_allclose(
+                    np.asarray(a)[k], np.asarray(b)[k], atol=1e-5
+                )
+
+
+# ---------------------------------------------------------------------------
+# matching decomposition (arbitrary graphs -> ppermute rounds)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("make", [
+    lambda: ring(7),
+    lambda: hypercube(8),
+    lambda: RandomGossipSchedule(8, p=0.5, seed=1).topology_at(0),
+    lambda: ChurnSchedule(StaticSchedule(ring(8)), agent_drop=0.3, seed=3).topology_at(1),
+])
+def test_matching_decomposition_covers_every_edge_exactly_once(make):
+    topo = make()
+    Kt = topo.num_agents
+    perms = matching_decomposition(topo)
+    seen = np.zeros((Kt, Kt), np.int64)
+    for p in perms:
+        np.testing.assert_array_equal(p[p], np.arange(Kt))  # involution
+        for i in range(Kt):
+            if p[i] != i:
+                seen[i, p[i]] += 1
+    # each adjacency edge received exactly once per direction, nothing else
+    np.testing.assert_array_equal(seen, topo.adjacency.astype(np.int64))
+
+
+def test_matching_decomposition_empty_graph():
+    topo = Topology("empty", np.zeros((4, 4), bool))
+    assert matching_decomposition(topo) == []
+
+
+def test_permutation_decomposition_covers_every_edge_exactly_once():
+    """Across all exchange rounds of a structured decomposition, every agent
+    receives every neighbour EXACTLY once (each directed edge once).  Lives
+    here (not test_topology.py) so it collects without the hypothesis
+    extra."""
+    from repro.core import make_topology, permutation_decomposition
+
+    for name, Kt in [("ring", 8), ("ring", 2), ("hypercube", 8),
+                     ("torus2d", 16), ("torus2d", 4), ("full", 6)]:
+        t = make_topology(name, Kt)
+        received = np.zeros((Kt, Kt), np.int64)  # [receiver, source]
+        for p in permutation_decomposition(t):
+            inv = np.empty(Kt, np.int64)
+            inv[p] = np.arange(Kt)
+            for k in range(Kt):
+                received[k, inv[k]] += 1
+        np.testing.assert_array_equal(
+            received, t.adjacency.astype(np.int64), err_msg=f"{name}/{Kt}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# make_topology validation (negative tests; ungated by the hypothesis extra)
+# ---------------------------------------------------------------------------
+
+
+def test_make_topology_rejects_unknown_name():
+    from repro.core import make_topology
+
+    with pytest.raises(KeyError, match="unknown topology"):
+        make_topology("smallworld", 8)
+
+
+def test_make_topology_rejects_unknown_kwargs():
+    """Unknown kwargs must be a clear TypeError naming the valid ones —
+    never silently ignored."""
+    from repro.core import make_topology
+
+    with pytest.raises(TypeError, match=r"unknown kwargs \['p'\]"):
+        make_topology("ring", 8, p=0.1)
+    with pytest.raises(TypeError, match="valid kwargs"):
+        make_topology("erdos_renyi", 8, prob=0.1)
+    # valid kwargs still pass
+    t = make_topology("erdos_renyi", 8, p=0.2, seed=3)
+    assert t.num_agents == 8
+
+
+def test_make_topology_validates_K():
+    from repro.core import make_topology
+
+    with pytest.raises(ValueError, match="power of two"):
+        make_topology("hypercube", 12)
+    with pytest.raises(ValueError, match="perfect square"):
+        make_topology("torus2d", 8)
+    with pytest.raises(ValueError, match="K >= 2"):
+        make_topology("ring", 1)
+    with pytest.raises(ValueError, match="K >= 2"):
+        make_topology("full", 0)
+    with pytest.raises(TypeError, match="must be an int"):
+        make_topology("ring", 8.0)
+
+
+# ---------------------------------------------------------------------------
+# the traced mixing-matrix builders
+# ---------------------------------------------------------------------------
+
+
+def test_metropolis_from_adjacency_matches_topology():
+    for topo in (ring(K), hypercube(K), torus2d(9)):
+        got = np.asarray(metropolis_from_adjacency(
+            jnp.asarray(topo.adjacency, jnp.float32)))
+        np.testing.assert_allclose(got, topo.metropolis(), atol=1e-6)
+        gotC = np.asarray(c_from_adjacency(jnp.asarray(topo.adjacency, jnp.float32)))
+        np.testing.assert_array_equal(gotC, topo.c_matrix().astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# make_schedule spec parser
+# ---------------------------------------------------------------------------
+
+
+def test_make_schedule_specs():
+    assert make_schedule(None, K) is None
+    s = make_schedule("ring", K)
+    assert isinstance(s, StaticSchedule) and s.static
+    s = make_schedule("static:hypercube", K)
+    assert s.topology_at(0).name == "hypercube"
+    s = make_schedule("periodic:ring,hypercube@2", K)
+    assert isinstance(s, PeriodicSchedule) and s.rounds_per_topology == 2
+    s = make_schedule("gossip:0.3", K, seed=7)
+    assert isinstance(s, RandomGossipSchedule) and s.p == 0.3 and s.seed == 7
+    s = make_schedule("onepeer", K)
+    assert isinstance(s, PeriodicSchedule)
+    s = make_schedule("ring", K, agent_drop=0.1)
+    assert isinstance(s, ChurnSchedule) and not s.static
+    # pass-through forms
+    topo = ring(K)
+    assert isinstance(make_schedule(topo, K), StaticSchedule)
+    sched = PeriodicSchedule((ring(K), hypercube(K)))
+    assert make_schedule(sched, K) is sched
+
+
+def test_make_schedule_rejects_bad_specs():
+    with pytest.raises(ValueError, match="unknown schedule spec"):
+        make_schedule("wibble", K)
+    with pytest.raises(ValueError, match="needs a base"):
+        make_schedule(None, K, agent_drop=0.5)
+    with pytest.raises(ValueError, match="K="):
+        make_schedule(StaticSchedule(ring(4)), K)
+    with pytest.raises(ValueError):
+        ChurnSchedule(StaticSchedule(ring(K)), agent_drop=1.0)
+    with pytest.raises(ValueError):
+        RandomGossipSchedule(K, p=0.0)
+    with pytest.raises(ValueError):
+        PeriodicSchedule(())
+    with pytest.raises(ValueError):
+        PeriodicSchedule((ring(4), ring(8)))
+
+
+# ---------------------------------------------------------------------------
+# acceptance: dynamic schedule end-to-end through the trainer + train step
+# ---------------------------------------------------------------------------
+
+
+def _toy_setup(Kt=4, dim=6):
+    targets = jax.random.normal(jax.random.key(5), (Kt, dim))
+
+    def init_fn(key):
+        return {"embed": {"w": jnp.zeros((dim,))}, "blocks": {"w": jnp.zeros((2, dim))}}
+
+    def loss_fn(params, batch, rng):
+        return jnp.sum((params["embed"]["w"] - batch) ** 2) + jnp.sum(
+            (params["blocks"]["w"] - batch[None]) ** 2
+        )
+
+    return targets, init_fn, loss_fn
+
+
+def test_trainer_static_schedule_is_bit_identical_to_no_schedule():
+    targets, init_fn, loss_fn = _toy_setup()
+    outs = {}
+    for schedule in (None, StaticSchedule(ring(4)), "ring"):
+        tr = DecentralizedTrainer(
+            loss_fn, init_fn, sgd(0.05), ring(4),
+            TrainerConfig(consensus_steps=3, schedule=schedule),
+        )
+        st = tr.init(jax.random.key(0))
+        for i in range(4):
+            st, _ = jax.jit(tr.local_step)(st, targets, jax.random.key(i))
+            st, _ = jax.jit(tr.consensus)(st)
+        outs[str(schedule)] = st
+    base = outs["None"]
+    for key, st in outs.items():
+        for a, b in zip(jax.tree.leaves(st.params), jax.tree.leaves(base.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("path", ["slab", "tree"])
+@pytest.mark.parametrize("codec", [None, "int8"])
+def test_dynamic_schedule_trains_through_trainer_jit(path, codec):
+    """The acceptance scenario (periodic ring<->hypercube + 10% agent
+    dropout) runs under jit through the trainer, with slab/tree parity."""
+    targets, init_fn, loss_fn = _toy_setup()
+    sched = ChurnSchedule(
+        PeriodicSchedule((ring(4), hypercube(4))), agent_drop=0.1, seed=2
+    )
+    tr = DecentralizedTrainer(
+        loss_fn, init_fn, sgd(0.05), ring(4),
+        TrainerConfig(consensus_steps=3, schedule=sched, codec=codec,
+                      consensus_path=path),
+    )
+    st = tr.init(jax.random.key(0))
+    step = jax.jit(tr.local_step)
+    cons = jax.jit(tr.consensus)
+    dis = []
+    for i in range(6):
+        st, _ = step(st, targets, jax.random.key(i))
+        pre = float(tr.disagreement(st.params))
+        st, A = cons(st)
+        dis.append(float(tr.disagreement(st.params)))
+    assert all(np.isfinite(d) for d in dis)
+    assert int(st.step) == 6
+    # the churned round-set still CONTRACTS the network at the final step:
+    # post-consensus disagreement strictly below the pre-consensus one
+    assert dis[-1] < pre, (dis[-1], pre)
+
+
+def test_dynamic_schedule_slab_tree_parity_through_trainer():
+    targets, init_fn, loss_fn = _toy_setup()
+    sched = ChurnSchedule(
+        PeriodicSchedule((ring(4), hypercube(4))), agent_drop=0.1, seed=2
+    )
+    outs = {}
+    for path in ("slab", "tree"):
+        tr = DecentralizedTrainer(
+            loss_fn, init_fn, sgd(0.05), ring(4),
+            TrainerConfig(consensus_steps=3, schedule=sched, codec="topk:0.25",
+                          consensus_path=path),
+        )
+        st = tr.init(jax.random.key(0))
+        for i in range(6):
+            st, _ = jax.jit(tr.local_step)(st, targets, jax.random.key(i))
+            st, _ = jax.jit(tr.consensus)(st)
+        outs[path] = st
+    for a, b in zip(jax.tree.leaves(outs["slab"].params),
+                    jax.tree.leaves(outs["tree"].params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    for a, b in zip(jax.tree.leaves(outs["slab"].comm),
+                    jax.tree.leaves(outs["tree"].comm)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@pytest.mark.parametrize("path", ["slab", "tree"])
+def test_dynamic_schedule_through_make_train_step(path):
+    """make_train_step end-to-end with the acceptance schedule on both
+    consensus paths: the jitted step consumes the schedule via state.step."""
+    from repro.launch.train import init_train_state, make_train_step
+    from repro.models.registry import get_bundle
+    from repro.optim import momentum
+
+    Kt = 4
+    bundle = get_bundle("qwen3-8b-smoke", num_agents=Kt)
+    sched = ChurnSchedule(
+        PeriodicSchedule((ring(Kt), hypercube(Kt))), agent_drop=0.1, seed=3
+    )
+    tcfg = TrainerConfig(schedule=sched, consensus_path=path)
+    opt = momentum(0.05, 0.9)
+    step = jax.jit(make_train_step(bundle, ring(Kt), opt, tcfg, consensus_rounds=3))
+    state = init_train_state(bundle, opt, jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (Kt, 2, 17), 0, bundle.cfg.vocab)
+    losses = []
+    for i in range(3):
+        state, m = step(state, {"tokens": tokens}, jax.random.key(i))
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(l) for l in losses)
+    assert int(state.step) == 3
+
+
+def test_make_train_step_rejects_dynamic_schedule_on_permute_engine():
+    from repro.launch.train import make_train_step
+    from repro.models.registry import get_bundle
+    from repro.optim import momentum
+
+    bundle = get_bundle("qwen3-8b-smoke", num_agents=4)
+    sched = PeriodicSchedule((ring(4), hypercube(4)))
+    with pytest.raises(ValueError, match="permute engine"):
+        make_train_step(
+            bundle, ring(4), momentum(0.05), TrainerConfig(schedule=sched),
+            consensus_impl="permute", mesh=object(), param_specs=object(),
+        )
+
+
+def test_permute_engine_rejects_traced_start_round():
+    from repro.core.consensus import PermuteConsensus
+
+    part = LayerPartition.build({"embed": {"w": jnp.zeros((4,))}})
+    eng = PermuteConsensus(
+        part, ring(4), DRTConfig(),
+        schedule=PeriodicSchedule((ring(4), hypercube(4))),
+    )
+    with pytest.raises(TypeError, match="concrete"):
+        eng({"embed": {"w": jnp.zeros((4,))}}, start_round=jnp.asarray(1))

@@ -471,6 +471,80 @@ def test_trainer_slab_and_tree_paths_agree():
 
 
 # ---------------------------------------------------------------------------
+# engine parity under a CHANGING per-round mixing matrix (dynamic schedules)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algorithm", ["drt", "classical"])
+@pytest.mark.parametrize("codec", [None] + ALL_CODECS)
+def test_slab_vs_tree_parity_under_dynamic_mixing(algorithm, codec):
+    """The slab hot path (incl. the generalized Gram recurrence
+    G' = A_t^T G A_t for exact exchanges) reproduces the per-leaf oracle when
+    EVERY round mixes over a different graph — periodic ring<->hypercube with
+    agent churn, per-round (C_t, metropolis_t) stacks."""
+    from repro.core import ChurnSchedule, PeriodicSchedule
+
+    K = 4
+    pK = _tree_K(K)
+    part, layout = _layout_for(pK)
+    sched = ChurnSchedule(
+        PeriodicSchedule((ring(K), hypercube(K))), agent_drop=0.25, seed=3
+    )
+    C_s, M_s = sched.mixing_stacks(1, 3)
+    rng = jax.random.key(11)
+    kw = dict(rounds=3, algorithm=algorithm, metropolis=M_s, codec=codec, rng=rng)
+    want, A_t, st_t = gather_consensus_rounds(
+        part, pK, C_s, DRTConfig(), path="tree", **kw
+    )
+    got, A_s, st_s = gather_consensus_rounds(
+        part, pK, C_s, DRTConfig(), path="slab", layout=layout, **kw
+    )
+    tol = 2e-4 if codec == "f16" else 5e-6
+    assert _max_err(got, want) < tol, (algorithm, codec)
+    np.testing.assert_allclose(np.asarray(A_s), np.asarray(A_t), atol=1e-4)
+    if jax.tree.leaves(st_t):  # stateful codec: EF residual parity too
+        assert _max_err(st_s, st_t) < tol
+
+
+def test_per_round_stack_shape_is_validated():
+    K = 4
+    pK = _tree_K(K)
+    part, layout = _layout_for(pK)
+    C3 = jnp.broadcast_to(
+        jnp.asarray(ring(K).c_matrix(), jnp.float32), (2, K, K)
+    )
+    with pytest.raises(ValueError, match="per-round C stack"):
+        gather_consensus_rounds(
+            part, pK, C3, DRTConfig(), rounds=3, path="slab", layout=layout
+        )
+
+
+def test_dynamic_stacks_match_round_by_round_oracle():
+    """Driving the round-set with stacked (C_t, metropolis_t) equals calling
+    the single-round oracle with each round's matrices in sequence."""
+    from repro.core import PeriodicSchedule
+
+    K = 4
+    pK = _tree_K(K)
+    part, layout = _layout_for(pK)
+    sched = PeriodicSchedule((ring(K), hypercube(K)))
+    C_s, M_s = sched.mixing_stacks(0, 3)
+    for algorithm in ("drt", "classical"):
+        got, A_last, _ = gather_consensus_rounds(
+            part, pK, C_s, DRTConfig(), rounds=3, algorithm=algorithm,
+            metropolis=M_s, path="slab", layout=layout,
+        )
+        want = pK
+        for r in range(3):
+            want, A_r = gather_consensus_step(
+                part, want, C_s[r], DRTConfig(), algorithm=algorithm,
+                metropolis=M_s[r],
+            )
+        assert _max_err(got, want) < 5e-6, algorithm
+        np.testing.assert_allclose(np.asarray(A_last), np.asarray(A_r), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # kernel-backed combine (interpret mode)
 # ---------------------------------------------------------------------------
 

@@ -84,3 +84,100 @@ def test_permutation_decomposition_covers_neighbours():
                 inv[p] = np.arange(K)
                 srcs.add(int(inv[k]))
             assert srcs == set(t.neighbors(k).tolist()), (name, k)
+
+
+# NOTE: the plain (non-hypothesis) validation tests — make_topology negative
+# tests and the exact-once decomposition coverage — live in test_dynamic.py,
+# which collects without the `test` extra; this module is hypothesis-gated at
+# import time.
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests: invariants over ARBITRARY graphs
+# ---------------------------------------------------------------------------
+
+
+def _random_topology(K: int, seed: int, p: float) -> topo.Topology:
+    rng = np.random.default_rng(seed)
+    upper = np.triu(rng.random((K, K)) < p, k=1)
+    return topo.Topology("random", upper | upper.T)
+
+
+@given(st.integers(2, 10), st.integers(0, 2**31 - 1), st.floats(0.05, 0.95))
+@settings(deadline=None, max_examples=40)
+def test_metropolis_doubly_stochastic_for_any_graph(K, seed, p):
+    """Metropolis weights of ANY symmetric graph — connected or not — are
+    doubly stochastic, nonnegative, and supported exactly on C."""
+    t = _random_topology(K, seed, p)
+    M = t.metropolis()
+    np.testing.assert_allclose(M.sum(0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(M.sum(1), 1.0, atol=1e-12)
+    assert (M >= -1e-15).all()
+    assert ((M > 0) == (t.c_matrix() > 0)).all()
+
+
+@given(st.integers(2, 9), st.integers(0, 2**31 - 1), st.floats(0.1, 0.9))
+@settings(deadline=None, max_examples=40)
+def test_lambda2_below_one_iff_connected(K, seed, p):
+    """lambda2() < 1 exactly when the graph is connected (a disconnected
+    Metropolis chain has a repeated unit eigenvalue)."""
+    t = _random_topology(K, seed, p)
+    l2 = t.lambda2()
+    if t.is_connected():
+        assert l2 < 1.0 - 1e-9, l2
+    else:
+        assert l2 == pytest.approx(1.0, abs=1e-9)
+
+
+@given(st.integers(2, 9), st.integers(0, 2**31 - 1), st.floats(0.1, 0.9))
+@settings(deadline=None, max_examples=30)
+def test_matching_decomposition_properties_random_graphs(K, seed, p):
+    """matching_decomposition: involutive rounds whose non-fixed points tile
+    the edge set exactly once — for ANY graph."""
+    from repro.core.consensus import matching_decomposition
+
+    t = _random_topology(K, seed, p)
+    received = np.zeros((K, K), np.int64)
+    for perm in matching_decomposition(t):
+        np.testing.assert_array_equal(perm[perm], np.arange(K))  # involution
+        for i in range(K):
+            if perm[i] != i:
+                received[i, perm[i]] += 1
+    np.testing.assert_array_equal(received, t.adjacency.astype(np.int64))
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(deadline=None, max_examples=20)
+def test_erdos_renyi_deterministic_per_seed_and_connected(seed):
+    a = topo.erdos_renyi(16, 0.1, seed=seed)
+    b = topo.erdos_renyi(16, 0.1, seed=seed)
+    np.testing.assert_array_equal(a.adjacency, b.adjacency)
+    assert a.is_connected()
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(0, 40))
+@settings(deadline=None, max_examples=25)
+def test_schedule_emitted_graphs_satisfy_invariants(seed, t):
+    """Every graph a TopologySchedule emits — periodic, gossip, churned —
+    passes the Topology invariants and has a doubly stochastic Metropolis
+    matrix; churn keeps realized edges a subset of the base graph's."""
+    from repro.core import dynamic as dyn
+
+    K = 8
+    base = dyn.PeriodicSchedule((topo.ring(K), topo.hypercube(K)))
+    for sched in (
+        base,
+        dyn.RandomGossipSchedule(K, p=0.4, seed=seed),
+        dyn.ChurnSchedule(base, agent_drop=0.3, edge_drop=0.2, seed=seed),
+    ):
+        g = sched.topology_at(t)
+        A = g.adjacency
+        assert A.shape == (K, K) and not np.any(np.diag(A))
+        assert np.array_equal(A, A.T)
+        M = g.metropolis()
+        np.testing.assert_allclose(M.sum(0), 1.0, atol=1e-12)
+        np.testing.assert_allclose(M.sum(1), 1.0, atol=1e-12)
+        assert (M >= -1e-15).all()
+    churned = dyn.ChurnSchedule(base, agent_drop=0.3, edge_drop=0.2, seed=seed)
+    assert not np.any(churned.topology_at(t).adjacency & ~base.topology_at(t).adjacency)
+
+
