@@ -3,11 +3,27 @@
 Reads the TRACKED ``BENCH_consensus.json`` (committed at the repo root),
 runs a fresh ``combine_micro`` sweep into ``results/BENCH_consensus.json``
 (the committed baseline is never touched — re-baselining stays a deliberate,
-reviewed act), and FAILS (exit 1) when the fresh slab-vs-tree speedup
-regresses more than ``--threshold`` (default 25%) below the tracked value.
-The slab speedup is a *ratio* of interleaved medians on the same machine, so
-it is robust to absolute CI-runner speed; the wide threshold absorbs the
-remaining noise.
+reviewed act), and FAILS (exit 1) when any tracked metric regresses:
+
+  slab_speedup        fresh slab-vs-tree speedup >= tracked * (1 - threshold).
+                      A *ratio* of interleaved medians on the same machine —
+                      robust to absolute CI-runner speed.
+  compile_sublinear   at rounds=8 the scanned round-set must still
+                      trace+compile faster than the unrolled oracle (per
+                      codec) — the O(1)-in-rounds claim, again a same-machine
+                      ratio.
+  dispatches          static Pallas-launch count per ``use_kernels`` round-set
+                      must not exceed the tracked count (per codec).  Exact —
+                      no tolerance: one extra launch per round is a real
+                      O(groups x slots) regression reappearing.
+  many_steps_speedup  the donated multi-step driver's steps/s gain over
+                      per-step dispatch >= tracked * (1 - threshold), and
+                      never below break-even.
+
+Untimed rows (permute-engine wire-volume rows, tagged ``"untimed": true``)
+are excluded from every computation.  On failure the gate prints the full
+tracked-vs-fresh metric table rather than a bare assert, so the CI log alone
+is enough to diagnose which layer regressed.
 
 Run:  PYTHONPATH=src python benchmarks/check_regression.py
 """
@@ -29,10 +45,40 @@ FRESH_JSON = os.path.join(
 )
 
 
+def _compile_ratios(doc) -> dict:
+    """scanned/unrolled (trace + compile) wall-time ratio per codec."""
+    rows = (doc.get("trace_compile") or {}).get("rows") or []
+    by = {(r["codec"], r["variant"]): r["trace_ms"] + r["compile_ms"] for r in rows}
+    out = {}
+    for codec in {r["codec"] for r in rows}:
+        scanned, unrolled = by.get((codec, "scanned")), by.get((codec, "unrolled"))
+        if scanned and unrolled:
+            out[codec] = scanned / unrolled
+    return out
+
+
+def _dispatches(doc) -> dict:
+    rows = (doc.get("dispatch") or {}).get("rows") or []
+    return {r["codec"]: r["pallas_launches"] for r in rows}
+
+
+def collect_metrics(doc) -> list[tuple[str, float, str]]:
+    """(name, value, direction) rows; direction 'up' = bigger is better."""
+    out = [("slab_speedup", doc.get("speedup_slab_vs_tree"), "up")]
+    for codec, ratio in sorted(_compile_ratios(doc).items()):
+        out.append((f"compile_ratio_scan/unroll[{codec}]", ratio, "down"))
+    for codec, n in sorted(_dispatches(doc).items()):
+        out.append((f"pallas_launches[{codec}]", float(n), "down"))
+    tm = doc.get("train_many_steps") or {}
+    out.append(("many_steps_speedup", tm.get("speedup_many_steps"), "up"))
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--threshold", type=float, default=0.25,
-                    help="max fractional slab-speedup regression vs tracked")
+                    help="max fractional regression vs tracked for the "
+                         "timing-ratio metrics (launch counts are exact)")
     ap.add_argument("--baseline", default=combine_micro.BENCH_JSON,
                     help="tracked BENCH_consensus.json to gate against")
     ap.add_argument("--out", default=FRESH_JSON,
@@ -40,26 +86,60 @@ def main(argv=None) -> int:
                          "tracked baseline is never overwritten")
     args = ap.parse_args(argv)
 
-    tracked = None
+    tracked_doc = None
     if os.path.exists(args.baseline):
         with open(args.baseline) as f:
-            tracked = json.load(f).get("speedup_slab_vs_tree")
+            tracked_doc = json.load(f)
 
     os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
     fresh_doc = combine_micro.write_bench_json(path=args.out)
-    fresh = fresh_doc["speedup_slab_vs_tree"]
 
-    if tracked is None:
-        print(f"no tracked baseline at {args.baseline}; "
-              f"wrote fresh speedup {fresh:.2f}x to {args.out} (gate skipped)")
+    fresh = dict((n, v) for n, v, _ in collect_metrics(fresh_doc))
+    if tracked_doc is None:
+        print(f"no tracked baseline at {args.baseline}; wrote fresh metrics "
+              f"to {args.out} (gate skipped):")
+        for name, value in fresh.items():
+            if value is not None:
+                print(f"  {name:36s} {value:.3f}")
         return 0
 
-    floor = tracked * (1.0 - args.threshold)
-    status = "OK" if fresh >= floor else "REGRESSION"
-    print(f"slab-vs-tree speedup: tracked {tracked:.2f}x, fresh {fresh:.2f}x, "
-          f"floor {floor:.2f}x ({args.threshold:.0%} tolerance) -> {status}")
-    if fresh < floor:
-        print("consensus slab hot path regressed; investigate before merging "
+    tol = args.threshold
+    table = []  # (name, tracked, fresh, floor/ceiling, status)
+    failed = False
+    for name, tracked_v, direction in collect_metrics(tracked_doc):
+        fresh_v = fresh.get(name)
+        if tracked_v is None or fresh_v is None:
+            table.append((name, tracked_v, fresh_v, None, "skipped"))
+            continue
+        if name.startswith("pallas_launches"):
+            bound = tracked_v  # exact: launch counts may only go down
+            ok = fresh_v <= bound
+        elif direction == "up":
+            bound = tracked_v * (1.0 - tol)
+            ok = fresh_v >= bound
+        else:
+            bound = tracked_v * (1.0 + tol)
+            ok = fresh_v <= bound
+        # the sub-linear claim itself: scanned must beat unrolled outright
+        if name.startswith("compile_ratio") and fresh_v >= 1.0:
+            ok = False
+            bound = min(bound, 1.0)
+        # break-even is a hard floor for the multi-step driver: slower than
+        # per-step dispatch is a regression whatever the tracked margin
+        if name == "many_steps_speedup" and fresh_v <= 1.0:
+            ok = False
+            bound = max(bound, 1.0)
+        table.append((name, tracked_v, fresh_v, bound, "OK" if ok else "REGRESSION"))
+        failed = failed or not ok
+
+    hdr = f"{'metric':38s} {'tracked':>9s} {'fresh':>9s} {'bound':>9s}  status"
+    print(hdr)
+    print("-" * len(hdr))
+    for name, t, f, b, status in table:
+        fmt = lambda v: "-" if v is None else f"{v:9.3f}"
+        print(f"{name:38s} {fmt(t)} {fmt(f)} {fmt(b)}  {status}")
+    if failed:
+        print("\nconsensus hot path regressed; investigate before merging "
               "(or re-baseline BENCH_consensus.json if the change is intended)")
         return 1
     return 0

@@ -9,10 +9,27 @@ drives down (ring: 2x params via ppermute vs 15x via all-gather at K=16;
 int8/topk shave another >= 4x off either engine; the slab path removes the
 per-leaf launch overhead: >= 2x us/call on the 10-group model at K=16).
 
+PR 4 adds the *orchestration* metrics around the rounds:
+
+  trace_compile      trace/compile wall-time of one jitted round-set at
+                     rounds=8, scanned (lax.scan, O(1) in rounds) vs the
+                     unrolled parity oracle (O(rounds)).
+  dispatch           static Pallas-launch counts per round-set with
+                     use_kernels=True (whole-slab batched kernels: ONE
+                     launch per coded round, one per exact round-set).
+  train_many_steps   steps/s of the donated multi-step driver
+                     (``make_many_steps`` scanning local-step + consensus)
+                     vs per-step jitted dispatch at 8 steps/call.
+
+Permute-engine rows carry the engine-specific wire volume only; timing one
+needs a multi-device mesh this benchmark does not assume, so those rows are
+tagged ``"untimed": true`` (instead of a null ``us_per_call``) and excluded
+from every regression-gate computation.
+
 Writes the perf-trajectory artifact ``BENCH_consensus.json`` at the repo
-root (schema: {"K", "model", "rows": [{engine, path, codec, topology,
-algorithm, us_per_call, ...}], "speedup_slab_vs_tree"}) so future PRs can
-track regressions.
+root (schema: {"K", "model", "rows": [...], "speedup_slab_vs_tree",
+"trace_compile", "dispatch", "train_many_steps"}) so future PRs can track
+regressions (benchmarks/check_regression.py gates on it in CI).
 
 Run:  PYTHONPATH=src python benchmarks/combine_micro.py
 """
@@ -37,6 +54,7 @@ from repro.utils import tree_bytes
 
 BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_consensus.json")
 ROUNDS = 3  # the paper's consensus cadence; the slab packs ONCE per round-set
+SCAN_ROUNDS = 8  # "heavy traffic" round count for the trace/compile contrast
 
 
 def _model_stack(key, K: int, n_layers: int = 8, width: int = 64):
@@ -179,21 +197,182 @@ def run_codec_paths(K: int = 16, codecs=("identity", "bf16", "int8", "topk:0.1")
         for path in ("tree", "slab"):
             for engine in ("gather", "permute"):
                 vol = codec_bytes_per_step(topo, template, engine, codec=codec)
-                rows.append(dict(
+                row = dict(
                     engine=engine,
                     path=path,
                     codec=codec,
                     topology="ring",
                     algorithm="drt",
                     rounds=ROUNDS,
-                    # timings are measured on the GATHER round-set only; the
-                    # permute rows carry the engine-specific wire volume and
-                    # no us_per_call (a permute timing needs a multi-device
-                    # mesh this benchmark does not assume)
-                    us_per_call=times[path] * 1e6 if engine == "gather" else None,
                     recv_mb_per_round=vol["recv_bytes"] / 1e6,
-                ))
+                )
+                if engine == "gather":
+                    row["us_per_call"] = times[path] * 1e6
+                else:
+                    # timings are measured on the GATHER round-set only; a
+                    # permute timing needs a multi-device mesh this benchmark
+                    # does not assume.  Tag the row instead of emitting a
+                    # null us_per_call so downstream math can't trip on it.
+                    row["untimed"] = True
+                rows.append(row)
     return rows
+
+
+def run_trace_compile(K: int = 16, rounds: int = SCAN_ROUNDS, codecs=(None, "bf16")):
+    """Trace/compile wall-time of ONE jitted round-set: scanned (lax.scan,
+    O(1) in rounds) vs the unrolled parity oracle (O(rounds)) — the metric
+    that keeps the scanned hot path's sub-linear trace cost from silently
+    regressing.  ``None`` exercises the exact Gram-recurrence path, ``bf16``
+    the full coded slab round body (int8 shows an even starker gap — 3.6s
+    scanned vs 104s unrolled, XLA constant-folds the unrolled uniforms — but
+    is too expensive to pay on every CI run)."""
+    pK = _model_stack(jax.random.key(0), K)
+    template = jax.tree.map(lambda x: x[0], pK)
+    part = LayerPartition.build(template)
+    layout = build_slab_layout(part, template)
+    topo = make_topology("ring", K)
+    C = jnp.asarray(topo.c_matrix(), jnp.float32)
+    metro = jnp.asarray(topo.metropolis(), jnp.float32)
+    rng = jax.random.key(1)
+    rows = []
+    for codec in codecs:
+        for variant, unroll in (("scanned", False), ("unrolled", True)):
+            fn = jax.jit(
+                lambda pK, codec=codec, unroll=unroll: gather_consensus_rounds(
+                    part, pK, C, DRTConfig(), rounds=rounds, algorithm="drt",
+                    metropolis=metro, codec=codec,
+                    rng=rng if codec is not None else None,
+                    layout=layout, unroll=unroll,
+                )[0]
+            )
+            t0 = time.perf_counter()
+            lowered = fn.lower(pK)
+            trace_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            lowered.compile()
+            compile_s = time.perf_counter() - t0
+            rows.append(dict(
+                codec=codec or "none",
+                variant=variant,
+                rounds=rounds,
+                trace_ms=trace_s * 1e3,
+                compile_ms=compile_s * 1e3,
+            ))
+    return rows
+
+
+def run_dispatch_counts(K: int = 16, rounds: int = ROUNDS):
+    """Static Pallas-launch counts of one ``use_kernels=True`` round-set:
+    the whole-slab batched kernels issue ONE launch per coded round (and one
+    per round-SET on the exact Gram path), independent of the model's
+    (groups x slots) layer count."""
+    from repro.utils.dispatch import count_pallas_launches
+
+    pK = _model_stack(jax.random.key(0), K)
+    template = jax.tree.map(lambda x: x[0], pK)
+    part = LayerPartition.build(template)
+    layout = build_slab_layout(part, template)
+    topo = make_topology("ring", K)
+    C = jnp.asarray(topo.c_matrix(), jnp.float32)
+    rng = jax.random.key(1)
+    rows = []
+    for codec in (None, "bf16", "int8"):
+        n = count_pallas_launches(
+            lambda pK, codec=codec: gather_consensus_rounds(
+                part, pK, C, DRTConfig(), rounds=rounds, algorithm="drt",
+                codec=codec, rng=rng if codec is not None else None,
+                layout=layout, use_kernels=True,
+            )[0],
+            pK,
+        )
+        rows.append(dict(
+            codec=codec or "none",
+            rounds=rounds,
+            pallas_launches=n,
+            launches_per_round=n / rounds,
+        ))
+    return rows
+
+
+def run_train_chunking(
+    K: int = 4,
+    steps_per_call: int = 8,
+    width: int = 16,
+    n_layers: int = 2,
+    iters: int = 15,
+):
+    """Dispatch amortization of the donated multi-step driver: steps/s of
+    the per-step jitted (local-step + consensus) loop vs ONE
+    ``make_many_steps`` program scanning ``steps_per_call`` steps, on a
+    reduced-width variant of the benchmark model (small enough that per-step
+    host dispatch is a visible fraction of the step — exactly the regime the
+    driver exists for)."""
+    from repro.core import DecentralizedTrainer, TrainerConfig, make_topology as mk
+    from repro.optim import sgd
+
+    def init_fn(key):
+        return jax.tree.map(
+            lambda x: x[0], _model_stack(key, 1, n_layers=n_layers, width=width)
+        )
+
+    def loss_fn(params, batch, rng):
+        reg = sum(jnp.sum(jnp.square(l)) for l in jax.tree.leaves(params))
+        return jnp.sum((params["embed"]["b"] - batch) ** 2) + 1e-3 * reg
+
+    tr = DecentralizedTrainer(
+        loss_fn, init_fn, sgd(0.05), mk("ring", K),
+        TrainerConfig(algorithm="drt", consensus_steps=ROUNDS),
+    )
+    state0 = tr.init(jax.random.key(0))
+    targets = jax.random.normal(jax.random.key(1), (K, width))
+    batches = jnp.broadcast_to(targets, (steps_per_call, K, width))
+    keys = jnp.stack([jax.random.key(i) for i in range(steps_per_call)])
+
+    single = jax.jit(
+        lambda st, b, k: tr.consensus(tr.local_step(st, b, k)[0])[0]
+    )
+    many = tr.make_many_steps()  # jitted + donated
+
+    def run_single(st):
+        for i in range(steps_per_call):
+            st = single(st, targets, keys[i])
+        return st
+
+    def run_many(st):
+        st, _ = many(st, batches, keys)
+        return st
+
+    # warm up both programs (many donates: feed it a fresh copy each call)
+    jax.block_until_ready(run_single(state0))
+    st_m = jax.tree.map(jnp.copy, state0)
+    st_m = run_many(st_m)
+    jax.block_until_ready(st_m)
+    t_single, t_many = [], []
+    st_s = state0
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        st_s = run_single(st_s)
+        jax.block_until_ready(st_s)
+        t_single.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        st_m = run_many(st_m)
+        jax.block_until_ready(st_m)
+        t_many.append(time.perf_counter() - t0)
+    t_single.sort()
+    t_many.sort()
+    med_s = t_single[len(t_single) // 2]
+    med_m = t_many[len(t_many) // 2]
+    return dict(
+        steps_per_call=steps_per_call,
+        K=K,
+        model=f"bench stack width={width} n_layers={n_layers}",
+        consensus_rounds=ROUNDS,
+        us_per_step_single=med_s / steps_per_call * 1e6,
+        us_per_step_chunked=med_m / steps_per_call * 1e6,
+        steps_per_s_single=steps_per_call / med_s,
+        steps_per_s_chunked=steps_per_call / med_m,
+        speedup_many_steps=med_s / med_m,
+    )
 
 
 def write_bench_json(path: str = BENCH_JSON, K: int = 16) -> dict:
@@ -208,6 +387,9 @@ def write_bench_json(path: str = BENCH_JSON, K: int = 16) -> dict:
         "rounds_per_call": ROUNDS,
         "speedup_slab_vs_tree": speedup,
         "rows": rows,
+        "trace_compile": {"rounds": SCAN_ROUNDS, "rows": run_trace_compile(K=K)},
+        "dispatch": {"rounds": ROUNDS, "rows": run_dispatch_counts(K=K)},
+        "train_many_steps": run_train_chunking(),
     }
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)
@@ -220,9 +402,24 @@ def main():
           f"{doc['rounds_per_call']} rounds/call): {doc['speedup_slab_vs_tree']:.2f}x")
     print(f"{'engine':8s} {'path':5s} {'codec':10s} {'us/call':>10s} {'recv MB/round':>14s}")
     for r in doc["rows"]:
-        us = "-" if r["us_per_call"] is None else f"{r['us_per_call']:.0f}"
+        us = "untimed" if r.get("untimed") else f"{r['us_per_call']:.0f}"
         print(f"{r['engine']:8s} {r['path']:5s} {r['codec']:10s} "
               f"{us:>10s} {r['recv_mb_per_round']:14.2f}")
+    print()
+    tc = doc["trace_compile"]
+    print(f"trace/compile at rounds={tc['rounds']} (scanned round-sets vs unrolled oracle):")
+    print(f"{'codec':8s} {'variant':9s} {'trace ms':>9s} {'compile ms':>11s}")
+    for r in tc["rows"]:
+        print(f"{r['codec']:8s} {r['variant']:9s} {r['trace_ms']:9.1f} {r['compile_ms']:11.1f}")
+    print()
+    print(f"pallas launches per round-set (use_kernels=True, rounds={doc['dispatch']['rounds']}):")
+    for r in doc["dispatch"]["rows"]:
+        print(f"  {r['codec']:8s} launches={r['pallas_launches']} "
+              f"({r['launches_per_round']:.2f}/round)")
+    tm = doc["train_many_steps"]
+    print(f"\nmulti-step driver ({tm['steps_per_call']} steps/call, {tm['model']}): "
+          f"{tm['steps_per_s_single']:.0f} -> {tm['steps_per_s_chunked']:.0f} steps/s "
+          f"({tm['speedup_many_steps']:.2f}x)")
     rows = run(K=16)
     print()
     print(f"{'topology':10s} {'algo':>9s} {'us tree':>9s} {'us slab':>9s} {'x':>5s} "

@@ -28,10 +28,20 @@ the last round — ``gather_consensus_rounds`` for the gather engine,
 per-leaf tree walk survives as the reference oracle (``path="tree"``) and as
 the automatic fallback for codecs without a slab fast path.
 
+One-dispatch round-sets: every per-round loop in
+``gather_consensus_rounds`` (the exact Gram recurrence, the coded slab
+rounds and the per-leaf tree oracle) is a single ``lax.scan`` over the
+``(rounds, K, K)`` mixing stacks, so the trace/compile cost of a round-set
+is O(1) in ``rounds``; ``unroll=True`` keeps the Python-loop form as a
+bit-identical parity oracle.
+
 ``use_kernels=True`` swaps the slab inner loops for the Pallas kernels from
-``repro.kernels`` (``weighted_combine`` / ``dequant_combine`` for the
-combines, ``drt_dist`` for the neighbour statistics); on CPU they execute in
-interpret mode and are parity-tested against the jnp slab path.
+``repro.kernels``: the combines run as whole-slab batched grids
+(``slab_combine`` / ``slab_dequant_combine`` / ``slab_source_combine`` —
+ONE launch per coded round, one per exact round-set, instead of one per
+(group, slot)), with ``drt_dist`` for the permute engine's neighbour
+statistics; on CPU they execute in interpret mode and are parity-tested
+against the jnp slab path and the per-slot kernel references.
 
 Everything that crosses the agent boundary goes through a ``repro.comm``
 :class:`~repro.comm.WireCodec`: each agent encodes what it publishes once per
@@ -116,27 +126,47 @@ def _template_sds(psi_K):
     )
 
 
-def _per_round(mat, rounds: int, name: str):
-    """Normalize a mixing structure to a per-round indexer.
+def _round_stack(mat, rounds: int, name: str):
+    """Normalize a mixing structure to a ``(rounds, K, K)`` stack.
 
-    ``mat`` may be a static ``(K, K)`` matrix (every round identical — the
-    indexer returns the SAME object so the static path stays bit-identical)
-    or a ``(rounds, K, K)`` stack from a
-    :class:`~repro.core.dynamic.TopologySchedule` (round ``r`` gets slice
-    ``mat[r]``).  ``None`` passes through (classical-only ``metropolis``).
+    ``mat`` may be a static ``(K, K)`` matrix (broadcast — every round reads
+    bit-identical values, so the static path stays bit-identical to the
+    pre-stack behavior) or an actual per-round stack from a
+    :class:`~repro.core.dynamic.TopologySchedule`.  ``None`` passes through
+    (classical-only ``metropolis``).  The stacked form is what the scanned
+    round-set consumes as its ``lax.scan`` inputs.
     """
     if mat is None:
-        return lambda r: None
+        return None
     if mat.ndim == 2:
-        return lambda r: mat
+        return jnp.broadcast_to(mat, (rounds, *mat.shape))
     if mat.ndim == 3:
         if mat.shape[0] != rounds:
             raise ValueError(
                 f"per-round {name} stack has {mat.shape[0]} rounds, "
                 f"round-set runs {rounds}"
             )
-        return lambda r: mat[r]
+        return mat
     raise ValueError(f"{name} must be (K, K) or (rounds, K, K), got {mat.shape}")
+
+
+def _scan_rounds(body, carry, xs, rounds: int, unroll: bool):
+    """Drive ``rounds`` iterations of ``body`` (a ``lax.scan``-shaped step).
+
+    The default is ONE ``lax.scan`` over the per-round inputs, so the
+    round-set traces and compiles O(1) in ``rounds``.  ``unroll=True`` runs
+    the SAME body as a Python loop — the trace-time oracle the scanned path
+    is parity-tested against (bit-identical by construction: each iteration
+    executes the same ops on the same values).  A single round skips the
+    scan machinery outright; the per-step production cadence pays no loop
+    overhead.
+    """
+    if unroll or rounds == 1:
+        for r in range(rounds):
+            carry, _ = body(carry, jax.tree.map(lambda x: x[r], xs))
+        return carry
+    carry, _ = jax.lax.scan(body, carry, xs)
+    return carry
 
 
 # ---------------------------------------------------------------------------
@@ -236,9 +266,44 @@ def _slab_mixing(layout, regions_f32, C, cfg, algorithm, metropolis, num_layers)
 
 
 def _combine_slab_kernels(layout, A, regions):
-    """Kernel-backed region combine: one fused ``weighted_combine`` per
-    (DRT layer, agent column) — accumulator stays in VMEM, each source block
-    streams exactly once.  Interpret mode on CPU."""
+    """Kernel-backed whole-slab combine: ONE grid-based ``slab_combine``
+    launch over the packed (K, D) slab per call.  The per-block (K, K)
+    mixing matrices are gathered from the static ``layout.block_layer`` map
+    (layer segments are lane-padded, so blocks never straddle layers).
+    Interpret mode on CPU."""
+    from repro.kernels import slab_combine
+
+    A_blocks = jnp.take(
+        A.astype(jnp.float32), jnp.asarray(layout.block_layer), axis=0
+    )
+    out = slab_combine(A_blocks, layout.join(regions))
+    return layout.split(out)
+
+
+def _dequant_combine_slab_kernels(layout, A_off, wire):
+    """Fused whole-slab int8 dequantize+combine: ONE grid-based
+    ``slab_dequant_combine`` launch per round; per-column scales are
+    reconstructed inside the kernel from the static column->scale-segment
+    map, so the decoded f32 neighbour slab never materializes.  HBM traffic
+    is K x D int8 reads + D f32 writes instead of K x D x 4B dequant
+    copies."""
+    from repro.kernels import slab_dequant_combine
+
+    A_blocks = jnp.take(
+        A_off.astype(jnp.float32), jnp.asarray(layout.block_layer), axis=0
+    )
+    col_seg = jnp.asarray(
+        layout.col_scale_seg.reshape(layout.n_blocks, layout.lane)
+    )
+    out = slab_dequant_combine(A_blocks, wire.s, col_seg, layout.join(wire.q))
+    return layout.split(out)
+
+
+def _combine_slab_per_slot(layout, A, regions):
+    """PR 2's per-(group, slot) kernel combine — one ``weighted_combine``
+    launch per segment.  Kept as the parity reference for the whole-slab
+    batched kernel (``_combine_slab_kernels``), which replaced it on the hot
+    path."""
     from repro.kernels import weighted_combine
 
     out = []
@@ -254,10 +319,9 @@ def _combine_slab_kernels(layout, A, regions):
     return tuple(out)
 
 
-def _dequant_combine_slab_kernels(layout, A_off, wire):
-    """Fused int8 dequantize+combine per (leaf, slot) scale segment: the
-    decoded f32 neighbour regions never materialize.  HBM traffic is
-    N x D int8 reads + D f32 writes instead of N x D x 4B dequant copies."""
+def _dequant_combine_slab_per_slot(layout, A_off, wire):
+    """PR 2's per-(leaf, slot) fused int8 dequantize+combine — kept as the
+    parity reference for ``_dequant_combine_slab_kernels``."""
     from repro.kernels import dequant_combine
 
     out = []
@@ -304,6 +368,7 @@ def gather_consensus_rounds(
     layout: "packing.SlabLayout | None" = None,
     path: ConsensusPath = "slab",
     use_kernels: bool = False,
+    unroll: bool = False,
 ):
     """``rounds`` consensus steps with ONE pack/unpack around the whole set.
 
@@ -316,6 +381,13 @@ def gather_consensus_rounds(
     matrices via the recurrence ``G' = A_t^T G A_t`` — two passes over the
     parameters total, independent of ``rounds``.
 
+    Scanned round-sets: every per-round loop (Gram recurrence, coded slab
+    rounds, the per-leaf tree oracle) is ONE ``lax.scan`` over the
+    ``(rounds, K, K)`` mixing stacks, so trace and compile cost are O(1) in
+    ``rounds`` instead of O(rounds).  ``unroll=True`` runs the same round
+    body as a Python loop — the trace-time parity oracle (bit-identical
+    results; it executes the identical ops per round).
+
     Dynamic graphs: ``C`` and ``metropolis`` may be per-round
     ``(rounds, K, K)`` stacks (from
     :meth:`repro.core.dynamic.TopologySchedule.mixing_stacks`) instead of a
@@ -323,7 +395,7 @@ def gather_consensus_rounds(
     stack on every path, including the Gram recurrence.
 
     Returns ``(new_K, A_last, new_codec_state)``.  ``path="tree"`` (or a
-    codec without a slab fast path) falls back to looping the per-leaf
+    codec without a slab fast path) falls back to scanning the per-leaf
     reference oracle :func:`gather_consensus_step`.
     """
     wire_codec = _resolve_codec(codec, None)
@@ -336,30 +408,48 @@ def gather_consensus_rounds(
         path = "tree"
     if rounds <= 0:
         return psi_K, None, codec_state if codec_state is not None else ()
-    C_at = _per_round(C, rounds, "C")
-    metro_at = _per_round(metropolis, rounds, "metropolis")
+    K = jax.tree.leaves(psi_K)[0].shape[0]
+    L = partition.num_layers
+    C_stack = _round_stack(C, rounds, "C")
+    metro_stack = _round_stack(metropolis, rounds, "metropolis")
+    A0 = jnp.zeros((L, K, K), jnp.float32)  # overwritten by round 1
 
     if path == "tree":
-        A_last = None
         state = codec_state
-        for r in range(rounds):
+        if wire_codec is not None:
+            if wire_codec.stateful and (state is None or state == ()):
+                state = init_comm_state(wire_codec, psi_K)
+            elif state is None:
+                state = ()
+
+        def tree_body(carry, xs):
+            psi, st, _ = carry
+            r, C_r, metro_r = xs
             if wire_codec is None:
-                psi_K, A_last = gather_consensus_step(
-                    partition, psi_K, C_at(r), cfg,
-                    algorithm=algorithm, metropolis=metro_at(r),
+                psi, A = gather_consensus_step(
+                    partition, psi, C_r, cfg,
+                    algorithm=algorithm, metropolis=metro_r,
                 )
-            else:
-                psi_K, A_last, state = gather_consensus_step(
-                    partition, psi_K, C_at(r), cfg,
-                    algorithm=algorithm, metropolis=metro_at(r),
-                    codec=wire_codec, codec_state=state,
-                    rng=jax.random.fold_in(rng, r) if rng is not None else None,
-                )
+                return (psi, st, A), None
+            psi, A, st = gather_consensus_step(
+                partition, psi, C_r, cfg,
+                algorithm=algorithm, metropolis=metro_r,
+                codec=wire_codec, codec_state=st,
+                rng=jax.random.fold_in(rng, r) if rng is not None else None,
+            )
+            return (psi, st, A), None
+
+        psi_K, state, A_last = _scan_rounds(
+            tree_body,
+            (psi_K, state, A0),
+            (jnp.arange(rounds), C_stack, metro_stack),
+            rounds,
+            unroll,
+        )
         return psi_K, A_last, state if state is not None else ()
 
     if layout is None:
         layout = packing.cached_slab_layout(partition, _template_sds(psi_K))
-    K = jax.tree.leaves(psi_K)[0].shape[0]
     # packed ONCE for the whole round-set; carried between rounds as per-group
     # contiguous regions so no round re-slices or re-concatenates the slab
     regions = layout.pack_regions(psi_K)
@@ -384,27 +474,44 @@ def gather_consensus_rounds(
         # algebra per round, and ONE combine with the accumulated mixing
         # product at the end.  Two passes over the D parameters total,
         # independent of the round count, vs two per round on the tree path.
-        A_last = None
-        M = None  # accumulated product A_1 @ ... @ A_r per layer
+        # The accumulated product starts from the exact identity: I @ A is
+        # bit-identical to A, so seeding the scan carry costs nothing.
+        eyeL = jnp.broadcast_to(jnp.eye(K, dtype=jnp.float32), (L, K, K))
         if algorithm == "classical":
-            A_last = jnp.broadcast_to(
-                metro_at(0), (partition.num_layers, K, K)
+
+            def exact_body(carry, xs):
+                M, _ = carry
+                _, _, metro_r = xs
+                A = jnp.broadcast_to(metro_r, (L, K, K))
+                return (jnp.einsum("pij,pjk->pik", M, A), A), None
+
+            M, A_last = _scan_rounds(
+                exact_body,
+                (eyeL, A0),
+                (jnp.arange(rounds), C_stack, metro_stack),
+                rounds,
+                unroll,
             )
-            M = A_last
-            for r in range(1, rounds):
-                A_last = jnp.broadcast_to(
-                    metro_at(r), (partition.num_layers, K, K)
-                )
-                M = jnp.einsum("pij,pjk->pik", M, A_last)
         elif algorithm == "drt":
-            G = layout.gram(regions)
-            for r in range(rounds):
+
+            def exact_body(carry, xs):
+                G, M, _ = carry
+                _, C_r, _ = xs
                 d2, n2 = packing.gram_sq_dists(G)
-                A_last = drt_mod.drt_mixing_matrices(d2, n2, C_at(r), cfg)
-                G = packing.gram_update(G, A_last)
-                M = A_last if M is None else jnp.einsum(
-                    "pij,pjk->pik", M, A_last
-                )
+                A = drt_mod.drt_mixing_matrices(d2, n2, C_r, cfg)
+                return (
+                    packing.gram_update(G, A),
+                    jnp.einsum("pij,pjk->pik", M, A),
+                    A,
+                ), None
+
+            _, M, A_last = _scan_rounds(
+                exact_body,
+                (layout.gram(regions), eyeL, A0),
+                (jnp.arange(rounds), C_stack, metro_stack),
+                rounds,
+                unroll,
+            )
         else:
             raise ValueError(f"unknown algorithm {algorithm!r}")
         if use_kernels:
@@ -415,8 +522,9 @@ def gather_consensus_rounds(
             new_K = layout.combine_unpack(M, regions, like=psi_K)
         return new_K, A_last, codec_state if codec_state is not None else ()
 
-    A_last = None
-    for r in range(rounds):
+    def coded_body(carry, xs):
+        regions, res, _ = carry
+        r, C_r, metro_r = xs
         keys = _agent_keys(jax.random.fold_in(rng, r), K)
         # regions are slot-major: the agent axis being vmapped over is axis 1
         wax = packing.wire_out_axes(wire_codec)
@@ -433,21 +541,27 @@ def gather_consensus_rounds(
                 out_axes=(wax, 0),
             )(regions, keys)
         decoded = packing.slab_decode(wire_codec, layout, wire)  # f32 regions
-        A_last = _slab_mixing(
-            layout, decoded, C_at(r), cfg, algorithm, metro_at(r),
-            partition.num_layers,
-        )
-        eye = jnp.eye(K, dtype=A_last.dtype)
-        A_off = A_last * (1.0 - eye)[None]
+        A = _slab_mixing(layout, decoded, C_r, cfg, algorithm, metro_r, L)
+        eye = jnp.eye(K, dtype=A.dtype)
+        A_off = A * (1.0 - eye)[None]
         if use_kernels and isinstance(wire_codec, packing.Int8StochasticCodec):
             off = _dequant_combine_slab_kernels(layout, A_off, wire)
         elif use_kernels:
             off = _combine_slab_kernels(layout, A_off, decoded)
         else:
             off = layout.combine(A_off, decoded)
-        diag = jnp.diagonal(A_last, axis1=1, axis2=2)  # (L, K)
+        diag = jnp.diagonal(A, axis1=1, axis2=2)  # (L, K)
         selfed = layout.scale_by_layer(diag.T, regions)  # full-precision self
         regions = jax.tree.map(jnp.add, off, selfed)
+        return (regions, res, A), None
+
+    regions, res, A_last = _scan_rounds(
+        coded_body,
+        (regions, res if stateful else (), A0),
+        (jnp.arange(rounds), C_stack, metro_stack),
+        rounds,
+        unroll,
+    )
 
     new_K = layout.unpack_regions(regions, like=psi_K)
     if stateful:
@@ -825,21 +939,20 @@ class PermuteConsensus:
             )
             w_all = jnp.concatenate([w_self[None], w_nbrs], axis=0)  # (1+n, L)
             if self.use_kernels:
-                from repro.kernels import weighted_combine
+                from repro.kernels import slab_source_combine
 
-                out_regions = []
-                for gi, grp in enumerate(layout.groups):
-                    srcs_g = jnp.stack(
-                        [regions[gi]] + [rv[gi] for rv in recvs]
-                    )  # (1+n, n_slots, s_pad); self = full precision
-                    slots = [
-                        weighted_combine(
-                            w_all[:, grp.layer0 + j], srcs_g[:, j]
-                        )
-                        for j in range(grp.n_slots)
-                    ]
-                    out_regions.append(jnp.stack(slots, axis=0))
-                regions = tuple(out_regions)
+                # ONE whole-slab launch per round: sources stacked as flat
+                # (1+n, D) slabs (self = full precision), per-block weights
+                # gathered from the static block->layer map
+                srcs_slab = jnp.stack(
+                    [layout.join(regions)] + [layout.join(rv) for rv in recvs]
+                )
+                w_blocks = jnp.take(
+                    w_all.astype(jnp.float32),
+                    jnp.asarray(layout.block_layer),
+                    axis=1,
+                ).T  # (n_blocks, 1+n)
+                regions = layout.split(slab_source_combine(w_blocks, srcs_slab))
             else:
                 out_regions = []
                 for gi, grp in enumerate(layout.groups):

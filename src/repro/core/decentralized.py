@@ -210,6 +210,37 @@ class DecentralizedTrainer:
 
     # -- convenience epoch driver (simulator) ----------------------------------
 
+    def make_many_steps(self, *, donate: bool = True):
+        """One jitted, buffer-donated program for a CHUNK of training steps.
+
+        Returns ``many(state, batches_K, keys) -> (state, {"loss": (n,)})``
+        scanning ``n = batches.shape[0]`` iterations of local-step +
+        consensus inside a single device program — the per-step host
+        dispatch (and per-call argument processing) is paid once per chunk
+        instead of once per step.  ``batches_K`` leaves carry a leading
+        ``(n, K, ...)`` step axis; ``keys`` is the ``(n,)`` stack of exactly
+        the per-step keys the single-step driver would pass, so the result
+        is bit-identical to ``n`` successive ``local_step`` + ``consensus``
+        calls: the consensus rng and any schedule's round indices derive
+        from the CARRIED ``state.step``, which makes chunk boundaries (and
+        checkpoint resume mid-chunk) invisible to the math.
+
+        ``donate=True`` (default) donates the state argument so XLA updates
+        params / optimizer state / EF residuals in place across the chunk.
+        """
+
+        def many(state: DecentralizedState, batches_K, keys):
+            def body(st, inp):
+                batch, key = inp
+                st, metrics = self.local_step(st, batch, key)
+                st, _ = self.consensus(st)
+                return st, metrics["loss"]
+
+            state, losses = jax.lax.scan(body, state, (batches_K, keys))
+            return state, {"loss": losses}
+
+        return jax.jit(many, donate_argnums=(0,)) if donate else many
+
     def epoch(self, state: DecentralizedState, batches_K, rng: jax.Array):
         """Scan over an epoch of per-agent batches, then run consensus.
 

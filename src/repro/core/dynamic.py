@@ -177,21 +177,37 @@ class PeriodicSchedule(TopologySchedule):
     def _phase(self, t):
         return (t // self.rounds_per_topology) % len(self.topologies)
 
-    def adjacency_at(self, t) -> jax.Array:
-        table = jnp.stack(
-            [jnp.asarray(tp.adjacency, jnp.float32) for tp in self.topologies]
+    # the per-phase tables are pure functions of the (frozen) topology list;
+    # realizing them once as host numpy keeps every trace of adjacency_at /
+    # mixing_stacks (one per jitted step or scanned chunk) from re-running
+    # the float64 Metropolis construction per topology per trace
+    @functools.cached_property
+    def _adj_table(self) -> np.ndarray:
+        return np.stack(
+            [np.asarray(tp.adjacency, np.float32) for tp in self.topologies]
         )
-        return table[self._phase(jnp.asarray(t))]
+
+    @functools.cached_property
+    def _C_table(self) -> np.ndarray:
+        return np.stack(
+            [np.asarray(tp.c_matrix(), np.float32) for tp in self.topologies]
+        )
+
+    @functools.cached_property
+    def _M_table(self) -> np.ndarray:
+        return np.stack(
+            [np.asarray(tp.metropolis(), np.float32) for tp in self.topologies]
+        )
+
+    def adjacency_at(self, t) -> jax.Array:
+        return jnp.asarray(self._adj_table)[self._phase(jnp.asarray(t))]
 
     def mixing_stacks(self, start_round, rounds: int):
-        C_table = jnp.stack(
-            [jnp.asarray(tp.c_matrix(), jnp.float32) for tp in self.topologies]
-        )
-        M_table = jnp.stack(
-            [jnp.asarray(tp.metropolis(), jnp.float32) for tp in self.topologies]
-        )
         phases = self._phase(jnp.asarray(start_round) + jnp.arange(rounds))
-        return C_table[phases], M_table[phases]
+        return (
+            jnp.asarray(self._C_table)[phases],
+            jnp.asarray(self._M_table)[phases],
+        )
 
     def topology_at(self, t: int) -> Topology:
         return self.topologies[int(self._phase(int(t)))]

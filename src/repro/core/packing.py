@@ -63,6 +63,7 @@ leaves pass through) for standalone use.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, NamedTuple
 
 import jax
@@ -153,6 +154,26 @@ class SlabLayout:
     n_tree_leaves: int  # leaf count of the FULL template (rng-split parity)
     col_scale_seg: np.ndarray  # (D,) int32: int8 scale segment per column
     n_scale_segs: int
+    lane: int = LANES  # column-block width every layer segment is padded to
+
+    # -- lane-block maps (whole-slab batched kernels) -------------------------
+
+    @property
+    def n_blocks(self) -> int:
+        return self.D // self.lane
+
+    @functools.cached_property
+    def block_layer(self) -> np.ndarray:
+        """(D // lane,) int32: the DRT layer owning each lane-wide column
+        block.  Layer segments are lane-padded, so a block never straddles a
+        layer boundary — the whole-slab batched combine kernels
+        (:mod:`repro.kernels.slab_combine`) gather one (K, K) mixing matrix
+        per block from this map and stream the packed (K, D) slab through a
+        single grid instead of one launch per (group, slot)."""
+        out = np.empty(self.n_blocks, np.int32)
+        for p, (s, e) in enumerate(self.layer_slices):
+            out[s // self.lane : e // self.lane] = p
+        return out
 
     # -- batch handling -------------------------------------------------------
 
@@ -512,6 +533,7 @@ def build_slab_layout(
         n_tree_leaves=n_tree_leaves,
         col_scale_seg=np.concatenate(col_scale).astype(np.int32),
         n_scale_segs=n_scale,
+        lane=lane,
     )
 
 

@@ -6,6 +6,9 @@ mode on CPU; see EXPERIMENTS.md §Perf for the HBM-traffic math per kernel).
   int8_quantize   fused scale + stochastic round for the int8 wire codec
   int8_dequantize q * s -> f32
   dequant_combine fused dequantize + weighted combine over int8 neighbours
+  slab_combine    whole-slab per-layer mixing: ONE grid launch per round
+  slab_dequant_combine  whole-slab fused int8 dequant+combine, one launch
+  slab_source_combine   whole-slab {self}+neighbour combine (permute engine)
   selective_scan  chunked Mamba-1 recurrence, VMEM-carried state
   flash_attention online-softmax attention, VMEM score tiles
 """
@@ -17,6 +20,9 @@ from repro.kernels.ops import (
     int8_dequantize,
     int8_quantize,
     selective_scan,
+    slab_combine,
+    slab_dequant_combine,
+    slab_source_combine,
     weighted_combine,
 )
 
@@ -28,6 +34,9 @@ __all__ = [
     "int8_quantize",
     "int8_dequantize",
     "dequant_combine",
+    "slab_combine",
+    "slab_dequant_combine",
+    "slab_source_combine",
     "selective_scan",
     "flash_attention",
 ]

@@ -17,6 +17,9 @@ from repro.kernels.quantize import dequant_combine as _dequant_combine
 from repro.kernels.quantize import int8_dequantize as _int8_dequantize
 from repro.kernels.quantize import int8_quantize as _int8_quantize
 from repro.kernels.selective_scan import selective_scan as _selective_scan
+from repro.kernels.slab_combine import slab_combine as _slab_combine
+from repro.kernels.slab_combine import slab_dequant_combine as _slab_dequant_combine
+from repro.kernels.slab_combine import slab_source_combine as _slab_source_combine
 
 _INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
@@ -49,6 +52,28 @@ def dequant_combine(a, scales, qs, *, interpret: bool | None = None):
     """Fused out = sum_n a[n] * scales[n] * qs[n] over int8 neighbour blocks."""
     return _dequant_combine(
         a, scales, qs, interpret=_INTERPRET if interpret is None else interpret
+    )
+
+
+def slab_combine(A_blocks, slab, *, interpret: bool | None = None):
+    """Whole-slab per-layer agent mixing in ONE grid launch."""
+    return _slab_combine(
+        A_blocks, slab, interpret=_INTERPRET if interpret is None else interpret
+    )
+
+
+def slab_dequant_combine(A_blocks, scales, col_seg, q_slab, *, interpret: bool | None = None):
+    """Fused whole-slab int8 dequantize + combine in ONE grid launch."""
+    return _slab_dequant_combine(
+        A_blocks, scales, col_seg, q_slab,
+        interpret=_INTERPRET if interpret is None else interpret,
+    )
+
+
+def slab_source_combine(w_blocks, srcs, *, interpret: bool | None = None):
+    """Per-layer weighted combine over N stacked source slabs, ONE launch."""
+    return _slab_source_combine(
+        w_blocks, srcs, interpret=_INTERPRET if interpret is None else interpret
     )
 
 

@@ -7,6 +7,11 @@ agent-stacked tree, sharded over the mesh ``data`` axis) followed by
 a local epoch then 3 rounds — is a driver-level choice; the lowered step uses
 1 round, representative of the per-step production cadence, configurable).
 
+``make_train_many_steps`` scans that step ``n_steps`` times inside ONE
+jitted, buffer-donated device program — per-step host dispatch is paid once
+per chunk, state buffers are reused in place, and the result is
+bit-identical to per-step calls (``--steps-per-call`` on the CLI).
+
 Run it CPU-locally (simulator): ``python -m repro.launch.train --help``.
 """
 from __future__ import annotations
@@ -285,6 +290,64 @@ def make_train_step(
     return step
 
 
+def make_train_many_steps(
+    bundle: ModelBundle,
+    topology: Topology,
+    optimizer: Optimizer,
+    tcfg: TrainerConfig = TrainerConfig(),
+    consensus_rounds: int = 1,
+    consensus_impl: str = "gather",
+    codec=None,
+    mesh=None,
+    param_specs=None,
+    donate: bool = True,
+):
+    """Donated multi-step driver: a CHUNK of train steps as ONE device program.
+
+    Returns ``many(state, batches_K, keys) -> (state, {"loss": (n,)})`` where
+    ``batches_K`` leaves carry a leading ``(n_steps, K, ...)`` step axis and
+    ``keys`` is the ``(n_steps,)`` stack of exactly the per-step keys the
+    single-step driver would pass.  The body is :func:`make_train_step`'s
+    step scanned ``n_steps`` times, so the result is bit-identical to
+    ``n_steps`` successive single-step calls — the consensus rng and a
+    dynamic schedule's round indices derive from the CARRIED ``state.step``
+    (round ``t = step * consensus_rounds + r``), which makes chunk
+    boundaries, ragged tails and checkpoint resume mid-chunk invisible to
+    the math.  Combined with the scanned round-sets inside each consensus
+    call, a whole chunk traces/compiles O(1) in both ``n_steps`` and
+    ``consensus_rounds`` and issues ONE host dispatch.
+
+    ``donate=True`` (default) returns the function jitted with
+    ``donate_argnums=(0,)``: XLA reuses the state buffers (params, optimizer
+    state, EF residuals) across the chunk instead of allocating a fresh copy
+    per step — at large K x D the allocator traffic per step drops to zero.
+    Pass ``donate=False`` to get the plain function (e.g. to compose it
+    under an outer jit or shard_map with explicit shardings).
+    """
+    step = make_train_step(
+        bundle,
+        topology,
+        optimizer,
+        tcfg,
+        consensus_rounds=consensus_rounds,
+        consensus_impl=consensus_impl,
+        codec=codec,
+        mesh=mesh,
+        param_specs=param_specs,
+    )
+
+    def many(state: TrainState, batches_K, keys):
+        def body(st, inp):
+            batch, key = inp
+            st, metrics = step(st, batch, key)
+            return st, metrics["loss"]
+
+        state, losses = jax.lax.scan(body, state, (batches_K, keys))
+        return state, {"loss": losses}
+
+    return jax.jit(many, donate_argnums=(0,)) if donate else many
+
+
 # ---------------------------------------------------------------------------
 # CPU driver (simulator-scale presets)
 # ---------------------------------------------------------------------------
@@ -305,6 +368,13 @@ def main(argv=None) -> None:
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--consensus-rounds", type=int, default=1)
+    ap.add_argument(
+        "--steps-per-call", type=int, default=1,
+        help="train steps fused into ONE jitted, buffer-donated device "
+             "program (make_train_many_steps); amortizes per-step host "
+             "dispatch — bit-identical to per-step calls (a ragged final "
+             "chunk recompiles once for its smaller length)",
+    )
     ap.add_argument(
         "--codec", default=None,
         help="wire codec for the consensus exchange: identity|bf16|f16|int8|"
@@ -343,18 +413,38 @@ def main(argv=None) -> None:
         seed=args.schedule_seed,
     )
     tcfg = TrainerConfig(algorithm=args.algorithm, codec=args.codec, schedule=schedule)
-    step = jax.jit(
-        make_train_step(bundle, topo, opt, tcfg, consensus_rounds=args.consensus_rounds)
-    )
     state = init_train_state(bundle, opt, jax.random.key(0), codec=args.codec)
     stream = SyntheticTokenStream(
         TokenStreamConfig(vocab=bundle.cfg.vocab, seq_len=args.seq)
     )
-    for i in range(args.steps):
-        batch = {"tokens": jnp.asarray(stream.agent_batches(args.batch, args.agents, step=i))}
-        state, metrics = step(state, batch, jax.random.key(i))
-        if i % 10 == 0 or i == args.steps - 1:
-            print(f"step {i:4d}  loss {float(metrics['loss']):.4f}")
+    if args.steps_per_call > 1:
+        many = make_train_many_steps(
+            bundle, topo, opt, tcfg, consensus_rounds=args.consensus_rounds
+        )
+        i = 0
+        while i < args.steps:
+            n = min(args.steps_per_call, args.steps - i)
+            tokens = jnp.stack([
+                jnp.asarray(stream.agent_batches(args.batch, args.agents, step=j))
+                for j in range(i, i + n)
+            ])  # (n, K, batch, seq)
+            keys = jnp.stack([jax.random.key(j) for j in range(i, i + n)])
+            state, metrics = many(state, {"tokens": tokens}, keys)
+            last = i + n - 1
+            print(f"step {last:4d}  loss {float(metrics['loss'][-1]):.4f}  "
+                  f"({n} steps/call)")
+            i += n
+    else:
+        step = jax.jit(
+            make_train_step(bundle, topo, opt, tcfg,
+                            consensus_rounds=args.consensus_rounds)
+        )
+        for i in range(args.steps):
+            batch = {"tokens": jnp.asarray(
+                stream.agent_batches(args.batch, args.agents, step=i))}
+            state, metrics = step(state, batch, jax.random.key(i))
+            if i % 10 == 0 or i == args.steps - 1:
+                print(f"step {i:4d}  loss {float(metrics['loss']):.4f}")
     if args.ckpt_dir:
         from repro.ckpt import save_train_state
 

@@ -1,0 +1,60 @@
+"""Static dispatch accounting: count kernel launches in traced programs.
+
+The whole-slab batched combine kernels exist to collapse O(groups x slots)
+Pallas launches per consensus round into O(1); this module is the probe that
+keeps that true.  ``count_pallas_launches`` walks a function's jaxpr and
+counts ``pallas_call`` equations, descending into call primitives and
+control flow: a ``scan`` body's launches are multiplied by the trip count
+(the scan re-dispatches its body every iteration), ``cond``/``switch``
+branches contribute their maximum (one branch runs), ``while`` bodies count
+once (trip count unknown at trace time — a lower bound).
+
+Used by the tier-1 launch-count tests and by ``benchmarks/combine_micro``'s
+``dispatches_per_round_set`` metric, which the CI regression gate pins.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _subjaxprs(value):
+    """Yield any jaxprs hiding in an eqn param value."""
+    if isinstance(value, jax.extend.core.ClosedJaxpr):
+        yield value.jaxpr
+    elif isinstance(value, jax.extend.core.Jaxpr):
+        yield value
+    elif isinstance(value, (tuple, list)):
+        for v in value:
+            yield from _subjaxprs(v)
+
+
+def _count(jaxpr) -> int:
+    total = 0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "pallas_call":
+            total += 1
+            continue
+        subs = [sub for v in eqn.params.values() for sub in _subjaxprs(v)]
+        if not subs:
+            continue
+        counts = [_count(s) for s in subs]
+        if name == "scan":
+            total += eqn.params.get("length", 1) * sum(counts)
+        elif name in ("cond", "switch"):
+            total += max(counts)
+        else:  # pjit / closed_call / while / custom_* — body runs (>=) once
+            total += sum(counts)
+    return total
+
+
+def count_pallas_launches(fn, *args, **kwargs) -> int:
+    """Number of Pallas kernel launches one call of ``fn(*args)`` executes.
+
+    Static analysis of the jaxpr (no execution): ``scan`` bodies are
+    multiplied by their trip count, branch primitives contribute their
+    widest branch, ``while`` bodies are counted once (lower bound).  ``fn``
+    may already be jitted (the probe descends through ``pjit``).
+    """
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    return _count(closed.jaxpr)

@@ -250,6 +250,121 @@ def test_engines_agree_under_dynamic_schedule_every_codec():
     assert "DYNAMIC-ENGINES-MATCH" in out
 
 
+def test_permute_engine_whole_slab_kernels_match_gather():
+    """PermuteConsensus(use_kernels=True) routes its {self}+neighbour combine
+    through the ONE-launch ``slab_source_combine`` grid (instead of one
+    ``weighted_combine`` per (group, slot)); interpret-mode results match
+    the gather engine for exact and int8 exchanges over multi-round sets."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.core import ring, DRTConfig
+        from repro.core.consensus import PermuteConsensus, gather_consensus_rounds
+        from repro.utils.pytree import LayerPartition
+
+        K = 4
+        mesh = jax.make_mesh((K,), ("data",))
+
+        def tree_init(k):
+            k1, k2 = jax.random.split(k)
+            return {"embed": {"w": jax.random.normal(k1, (4, 8))},
+                    "blocks": {"w": jax.random.normal(k2, (3, 8, 8))}}
+
+        pK = jax.vmap(tree_init)(jax.random.split(jax.random.key(0), K))
+        part = LayerPartition.build(jax.tree.map(lambda x: x[0], pK))
+        specs = jax.tree.map(lambda _: P("data"), pK)
+        rng = jax.random.key(7)
+        topo = ring(K)
+        C = jnp.asarray(topo.c_matrix(), jnp.float32)
+
+        for codec in (None, "int8"):
+            want, _, _ = gather_consensus_rounds(
+                part, pK, C, DRTConfig(), rounds=3, codec=codec,
+                rng=rng if codec else None)
+            eng = PermuteConsensus(part, topo, DRTConfig(), axis_name="data",
+                                   codec=codec, use_kernels=True)
+            def body(local):
+                sq = jax.tree.map(lambda x: x[0], local)
+                if codec:
+                    out, _ = eng(sq, rng=rng, rounds=3)
+                else:
+                    out = eng(sq, rounds=3)
+                return jax.tree.map(lambda x: x[None], out)
+            got = shard_map(body, mesh=mesh, in_specs=(specs,),
+                            out_specs=specs, check_rep=False)(pK)
+            for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=2e-4, atol=2e-5,
+                                           err_msg=str(codec))
+        print("PERMUTE-SLAB-KERNELS-OK")
+    """, devices=4)
+    assert "PERMUTE-SLAB-KERNELS-OK" in out
+
+
+def test_train_many_steps_bitwise_matches_single_steps():
+    """The pod-runtime donated multi-step driver (make_train_many_steps)
+    produces BIT-identical state to n single make_train_step calls —
+    including the top-k EF residual and a dynamic schedule's round indices
+    (round t = step * consensus_rounds + r derives from the CARRIED step) —
+    and a ragged chunk split (1 + 3) matches the single 4-chunk."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import ring
+        from repro.core.decentralized import TrainerConfig
+        from repro.launch.train import (init_train_state, make_train_step,
+                                        make_train_many_steps)
+        from repro.models.registry import get_bundle
+        from repro.optim import momentum
+
+        K = 4
+        bundle = get_bundle("qwen3-8b-smoke", num_agents=K)
+        opt = momentum(0.05, 0.9)
+        codec = "topk:0.1"
+        tcfg = TrainerConfig(codec=codec, schedule="periodic:ring,hypercube",
+                             consensus_steps=3)
+        step = jax.jit(make_train_step(bundle, ring(K), opt, tcfg,
+                                       consensus_rounds=2))
+        many = make_train_many_steps(bundle, ring(K), opt, tcfg,
+                                     consensus_rounds=2, donate=False)
+        many = jax.jit(many)
+
+        state = init_train_state(bundle, opt, jax.random.key(0), codec=codec)
+        n = 4
+        tokens = [jax.random.randint(jax.random.key(100 + i), (K, 2, 17), 0,
+                                     bundle.cfg.vocab) for i in range(n)]
+        keys = [jax.random.key(i) for i in range(n)]
+
+        s_single = state
+        for i in range(n):
+            s_single, _ = step(s_single, {"tokens": tokens[i]}, keys[i])
+
+        s_many, metrics = many(state, {"tokens": jnp.stack(tokens)},
+                               jnp.stack(keys))
+        assert metrics["loss"].shape == (n,)
+        assert int(s_many.step) == n
+        for a, b in zip(jax.tree.leaves(s_single), jax.tree.leaves(s_many)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        # ragged chunking (1 + 3) — chunk boundaries are invisible
+        s_a, _ = many(state, {"tokens": jnp.stack(tokens[:1])},
+                      jnp.stack(keys[:1]))
+        s_b, _ = many(s_a, {"tokens": jnp.stack(tokens[1:])},
+                      jnp.stack(keys[1:]))
+        for a, b in zip(jax.tree.leaves(s_single), jax.tree.leaves(s_b)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        # donated driver: chaining invalidates the input, reuses buffers
+        manyd = make_train_many_steps(bundle, ring(K), opt, tcfg,
+                                      consensus_rounds=2)
+        sd, _ = manyd(state, {"tokens": jnp.stack(tokens)}, jnp.stack(keys))
+        assert jax.tree.leaves(state.params)[0].is_deleted()
+        assert int(sd.step) == n
+        print("MANY-STEPS-BITWISE-OK")
+    """, devices=1)
+    assert "MANY-STEPS-BITWISE-OK" in out
+
+
 def test_permute_train_step_threads_codec_state():
     """End-to-end: the permute engine inside shard_map threads the top-k
     error-feedback residual through TrainState.comm, sharded like params."""

@@ -545,6 +545,111 @@ def test_dynamic_stacks_match_round_by_round_oracle():
 
 
 # ---------------------------------------------------------------------------
+# scanned round-sets: bit-parity with the unrolled oracle
+# ---------------------------------------------------------------------------
+
+
+def _assert_bitwise(a, b, msg):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), msg
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y), err_msg=msg)
+
+
+@pytest.mark.parametrize("dynamic", [False, True])
+@pytest.mark.parametrize("algorithm", ["drt", "classical"])
+@pytest.mark.parametrize("codec", [None] + ALL_CODECS)
+def test_scanned_rounds_bitwise_match_unrolled_oracle(dynamic, algorithm, codec):
+    """The lax.scan round-set (trace/compile O(1) in rounds) is BIT-identical
+    to the unrolled Python-loop oracle for every codec x algorithm x
+    static/dynamic schedule — combined params, the last mixing matrix and
+    any EF residual alike.  Covers all three slab sub-paths (exact Gram
+    recurrence, coded rounds, and — via the fallback matrix below — the tree
+    oracle)."""
+    from repro.core import ChurnSchedule, PeriodicSchedule
+
+    K = 4
+    pK = _tree_K(K)
+    part, layout = _layout_for(pK)
+    if dynamic:
+        sched = ChurnSchedule(
+            PeriodicSchedule((ring(K), hypercube(K))), agent_drop=0.25, seed=3
+        )
+        C, metro = sched.mixing_stacks(1, 3)
+    else:
+        topo = ring(K)
+        C = jnp.asarray(topo.c_matrix(), jnp.float32)
+        metro = jnp.asarray(topo.metropolis(), jnp.float32)
+    kw = dict(
+        rounds=3, algorithm=algorithm, metropolis=metro, codec=codec,
+        rng=jax.random.key(11) if codec is not None else None, layout=layout,
+    )
+    scanned = jax.jit(
+        lambda pK: gather_consensus_rounds(part, pK, C, DRTConfig(), **kw)
+    )(pK)
+    unrolled = jax.jit(
+        lambda pK: gather_consensus_rounds(
+            part, pK, C, DRTConfig(), unroll=True, **kw
+        )
+    )(pK)
+    msg = f"{algorithm}/{codec}/dynamic={dynamic}"
+    _assert_bitwise(scanned[0], unrolled[0], msg)  # combined params
+    np.testing.assert_array_equal(
+        np.asarray(scanned[1]), np.asarray(unrolled[1]), err_msg=msg
+    )  # A_last
+    _assert_bitwise(scanned[2], unrolled[2], msg)  # codec state
+
+
+@pytest.mark.parametrize("codec", [None, "int8", "topk:0.1"])
+def test_tree_path_scanned_bitwise_matches_unrolled(codec):
+    """The per-leaf tree oracle's round loop is ALSO scanned — parity with
+    its own unrolled form (the reference of the reference)."""
+    K = 4
+    pK = _tree_K(K)
+    part, _ = _layout_for(pK)
+    C = jnp.asarray(ring(K).c_matrix(), jnp.float32)
+    kw = dict(
+        rounds=3, codec=codec,
+        rng=jax.random.key(5) if codec is not None else None, path="tree",
+    )
+    scanned = jax.jit(
+        lambda pK: gather_consensus_rounds(part, pK, C, DRTConfig(), **kw)
+    )(pK)
+    unrolled = jax.jit(
+        lambda pK: gather_consensus_rounds(
+            part, pK, C, DRTConfig(), unroll=True, **kw
+        )
+    )(pK)
+    _assert_bitwise(scanned[0], unrolled[0], str(codec))
+    _assert_bitwise(scanned[2], unrolled[2], str(codec))
+
+
+def test_scanned_rounds_trace_is_sublinear_in_rounds():
+    """The scanned path's jaxpr size must be (near-)flat in `rounds` while
+    the unrolled oracle's grows linearly — the structural form of the
+    trace/compile-cost claim, asserted without wall-clock noise."""
+    K = 4
+    pK = _tree_K(K)
+    part, layout = _layout_for(pK)
+    C = jnp.asarray(ring(K).c_matrix(), jnp.float32)
+
+    def eqn_count(rounds, unroll):
+        jaxpr = jax.make_jaxpr(
+            lambda pK: gather_consensus_rounds(
+                part, pK, C, DRTConfig(), rounds=rounds, codec="int8",
+                rng=jax.random.key(0), layout=layout, unroll=unroll,
+            )[0]
+        )(pK)
+        return len(jaxpr.jaxpr.eqns)
+
+    scan2, scan8 = eqn_count(2, False), eqn_count(8, False)
+    unroll2, unroll8 = eqn_count(2, True), eqn_count(8, True)
+    assert scan8 == scan2  # O(1): the body traces once whatever the length
+    assert unroll8 > unroll2  # the oracle pays per round
+    assert scan8 < unroll8
+
+
+# ---------------------------------------------------------------------------
 # kernel-backed combine (interpret mode)
 # ---------------------------------------------------------------------------
 
