@@ -8,6 +8,18 @@ reviewed act), and FAILS (exit 1) when any tracked metric regresses:
   slab_speedup        fresh slab-vs-tree speedup >= tracked * (1 - threshold).
                       A *ratio* of interleaved medians on the same machine —
                       robust to absolute CI-runner speed.
+  codec_overhead      per codec: slab-gather coded us_per_call / identity
+                      us_per_call (the compute price of the codec's wire
+                      savings) must stay <= tracked * (1 + codec-threshold).
+                      int8 is the canary the fused encode->combine path
+                      exists for — a regression past the bound is a hard
+                      failure like every other gated metric.  The bound gets
+                      its own (wider, default 1.0) threshold: coded rounds
+                      are bandwidth-heavy while the identity round-set is
+                      compute-light, so noisy-neighbour load moves this
+                      ratio up to ~1.5x between back-to-back runs; the gate
+                      is there to catch the 20x class (un-fusing the encode
+                      path), not same-day drift.
   compile_sublinear   at rounds=8 the scanned round-set must still
                       trace+compile faster than the unrolled oracle (per
                       codec) — the O(1)-in-rounds claim, again a same-machine
@@ -65,6 +77,8 @@ def _dispatches(doc) -> dict:
 def collect_metrics(doc) -> list[tuple[str, float, str]]:
     """(name, value, direction) rows; direction 'up' = bigger is better."""
     out = [("slab_speedup", doc.get("speedup_slab_vs_tree"), "up")]
+    for codec, ratio in sorted((doc.get("codec_overhead") or {}).items()):
+        out.append((f"codec_overhead_ratio[{codec}]", ratio, "down"))
     for codec, ratio in sorted(_compile_ratios(doc).items()):
         out.append((f"compile_ratio_scan/unroll[{codec}]", ratio, "down"))
     for codec, n in sorted(_dispatches(doc).items()):
@@ -79,6 +93,11 @@ def main(argv=None) -> int:
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="max fractional regression vs tracked for the "
                          "timing-ratio metrics (launch counts are exact)")
+    ap.add_argument("--codec-threshold", type=float, default=1.0,
+                    help="max fractional regression for codec_overhead_ratio "
+                         "metrics (wider: the coded/identity ratio swings "
+                         "~1.5x with noisy-neighbour load; the gate exists "
+                         "to catch order-of-magnitude encode regressions)")
     ap.add_argument("--baseline", default=combine_micro.BENCH_JSON,
                     help="tracked BENCH_consensus.json to gate against")
     ap.add_argument("--out", default=FRESH_JSON,
@@ -103,13 +122,23 @@ def main(argv=None) -> int:
                 print(f"  {name:36s} {value:.3f}")
         return 0
 
-    tol = args.threshold
     table = []  # (name, tracked, fresh, floor/ceiling, status)
     failed = False
     for name, tracked_v, direction in collect_metrics(tracked_doc):
+        tol = (
+            args.codec_threshold
+            if name.startswith("codec_overhead_ratio")
+            else args.threshold
+        )
         fresh_v = fresh.get(name)
-        if tracked_v is None or fresh_v is None:
+        if tracked_v is None:
             table.append((name, tracked_v, fresh_v, None, "skipped"))
+            continue
+        if fresh_v is None:
+            # a tracked metric the fresh sweep no longer emits is a gate
+            # hole, not a skip — the int8 canary must not vanish silently
+            table.append((name, tracked_v, fresh_v, None, "MISSING"))
+            failed = True
             continue
         if name.startswith("pallas_launches"):
             bound = tracked_v  # exact: launch counts may only go down
@@ -135,9 +164,24 @@ def main(argv=None) -> int:
     hdr = f"{'metric':38s} {'tracked':>9s} {'fresh':>9s} {'bound':>9s}  status"
     print(hdr)
     print("-" * len(hdr))
+    fmt = lambda v: "-" if v is None else f"{v:9.3f}"
     for name, t, f, b, status in table:
-        fmt = lambda v: "-" if v is None else f"{v:9.3f}"
         print(f"{name:38s} {fmt(t)} {fmt(f)} {fmt(b)}  {status}")
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        # surface the tracked-vs-fresh table (codec_overhead_ratio included)
+        # in the job summary so codec-perf drift is visible at review time
+        with open(summary_path, "a") as fh:
+            fh.write("### Consensus perf gate (tracked vs fresh)\n\n")
+            fh.write("| metric | tracked | fresh | bound | status |\n")
+            fh.write("|---|---:|---:|---:|---|\n")
+            for name, t, f, b, status in table:
+                flag = "" if status == "OK" else " ⚠️"
+                fh.write(
+                    f"| `{name}` | {fmt(t).strip()} | {fmt(f).strip()} "
+                    f"| {fmt(b).strip()} | {status}{flag} |\n"
+                )
+            fh.write("\n")
     if failed:
         print("\nconsensus hot path regressed; investigate before merging "
               "(or re-baseline BENCH_consensus.json if the change is intended)")

@@ -21,22 +21,42 @@ PR 4 adds the *orchestration* metrics around the rounds:
                      (``make_many_steps`` scanning local-step + consensus)
                      vs per-step jitted dispatch at 8 steps/call.
 
-Permute-engine rows carry the engine-specific wire volume only; timing one
-needs a multi-device mesh this benchmark does not assume, so those rows are
-tagged ``"untimed": true`` (instead of a null ``us_per_call``) and excluded
-from every regression-gate computation.
+Permute-engine rows carry the engine-specific wire volume only by default;
+timing one needs a multi-device mesh, so those rows are tagged
+``"untimed": true`` (instead of a null ``us_per_call``) and excluded from
+every regression-gate computation.  ``--permute-timing`` opts into real
+numbers: the process re-seeds ``XLA_FLAGS`` with 16 forced host devices
+(the ``launch/mesh.py`` dry-run trick — must happen before jax imports,
+hence the hook at the very top of this file) and times ``PermuteConsensus``
+round-sets under ``shard_map``, replacing the ``untimed`` tags.  Those
+numbers measure 16 oversubscribed host shards on one CPU — comparable
+run-to-run, not against the single-process gather rows.
+
+``codec_overhead`` tracks THE tentpole metric of the coded hot path: per
+codec, slab-gather ``us_per_call / identity us_per_call`` — what a codec
+costs in compute relative to the exact exchange (bytes saved are the
+``recv_mb`` columns).  ``check_regression.py`` hard-gates int8.
 
 Writes the perf-trajectory artifact ``BENCH_consensus.json`` at the repo
 root (schema: {"K", "model", "rows": [...], "speedup_slab_vs_tree",
-"trace_compile", "dispatch", "train_many_steps"}) so future PRs can track
-regressions (benchmarks/check_regression.py gates on it in CI).
+"codec_overhead", "trace_compile", "dispatch", "train_many_steps"}) so
+future PRs can track regressions (benchmarks/check_regression.py gates on
+it in CI).
 
-Run:  PYTHONPATH=src python benchmarks/combine_micro.py
+Run:  PYTHONPATH=src python benchmarks/combine_micro.py [--permute-timing]
 """
 from __future__ import annotations
 
-import json
 import os
+import sys
+
+if "--permute-timing" in sys.argv:  # must precede any jax import
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=16 "
+        + os.environ.get("XLA_FLAGS", "")
+    )
+
+import json
 import time
 
 import jax
@@ -170,9 +190,15 @@ def run(K: int = 16, codecs=("identity", "bf16", "int8", "topk:0.1")):
     return rows
 
 
-def run_codec_paths(K: int = 16, codecs=("identity", "bf16", "int8", "topk:0.1")):
+def run_codec_paths(
+    K: int = 16,
+    codecs=("identity", "bf16", "int8", "topk:0.1"),
+    permute_times: "dict | None" = None,
+):
     """Per-codec tree-vs-slab round-set timings on the ring (gather engine):
-    the BENCH_consensus.json trajectory rows."""
+    the BENCH_consensus.json trajectory rows.  ``permute_times`` (from
+    :func:`run_permute_timing`) fills the permute rows' ``us_per_call``
+    instead of tagging them ``untimed``."""
     pK = _model_stack(jax.random.key(0), K)
     template = jax.tree.map(lambda x: x[0], pK)
     part = LayerPartition.build(template)
@@ -181,19 +207,24 @@ def run_codec_paths(K: int = 16, codecs=("identity", "bf16", "int8", "topk:0.1")
     C = jnp.asarray(topo.c_matrix(), jnp.float32)
     metro = jnp.asarray(topo.metropolis(), jnp.float32)
     rng = jax.random.key(1)
+    # ONE interleaved timing group across every (codec, path): the
+    # codec_overhead_ratio compares codecs AGAINST EACH OTHER, so they must
+    # share the same machine-load window — per-codec groups measured minutes
+    # apart put machine drift, not codec cost, into the ratio
+    fns = {
+        (codec, path): jax.jit(
+            lambda pK, codec=codec, path=path: gather_consensus_rounds(
+                part, pK, C, DRTConfig(), rounds=ROUNDS, algorithm="drt",
+                metropolis=metro, codec=codec, rng=rng, path=path,
+                layout=layout if path == "slab" else None,
+            )[0]
+        )
+        for codec in codecs
+        for path in ("tree", "slab")
+    }
+    times = _time_paired(fns, pK, iters=9)
     rows = []
     for codec in codecs:
-        fns = {
-            path: jax.jit(
-                lambda pK, codec=codec, path=path: gather_consensus_rounds(
-                    part, pK, C, DRTConfig(), rounds=ROUNDS, algorithm="drt",
-                    metropolis=metro, codec=codec, rng=rng, path=path,
-                    layout=layout if path == "slab" else None,
-                )[0]
-            )
-            for path in ("tree", "slab")
-        }
-        times = _time_paired(fns, pK, iters=15 if codec == "identity" else 7)
         for path in ("tree", "slab"):
             for engine in ("gather", "permute"):
                 vol = codec_bytes_per_step(topo, template, engine, codec=codec)
@@ -207,15 +238,66 @@ def run_codec_paths(K: int = 16, codecs=("identity", "bf16", "int8", "topk:0.1")
                     recv_mb_per_round=vol["recv_bytes"] / 1e6,
                 )
                 if engine == "gather":
-                    row["us_per_call"] = times[path] * 1e6
+                    row["us_per_call"] = times[(codec, path)] * 1e6
+                elif permute_times and (codec, path) in permute_times:
+                    row["us_per_call"] = permute_times[(codec, path)] * 1e6
+                    row["timing"] = "shard_map/16 forced host devices"
                 else:
                     # timings are measured on the GATHER round-set only; a
-                    # permute timing needs a multi-device mesh this benchmark
-                    # does not assume.  Tag the row instead of emitting a
+                    # permute timing needs a multi-device mesh (opt in with
+                    # --permute-timing).  Tag the row instead of emitting a
                     # null us_per_call so downstream math can't trip on it.
                     row["untimed"] = True
                 rows.append(row)
     return rows
+
+
+def run_permute_timing(K: int = 16, codecs=("identity", "bf16", "int8", "topk:0.1")):
+    """Wall-time PermuteConsensus round-sets under ``shard_map`` on forced
+    host devices (``--permute-timing`` re-execs jax with
+    ``--xla_force_host_platform_device_count=16``, the ``launch/mesh.py``
+    dry-run trick).  Returns ``{(codec, path): seconds_per_call}``.
+
+    16 shards oversubscribe one CPU, so these numbers are comparable
+    run-to-run (and against each other) but NOT against the single-process
+    gather rows."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.consensus import PermuteConsensus
+
+    if jax.device_count() < K:
+        raise RuntimeError(
+            f"--permute-timing needs {K} devices; run via "
+            "`python benchmarks/combine_micro.py --permute-timing` (the flag "
+            "must be on the command line before jax initializes)"
+        )
+    mesh = jax.make_mesh((K,), ("data",))
+    pK = _model_stack(jax.random.key(0), K)
+    part = LayerPartition.build(jax.tree.map(lambda x: x[0], pK))
+    topo = make_topology("ring", K)
+    rng = jax.random.key(1)
+    specs = jax.tree.map(lambda _: P("data"), pK)
+    fns = {}
+    for codec in codecs:
+        for path in ("tree", "slab"):
+            eng = PermuteConsensus(
+                part, topo, DRTConfig(), axis_name="data", codec=codec,
+                path=path,
+            )
+
+            def body(local, eng=eng):
+                sq = jax.tree.map(lambda x: x[0], local)
+                out, _ = eng(sq, rng=rng, rounds=ROUNDS)
+                return jax.tree.map(lambda x: x[None], out)
+
+            fns[(codec, path)] = jax.jit(
+                shard_map(
+                    body, mesh=mesh, in_specs=(specs,), out_specs=specs,
+                    check_rep=False,
+                )
+            )
+    return _time_paired(fns, pK, iters=5)
 
 
 def run_trace_compile(K: int = 16, rounds: int = SCAN_ROUNDS, codecs=(None, "bf16")):
@@ -375,9 +457,32 @@ def run_train_chunking(
     )
 
 
-def write_bench_json(path: str = BENCH_JSON, K: int = 16) -> dict:
+def codec_overhead_ratios(rows) -> dict:
+    """Per-codec ``codec_overhead_ratio``: slab-gather coded us_per_call over
+    the identity (exact) slab-gather us_per_call — the compute price of a
+    codec's bytes-on-wire savings.  Interleaved same-machine medians, so the
+    ratio is robust to absolute runner speed.  Untimed rows never enter."""
+    by = {
+        (r["codec"], r["path"]): r["us_per_call"]
+        for r in rows
+        if r["engine"] == "gather" and not r.get("untimed")
+    }
+    base = by.get(("identity", "slab"))
+    if not base:
+        return {}
+    return {
+        codec: us / base
+        for (codec, path), us in sorted(by.items())
+        if path == "slab" and codec != "identity"
+    }
+
+
+def write_bench_json(
+    path: str = BENCH_JSON, K: int = 16, permute_timing: bool = False
+) -> dict:
     """Emit the perf-trajectory artifact consumed by CI and future PRs."""
-    rows = run_codec_paths(K=K)
+    permute_times = run_permute_timing(K=K) if permute_timing else None
+    rows = run_codec_paths(K=K, permute_times=permute_times)
     by = {(r["codec"], r["path"]): r for r in rows if r["engine"] == "gather"}
     speedup = by[("identity", "tree")]["us_per_call"] / by[("identity", "slab")]["us_per_call"]
     doc = {
@@ -386,6 +491,7 @@ def write_bench_json(path: str = BENCH_JSON, K: int = 16) -> dict:
         "model": "10-group / 26-leaf benchmark stack (see _model_stack)",
         "rounds_per_call": ROUNDS,
         "speedup_slab_vs_tree": speedup,
+        "codec_overhead": codec_overhead_ratios(rows),
         "rows": rows,
         "trace_compile": {"rounds": SCAN_ROUNDS, "rows": run_trace_compile(K=K)},
         "dispatch": {"rounds": ROUNDS, "rows": run_dispatch_counts(K=K)},
@@ -397,7 +503,7 @@ def write_bench_json(path: str = BENCH_JSON, K: int = 16) -> dict:
 
 
 def main():
-    doc = write_bench_json()
+    doc = write_bench_json(permute_timing="--permute-timing" in sys.argv)
     print(f"slab vs tree (identity, gather, K={doc['K']}, "
           f"{doc['rounds_per_call']} rounds/call): {doc['speedup_slab_vs_tree']:.2f}x")
     print(f"{'engine':8s} {'path':5s} {'codec':10s} {'us/call':>10s} {'recv MB/round':>14s}")
@@ -405,6 +511,10 @@ def main():
         us = "untimed" if r.get("untimed") else f"{r['us_per_call']:.0f}"
         print(f"{r['engine']:8s} {r['path']:5s} {r['codec']:10s} "
               f"{us:>10s} {r['recv_mb_per_round']:14.2f}")
+    print()
+    print("codec_overhead_ratio (slab gather, coded / identity us_per_call):")
+    for codec, ratio in doc["codec_overhead"].items():
+        print(f"  {codec:10s} {ratio:6.2f}x")
     print()
     tc = doc["trace_compile"]
     print(f"trace/compile at rounds={tc['rounds']} (scanned round-sets vs unrolled oracle):")

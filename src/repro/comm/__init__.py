@@ -22,7 +22,9 @@ from repro.comm.codec import (
     init_comm_state,
     make_codec,
     register_codec,
+    topk_threshold,
 )
+from repro.comm.rng import counter_uniform
 
 __all__ = [
     "WireCodec",
@@ -35,6 +37,8 @@ __all__ = [
     "register_codec",
     "codec_names",
     "init_comm_state",
+    "counter_uniform",
+    "topk_threshold",
     "wire_bytes",
     "collective_bytes_per_step",
     "compression_ratio",

@@ -35,13 +35,22 @@ rounds and the per-leaf tree oracle) is a single ``lax.scan`` over the
 is O(1) in ``rounds``; ``unroll=True`` keeps the Python-loop form as a
 bit-identical parity oracle.
 
+Fused coded rounds: a coded round's slab side (encode, decode, distance
+stats, combine, self term) runs natively batched over the agent axis
+(``packing.slab_encode_batched`` — no per-agent ``vmap`` transposes, no
+materialized uniform fields, counter-based rounding RNG, subsampled top-k
+thresholds), with the two-phase per-agent encode kept as the wire
+bit-parity oracle.
+
 ``use_kernels=True`` swaps the slab inner loops for the Pallas kernels from
-``repro.kernels``: the combines run as whole-slab batched grids
-(``slab_combine`` / ``slab_dequant_combine`` / ``slab_source_combine`` —
-ONE launch per coded round, one per exact round-set, instead of one per
-(group, slot)), with ``drt_dist`` for the permute engine's neighbour
-statistics; on CPU they execute in interpret mode and are parity-tested
-against the jnp slab path and the per-slot kernel references.
+``repro.kernels``: every CODED round is ONE ``slab_encode_combine`` launch
+(in-kernel RNG + scale reconstruction + per-layer Gram accumulation +
+in-kernel DRT mixing math + combine + full-precision self term — the wire
+and decoded slabs never hit HBM), the exact path keeps its one
+``slab_combine`` launch per round-SET, and the permute engine uses
+``slab_quant_encode`` / ``slab_source_combine`` with ``drt_dist`` for its
+neighbour statistics; on CPU they execute in interpret mode and are
+parity-tested against the jnp slab path and the per-slot kernel references.
 
 Everything that crosses the agent boundary goes through a ``repro.comm``
 :class:`~repro.comm.WireCodec`: each agent encodes what it publishes once per
@@ -299,6 +308,98 @@ def _dequant_combine_slab_kernels(layout, A_off, wire):
     return layout.split(out)
 
 
+def _layout_col_maps(layout):
+    """The static per-column maps the fused encode kernels consume, in
+    (n_blocks, lane) form: scale segment, owning leaf, intra-leaf index."""
+    nb, lane = layout.n_blocks, layout.lane
+    return (
+        jnp.asarray(layout.col_scale_seg.reshape(nb, lane)),
+        jnp.asarray(layout.col_leaf.reshape(nb, lane)),
+        jnp.asarray(layout.col_idx.reshape(nb, lane)),
+    )
+
+
+def _fused_coded_round(
+    layout, regions, wire_codec, res, keys, C_r, metro_r, cfg, algorithm
+):
+    """ONE ``slab_encode_combine`` launch for this coded round: the kernel
+    derives the wire view in-kernel (int8: counter RNG + scale
+    reconstruction; bf16/f16: the cast round-trip; top-k: the jnp-thresholded
+    sent slab is passed in), accumulates the per-layer Gram matrices, runs
+    the DRT mixing math and writes ``A_off^T . dec + diag . self`` — the f32
+    wire and decoded neighbour slabs never exist in HBM.  Returns
+    ``(regions, res, A)``."""
+    from repro.kernels import slab_encode_combine
+
+    K = regions[0].shape[1]
+    bl = jnp.asarray(layout.block_layer)
+    mix = C_r if algorithm == "drt" else metro_r
+    common = dict(
+        algorithm=algorithm,
+        num_layers=layout.num_layers,
+        kappa=cfg.kappa,
+        N_clip=cfg.resolve_N(K),
+        weight_mode=cfg.weight_mode,
+        lane=layout.lane,
+    )
+    if isinstance(wire_codec, packing.TopKCodec):
+        wire, res = packing.slab_encode_batched(
+            wire_codec, layout, regions, res, keys
+        )
+        out, A = slab_encode_combine(
+            bl, layout.join(regions), (layout.join(wire),), mix,
+            mode="sent", **common,
+        )
+    elif isinstance(wire_codec, packing.Int8StochasticCodec):
+        scales = packing.slab_quant_scales(wire_codec, layout, regions)
+        w0, w1 = packing.leaf_key_words(layout, keys)
+        col_seg, col_leaf, col_idx = _layout_col_maps(layout)
+        out, A = slab_encode_combine(
+            bl, layout.join(regions),
+            (scales, col_seg, col_leaf, col_idx, w0, w1), mix,
+            mode="int8", **common,
+        )
+    else:  # bf16 / f16 cast codec
+        from repro.kernels import slab_cast_combine
+
+        mode = {"bfloat16": "bf16", "float16": "f16"}[
+            jnp.dtype(wire_codec.dtype).name
+        ]
+        out, A = slab_cast_combine(
+            bl, layout.join(regions), mix, dtype=mode, **common
+        )
+    return layout.split(out), res, A
+
+
+def _permute_quant_encode_kernels(layout, regions, codec, key):
+    """Per-shard kernel-backed int8 encode for the permute engine: the local
+    (D,) slab goes through ONE ``slab_quant_encode`` launch (in-kernel
+    counter RNG + per-column scale reconstruction) — no uniform field, no
+    f32 quantization temporaries.  Returns the same ``SlabQuant`` region
+    wire as ``packing.slab_encode``, bit for bit."""
+    from repro.kernels import slab_quant_encode
+
+    scales = packing.slab_quant_scales(codec, layout, regions)  # (n_segs,)
+    w0, w1 = packing.leaf_key_words(layout, key[None])  # (1, n_leaves) each
+    col_seg, col_leaf, col_idx = _layout_col_maps(layout)
+    q = slab_quant_encode(
+        scales[None], col_seg, col_leaf, col_idx, w0, w1,
+        layout.join(regions)[None],
+    )
+    return packing.SlabQuant(q=layout.split(q[0]), s=scales)
+
+
+def _fused_kernel_supported(wire_codec, algorithm) -> bool:
+    """Codecs whose coded round runs as one ``slab_encode_combine`` launch."""
+    if algorithm not in ("drt", "classical"):
+        return False
+    if isinstance(wire_codec, (packing.Int8StochasticCodec, packing.TopKCodec)):
+        return True
+    if isinstance(wire_codec, CastCodec):
+        return jnp.dtype(wire_codec.dtype).name in ("bfloat16", "float16")
+    return False
+
+
 def _combine_slab_per_slot(layout, A, regions):
     """PR 2's per-(group, slot) kernel combine — one ``weighted_combine``
     launch per segment.  Kept as the parity reference for the whole-slab
@@ -522,31 +623,33 @@ def gather_consensus_rounds(
             new_K = layout.combine_unpack(M, regions, like=psi_K)
         return new_K, A_last, codec_state if codec_state is not None else ()
 
+    fused_kernel = use_kernels and _fused_kernel_supported(wire_codec, algorithm)
+
     def coded_body(carry, xs):
         regions, res, _ = carry
         r, C_r, metro_r = xs
         keys = _agent_keys(jax.random.fold_in(rng, r), K)
-        # regions are slot-major: the agent axis being vmapped over is axis 1
-        wax = packing.wire_out_axes(wire_codec)
-        if stateful:
-            wire, res = jax.vmap(
-                lambda s, st, k: packing.slab_encode(wire_codec, layout, s, st, k),
-                in_axes=(1, 1, 0),
-                out_axes=(wax, 1),
-            )(regions, res, keys)
-        else:
-            wire, _ = jax.vmap(
-                lambda s, k: packing.slab_encode(wire_codec, layout, s, (), k),
-                in_axes=(1, 0),
-                out_axes=(wax, 0),
-            )(regions, keys)
+        if fused_kernel:
+            # ONE Pallas launch per coded round: encode + Gram + mixing +
+            # combine + self term, wire slabs never materialized in HBM
+            regions, res, A = _fused_coded_round(
+                layout, regions, wire_codec, res, keys, C_r, metro_r, cfg,
+                algorithm,
+            )
+            return (regions, res, A), None
+        # natively-batched encode over the agent axis (bit-identical wire to
+        # vmapping the per-agent two-phase oracle, without its transposes)
+        wire, res = packing.slab_encode_batched(
+            wire_codec, layout, regions, res, keys
+        )
         decoded = packing.slab_decode(wire_codec, layout, wire)  # f32 regions
         A = _slab_mixing(layout, decoded, C_r, cfg, algorithm, metro_r, L)
         eye = jnp.eye(K, dtype=A.dtype)
         A_off = A * (1.0 - eye)[None]
-        if use_kernels and isinstance(wire_codec, packing.Int8StochasticCodec):
-            off = _dequant_combine_slab_kernels(layout, A_off, wire)
-        elif use_kernels:
+        if use_kernels:
+            # codec outside the fused slab_encode_combine family (e.g. a
+            # custom cast dtype): keep the PR-4 whole-slab combine kernel
+            # rather than silently ignoring use_kernels
             off = _combine_slab_kernels(layout, A_off, decoded)
         else:
             off = layout.combine(A_off, decoded)
@@ -669,8 +772,10 @@ class PermuteConsensus:
     (D,) slab once per call, runs all ``rounds`` exchange rounds on it (the
     wire slab is one or two contiguous buffers per ``ppermute`` instead of one
     per leaf) and unpacks once; ``path="tree"`` is the per-leaf reference
-    oracle.  ``use_kernels`` swaps the slab statistics/combine inner loops for
-    the Pallas ``drt_dist`` / ``weighted_combine`` kernels.
+    oracle.  ``use_kernels`` swaps the slab inner loops for Pallas kernels:
+    ``slab_quant_encode`` for the int8 encode (in-kernel RNG + scale
+    reconstruction), ``drt_dist`` for the neighbour statistics and
+    ``slab_source_combine`` for the one-launch {self}+neighbours combine.
 
     With a ``codec`` the published slab/tree is encoded ONCE per round, the
     wire is ppermuted each exchange round and decoded on arrival; calling the
@@ -896,7 +1001,19 @@ class PermuteConsensus:
             topo, perms, inv_srcs, Cmat = self._round_ctx(start_round, r, static_ctx)
             if wire_codec is not None:
                 key = jax.random.fold_in(jax.random.fold_in(base_rng, r), my)
-                wire, res = packing.slab_encode(wire_codec, layout, regions, res, key)
+                if self.use_kernels and isinstance(
+                    wire_codec, packing.Int8StochasticCodec
+                ):
+                    # kernel-backed encode: ONE slab_quant_encode launch
+                    # (in-kernel RNG + scale reconstruction); bit-identical
+                    # wire to the jnp slab encode
+                    wire = _permute_quant_encode_kernels(
+                        layout, regions, wire_codec, key
+                    )
+                else:
+                    wire, res = packing.slab_encode(
+                        wire_codec, layout, regions, res, key
+                    )
                 # pin the compressed representation across the wire: without
                 # the barrier XLA hoists the f32 up-convert above the
                 # collective-permute, silently un-compressing it

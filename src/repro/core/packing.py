@@ -47,11 +47,27 @@ codecs on the regions:
   codec.
 * int8  -- absmax scales at the same granularity as the tree codec (per
   (leaf, slot) for stacked groups, per leaf otherwise) from static region
-  slices, the same per-leaf uniform draws, quantize/dequantize elementwise per
-  region: wire values bit-identical to ``Int8StochasticCodec``.
-* topk  -- per-leaf k-th-largest thresholds (``lax.top_k`` over static region
-  slices, exactly the tree rule) with the error-feedback residual carried as
-  regions; residuals match the tree codec bit for bit.
+  slices, the same per-leaf counter-based uniform draws
+  (:mod:`repro.comm.rng`), quantize/dequantize elementwise per region: wire
+  values bit-identical to ``Int8StochasticCodec``.
+* topk  -- per-leaf thresholds via the shared (subsampled) rule
+  ``repro.comm.codec.topk_threshold`` over static region slices, exactly the
+  tree rule, with the error-feedback residual carried as regions; residuals
+  match the tree codec bit for bit.
+
+Two encode layouts implement the same wire:
+
+* ``slab_encode`` — ONE agent's regions (the two-phase oracle; the permute
+  engine's per-shard path).  Engines used to ``vmap`` this over the agent
+  axis; the resulting transposes (``out_axes=1``) and per-leaf batching
+  dominated the coded round on CPU.
+* ``slab_encode_batched`` — the fused hot path: natively batched over the
+  agent axis of the slot-major regions (the agent axis stays where it
+  lives, axis 1), scales/uniforms/thresholds computed from static per-leaf
+  slices with NO gathers and NO transposes.  Wire bits (values, scales,
+  rounding decisions, EF residual) are identical to ``slab_encode`` by
+  construction — asserted leaf-for-leaf in ``tests/test_packing.py``.
+  (``slab_decode`` is batch-generic and serves both layouts.)
 
 Codecs without a slab fast path (``slab_codec_supported`` is False) — and
 parameter trees with any non-float leaf (``slab_template_supported`` is
@@ -75,8 +91,10 @@ from repro.comm.codec import (
     IdentityCodec,
     Int8StochasticCodec,
     TopKCodec,
-    _topk_count,
+    _topk_sample_plan,
+    topk_threshold,
 )
+from repro.comm.rng import counter_uniform, key_words, uniform_from_words
 from repro.utils.pytree import LayerPartition
 
 PyTree = Any
@@ -174,6 +192,41 @@ class SlabLayout:
         for p, (s, e) in enumerate(self.layer_slices):
             out[s // self.lane : e // self.lane] = p
         return out
+
+    @functools.cached_property
+    def col_leaf(self) -> np.ndarray:
+        """(D,) int32: FULL-tree flat leaf index owning each column (padding
+        columns inherit their slot segment's last float leaf).  Together with
+        :attr:`col_idx` this is the static map the fused encode kernels use
+        to reproduce the per-leaf counter RNG in-kernel: column ``c``'s
+        uniform is ``hash(key_words(leaf_key[col_leaf[c]]), col_idx[c])`` —
+        the same bits the tree codec draws for that element."""
+        return self._col_rng_maps[0]
+
+    @functools.cached_property
+    def col_idx(self) -> np.ndarray:
+        """(D,) uint32: each column's row-major linear element index within
+        its leaf (0 on padding columns; see :attr:`col_leaf`)."""
+        return self._col_rng_maps[1]
+
+    @functools.cached_property
+    def _col_rng_maps(self) -> tuple[np.ndarray, np.ndarray]:
+        leaf = np.empty(self.D, np.int32)
+        idx = np.zeros(self.D, np.uint32)
+        for grp in self.groups:
+            for j in range(grp.n_slots):
+                base = grp.col0 + j * grp.s_pad
+                for plan in grp.float_leaves:
+                    c0 = base + plan.col0
+                    leaf[c0 : c0 + plan.width] = plan.flat_idx
+                    idx[c0 : c0 + plan.width] = j * plan.width + np.arange(
+                        plan.width, dtype=np.uint32
+                    )
+                if grp.s_pad > grp.s:
+                    leaf[base + grp.s : base + grp.s_pad] = grp.float_leaves[
+                        -1
+                    ].flat_idx
+        return leaf, idx
 
     # -- batch handling -------------------------------------------------------
 
@@ -295,12 +348,13 @@ class SlabLayout:
         """U[0,1) draws in region layout, bit-matching the tree int8 codec:
         the key is split over ALL template leaves (floats and passthroughs
         alike, exactly like ``Int8StochasticCodec.encode``) and each float
-        leaf's draw is packed into its columns.  Padding columns get 0."""
+        leaf's counter-based draw (:func:`repro.comm.rng.counter_uniform`)
+        is packed into its columns.  Padding columns get 0."""
         keys = jax.random.split(key, self.n_tree_leaves)
         regions = []
         for grp in self.groups:
             arrays = [
-                jax.random.uniform(keys[p.flat_idx], p.shape, F32)
+                counter_uniform(keys[p.flat_idx], p.shape)
                 for p in grp.float_leaves
             ]
             regions.append(self._pack_group_arrays(grp, arrays, ()))
@@ -616,15 +670,41 @@ def wire_out_axes(codec):
     return 1
 
 
-def _scale_cols(layout: SlabLayout, grp: GroupPlan, s_seg: jax.Array):
-    """Broadcast per-segment scales to a (n_slots, *batch, s_pad) array.
+def _leaf_scale(plan: LeafPlan, grp: GroupPlan, s_seg: jax.Array):
+    """One leaf's int8 scales, broadcastable against its ``(n_slots, *batch,
+    width)`` region slice.  ``s_seg``: (*batch, n_scale_segs) in segment-id
+    order.  Static slices only — no per-column gather."""
+    n = grp.n_slots if plan.scale_per_slot else 1
+    s = jax.lax.slice_in_dim(
+        s_seg, plan.scale_seg0, plan.scale_seg0 + n, axis=-1
+    )  # (*batch, n | 1)
+    return jnp.moveaxis(s, -1, 0)[..., None]  # (n | 1, *batch, 1)
 
-    ``s_seg``: (*batch, n_scale_segs) — e.g. (n_scale_segs,) inside the
-    per-agent encode, (K, n_scale_segs) for the batched decode."""
-    idx = layout.col_scale_seg[grp.col0 : grp.col0 + grp.width].reshape(
-        grp.n_slots, grp.s_pad
-    )
-    return jnp.moveaxis(jnp.take(s_seg, jnp.asarray(idx), axis=-1), -2, 0)
+
+def slab_quant_scales(codec, layout: SlabLayout, regions: tuple) -> jax.Array:
+    """Per-(leaf, slot) absmax int8 scales in segment-id order, batched over
+    any agent axes of the slot-major regions: ``(*batch, n_scale_segs)`` f32.
+    Same f32 max reductions as the tree codec — scales are bit-identical."""
+    scales = []
+    for grp, region in zip(layout.groups, regions):
+        for plan, piece in _leaf_slices(grp, region):
+            x = piece.astype(F32)  # (n_slots, *batch, width)
+            if plan.scale_per_slot:
+                absmax = jnp.moveaxis(jnp.max(jnp.abs(x), axis=-1), 0, -1)
+            else:
+                absmax = jnp.max(jnp.abs(x), axis=(0, -1))[..., None]
+            scales.append(jnp.where(absmax > 0, absmax / codec.qmax, 1.0))
+    return jnp.concatenate(scales, axis=-1)
+
+
+def _pad_leaf_parts(grp: GroupPlan, parts: list, end: int, dtype) -> jax.Array:
+    """Concatenate per-leaf wire slices back into a full (..., s_pad) region,
+    zero-filling the lane padding."""
+    pad = grp.s_pad - end
+    if pad:
+        ref = parts[-1]
+        parts.append(jnp.zeros((*ref.shape[:-1], pad), dtype))
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=-1)
 
 
 def slab_encode(codec, layout: SlabLayout, regions: tuple, state, key):
@@ -632,7 +712,9 @@ def slab_encode(codec, layout: SlabLayout, regions: tuple, state, key):
 
     Semantics (scale/threshold granularity, rng derivation, residual updates)
     are bit-identical to the tree codec's ``encode`` — see the per-codec notes
-    in the module docstring.  Engines vmap this over the agent axis.
+    in the module docstring.  This is the two-phase oracle (and the permute
+    engine's per-shard path); the gather engine's round loop runs the
+    natively-batched :func:`slab_encode_batched` instead of vmapping it.
     """
     if codec is None or isinstance(codec, IdentityCodec):
         return regions, state
@@ -642,25 +724,23 @@ def slab_encode(codec, layout: SlabLayout, regions: tuple, state, key):
         if key is None:
             raise ValueError("int8 codec needs an rng key (stochastic rounding)")
         uniforms = layout.pack_uniforms(key)
-        scales = []  # per scale segment, in segment-id order
-        for grp, region in zip(layout.groups, regions):
-            for plan, piece in _leaf_slices(grp, region):
-                x = piece.astype(F32)
-                if plan.scale_per_slot:
-                    absmax = jnp.max(jnp.abs(x), axis=-1)  # (n_slots,)
-                else:
-                    absmax = jnp.max(jnp.abs(x)).reshape(1)
-                scales.append(jnp.where(absmax > 0, absmax / codec.qmax, 1.0))
-        s_seg = jnp.concatenate(scales)  # (n_scale_segs,) in id order
+        s_seg = slab_quant_scales(codec, layout, regions)  # (n_scale_segs,)
         qs = []
         for grp, region, u in zip(layout.groups, regions, uniforms):
-            s_cols = _scale_cols(layout, grp, s_seg)
-            q = jnp.clip(
-                jnp.floor(region.astype(F32) / s_cols + u),
-                -codec.qmax,
-                codec.qmax,
-            )
-            qs.append(q.astype(jnp.int8))
+            parts, end = [], 0
+            for plan, piece in _leaf_slices(grp, region):
+                up = jax.lax.slice_in_dim(
+                    u, plan.col0, plan.col0 + plan.width, axis=-1
+                )
+                s = _leaf_scale(plan, grp, s_seg)
+                q = jnp.clip(
+                    jnp.floor(piece.astype(F32) / s + up),
+                    -codec.qmax,
+                    codec.qmax,
+                )
+                parts.append(q.astype(jnp.int8))
+                end = plan.col0 + plan.width
+            qs.append(_pad_leaf_parts(grp, parts, end, jnp.int8))
         return SlabQuant(q=tuple(qs), s=s_seg), state
     if isinstance(codec, TopKCodec):
         if state is None or (isinstance(state, tuple) and state == ()):
@@ -669,27 +749,21 @@ def slab_encode(codec, layout: SlabLayout, regions: tuple, state, key):
         for grp, region, res in zip(layout.groups, regions, state):
             y = region.astype(F32) + res
             ay = jnp.abs(y)
-            # per-leaf k-th-largest |y| (the tree codec's exact rule: one
-            # threshold per leaf, scan slots included, ties all sent)
+            # per-leaf threshold via the tree codec's shared (subsampled)
+            # rule: one threshold per leaf, scan slots included, ties all sent
             sent_parts = []
             prev_end = 0
             for plan, piece in _leaf_slices(grp, ay):
-                k = _topk_count(plan.shape, codec.frac)
-                thresh = jax.lax.top_k(piece.reshape(-1), k)[0][-1]
+                thresh = topk_threshold(
+                    piece.reshape(-1), codec.frac, codec.sample
+                )
                 ys = jax.lax.slice_in_dim(
                     y, plan.col0, plan.col0 + plan.width, axis=-1
                 )
                 mask = (piece >= thresh) & (piece > 0.0)
                 sent_parts.append(jnp.where(mask, ys, 0.0))
                 prev_end = plan.col0 + plan.width
-            sent = (
-                sent_parts[0]
-                if len(sent_parts) == 1
-                else jnp.concatenate(sent_parts, axis=-1)
-            )
-            pad = grp.s_pad - prev_end
-            if pad:
-                sent = jnp.pad(sent, [(0, 0)] * (sent.ndim - 1) + [(0, pad)])
+            sent = _pad_leaf_parts(grp, sent_parts, prev_end, F32)
             wire.append(sent)
             new_state.append(y - sent)
         return tuple(wire), tuple(new_state)
@@ -697,7 +771,9 @@ def slab_encode(codec, layout: SlabLayout, regions: tuple, state, key):
 
 
 def slab_decode(codec, layout: SlabLayout, wire) -> tuple:
-    """f32 region reconstruction of an encoded wire (any leading batch)."""
+    """f32 region reconstruction of an encoded wire (any leading batch):
+    static per-leaf slices and broadcasts only, so XLA fuses the dequant into
+    its consumers instead of materializing a (K, D) scale gather."""
     if codec is None or isinstance(codec, (IdentityCodec, TopKCodec)):
         return wire
     if isinstance(codec, CastCodec):
@@ -705,7 +781,109 @@ def slab_decode(codec, layout: SlabLayout, wire) -> tuple:
     if isinstance(codec, Int8StochasticCodec):
         out = []
         for grp, q in zip(layout.groups, wire.q):
-            s_cols = _scale_cols(layout, grp, wire.s)
-            out.append(q.astype(F32) * s_cols)
+            parts, end = [], 0
+            for plan, piece in _leaf_slices(grp, q):
+                s = _leaf_scale(plan, grp, wire.s)
+                parts.append(piece.astype(F32) * s)
+                end = plan.col0 + plan.width
+            out.append(_pad_leaf_parts(grp, parts, end, F32))
         return tuple(out)
+    raise NotImplementedError(f"no slab fast path for codec {codec!r}")
+
+
+# ---------------------------------------------------------------------------
+# fused batched encode: the gather engine's coded-round hot path
+# ---------------------------------------------------------------------------
+
+
+def leaf_key_words(layout: SlabLayout, keys_K: jax.Array):
+    """Per-(agent, leaf) counter-RNG key words ``(w0, w1)``, each
+    ``(K, n_tree_leaves)`` uint32 — the batched form of the tree codec's
+    per-leaf key split (``split(agent_key, n_tree_leaves)`` per agent)."""
+    leaf_keys = jax.vmap(
+        lambda k: jax.random.split(k, layout.n_tree_leaves)
+    )(keys_K)
+    return key_words(leaf_keys)
+
+
+def _leaf_uniforms(plan: LeafPlan, grp: GroupPlan, w0, w1) -> jax.Array:
+    """One leaf's counter uniforms in batched region layout ``(n_slots, K,
+    width)``: the same (key word, element index) hash the tree codec draws,
+    computed in place — no per-agent vmap, no packing pass."""
+    idx = (
+        jnp.arange(grp.n_slots, dtype=jnp.uint32)[:, None, None]
+        * np.uint32(plan.width)
+        + jnp.arange(plan.width, dtype=jnp.uint32)[None, None, :]
+    )
+    lw0 = w0[:, plan.flat_idx][None, :, None]  # (1, K, 1)
+    lw1 = w1[:, plan.flat_idx][None, :, None]
+    return uniform_from_words(lw0, lw1, idx)
+
+
+def slab_encode_batched(
+    codec, layout: SlabLayout, regions: tuple, state, keys_K
+):
+    """Encode ALL agents in one natively-batched pass over the slot-major
+    ``(n_slots, K, s_pad)`` regions.  Returns ``(wire, new_state)``.
+
+    Bit-identical to ``vmap(slab_encode)`` over the agent axis (and hence to
+    the tree codec) — same scales, same counter uniforms, same thresholds,
+    same EF residual — but with the agent axis left in place: no
+    ``out_axes=1`` transposes, no per-agent uniform packing, no scale
+    gathers.  ``keys_K``: the ``(K,)`` per-agent round keys
+    (``fold_in(round_key, agent)``).
+    """
+    if codec is None or isinstance(codec, IdentityCodec):
+        return regions, state
+    if isinstance(codec, CastCodec):
+        return tuple(r.astype(codec.dtype) for r in regions), state
+    if isinstance(codec, Int8StochasticCodec):
+        if keys_K is None:
+            raise ValueError("int8 codec needs an rng key (stochastic rounding)")
+        w0, w1 = leaf_key_words(layout, keys_K)
+        s_seg = slab_quant_scales(codec, layout, regions)  # (K, n_segs)
+        qs = []
+        for grp, region in zip(layout.groups, regions):
+            parts, end = [], 0
+            for plan, piece in _leaf_slices(grp, region):
+                u = _leaf_uniforms(plan, grp, w0, w1)
+                s = _leaf_scale(plan, grp, s_seg)
+                q = jnp.clip(
+                    jnp.floor(piece.astype(F32) / s + u),
+                    -codec.qmax,
+                    codec.qmax,
+                )
+                parts.append(q.astype(jnp.int8))
+                end = plan.col0 + plan.width
+            qs.append(_pad_leaf_parts(grp, parts, end, jnp.int8))
+        return SlabQuant(q=tuple(qs), s=s_seg), state
+    if isinstance(codec, TopKCodec):
+        K = regions[0].shape[1]
+        if state is None or (isinstance(state, tuple) and state == ()):
+            state = tuple(
+                jnp.zeros((g.n_slots, K, g.s_pad), F32) for g in layout.groups
+            )
+        wire, new_state = [], []
+        for grp, region, res in zip(layout.groups, regions, state):
+            y = region.astype(F32) + res
+            ay = jnp.abs(y)
+            sent_parts, prev_end = [], 0
+            for plan, piece in _leaf_slices(grp, ay):  # (n_slots, K, width)
+                n_el = grp.n_slots * plan.width
+                stride, k = _topk_sample_plan(n_el, codec.frac, codec.sample)
+                # the SAME elements the tree rule samples (flat[::stride]),
+                # addressed in (slot, column) coordinates
+                ii = np.arange(0, n_el, stride)
+                sub = piece[ii // plan.width, :, ii % plan.width]  # (m, K)
+                thresh = jax.lax.top_k(sub.T, k)[0][..., -1]  # (K,)
+                ys = jax.lax.slice_in_dim(
+                    y, plan.col0, plan.col0 + plan.width, axis=-1
+                )
+                mask = (piece >= thresh[None, :, None]) & (piece > 0.0)
+                sent_parts.append(jnp.where(mask, ys, 0.0))
+                prev_end = plan.col0 + plan.width
+            sent = _pad_leaf_parts(grp, sent_parts, prev_end, F32)
+            wire.append(sent)
+            new_state.append(y - sent)
+        return tuple(wire), tuple(new_state)
     raise NotImplementedError(f"no slab fast path for codec {codec!r}")

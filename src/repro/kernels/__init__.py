@@ -9,6 +9,11 @@ mode on CPU; see EXPERIMENTS.md §Perf for the HBM-traffic math per kernel).
   slab_combine    whole-slab per-layer mixing: ONE grid launch per round
   slab_dequant_combine  whole-slab fused int8 dequant+combine, one launch
   slab_source_combine   whole-slab {self}+neighbour combine (permute engine)
+  slab_encode_combine   a WHOLE coded round (encode + Gram + DRT mixing +
+                        combine + self term) in ONE launch per round
+  slab_quant_encode     fused int8 encode: in-kernel counter RNG + scale
+                        reconstruction + stochastic round, one launch
+  slab_cast_combine     bf16/f16 cast-combine round, wire never in HBM
   selective_scan  chunked Mamba-1 recurrence, VMEM-carried state
   flash_attention online-softmax attention, VMEM score tiles
 """
@@ -20,8 +25,11 @@ from repro.kernels.ops import (
     int8_dequantize,
     int8_quantize,
     selective_scan,
+    slab_cast_combine,
     slab_combine,
     slab_dequant_combine,
+    slab_encode_combine,
+    slab_quant_encode,
     slab_source_combine,
     weighted_combine,
 )
@@ -37,6 +45,9 @@ __all__ = [
     "slab_combine",
     "slab_dequant_combine",
     "slab_source_combine",
+    "slab_encode_combine",
+    "slab_quant_encode",
+    "slab_cast_combine",
     "selective_scan",
     "flash_attention",
 ]

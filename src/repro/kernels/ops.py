@@ -17,6 +17,9 @@ from repro.kernels.quantize import dequant_combine as _dequant_combine
 from repro.kernels.quantize import int8_dequantize as _int8_dequantize
 from repro.kernels.quantize import int8_quantize as _int8_quantize
 from repro.kernels.selective_scan import selective_scan as _selective_scan
+from repro.kernels.slab_codec import slab_cast_combine as _slab_cast_combine
+from repro.kernels.slab_codec import slab_encode_combine as _slab_encode_combine
+from repro.kernels.slab_codec import slab_quant_encode as _slab_quant_encode
 from repro.kernels.slab_combine import slab_combine as _slab_combine
 from repro.kernels.slab_combine import slab_dequant_combine as _slab_dequant_combine
 from repro.kernels.slab_combine import slab_source_combine as _slab_source_combine
@@ -74,6 +77,32 @@ def slab_source_combine(w_blocks, srcs, *, interpret: bool | None = None):
     """Per-layer weighted combine over N stacked source slabs, ONE launch."""
     return _slab_source_combine(
         w_blocks, srcs, interpret=_INTERPRET if interpret is None else interpret
+    )
+
+
+def slab_encode_combine(block_layer, slab, wire_operands, mix, *, interpret: bool | None = None, **kw):
+    """ONE coded consensus round (encode + stats + mixing + combine + self)
+    on the packed (K, D) slab in ONE grid launch."""
+    return _slab_encode_combine(
+        block_layer, slab, wire_operands, mix,
+        interpret=_INTERPRET if interpret is None else interpret, **kw,
+    )
+
+
+def slab_quant_encode(scales, col_seg, col_leaf, col_idx, w0, w1, slab, *, interpret: bool | None = None):
+    """Fused int8 encode (in-kernel counter RNG + scale reconstruction +
+    stochastic round) of a packed (K, D) slab, ONE launch."""
+    return _slab_quant_encode(
+        scales, col_seg, col_leaf, col_idx, w0, w1, slab,
+        interpret=_INTERPRET if interpret is None else interpret,
+    )
+
+
+def slab_cast_combine(block_layer, slab, mix, *, dtype="bf16", interpret: bool | None = None, **kw):
+    """bf16/f16 cast-combine coded round in ONE launch (wire never in HBM)."""
+    return _slab_cast_combine(
+        block_layer, slab, mix, dtype=dtype,
+        interpret=_INTERPRET if interpret is None else interpret, **kw,
     )
 
 

@@ -378,7 +378,9 @@ def main(argv=None) -> None:
     ap.add_argument(
         "--codec", default=None,
         help="wire codec for the consensus exchange: identity|bf16|f16|int8|"
-             "topk[:frac] (default: exact f32 exchange)",
+             "topk[:frac[:sample]] (default: exact f32 exchange; "
+             "topk:0.1:0 = exact full-leaf thresholds instead of the "
+             "subsampled default)",
     )
     ap.add_argument(
         "--schedule", default=None,

@@ -390,3 +390,71 @@ def test_stateless_train_state_restores_empty_comm(tmp_path):
     save_train_state(str(tmp_path), state)
     tree, _ = restore_train_state(str(tmp_path))
     assert tree["comm"] == ()
+
+
+# ---------------------------------------------------------------------------
+# counter-based rounding RNG (repro.comm.rng)
+# ---------------------------------------------------------------------------
+
+
+def test_counter_uniform_range_determinism_and_key_sensitivity():
+    from repro.comm import counter_uniform
+
+    key = jax.random.key(11)
+    u = counter_uniform(key, (64, 37))
+    assert u.dtype == jnp.float32 and u.shape == (64, 37)
+    assert float(u.min()) >= 0.0 and float(u.max()) < 1.0
+    # deterministic per (key, index)
+    np.testing.assert_array_equal(
+        np.asarray(u), np.asarray(counter_uniform(key, (64, 37)))
+    )
+    # a different key decorrelates every element
+    v = counter_uniform(jax.random.key(12), (64, 37))
+    assert float(jnp.mean(u == v)) < 0.01
+    # reshaping only reshapes: element i is a pure function of (key, i)
+    np.testing.assert_array_equal(
+        np.asarray(u).reshape(-1), np.asarray(counter_uniform(key, (64 * 37,)))
+    )
+
+
+def test_counter_uniform_is_statistically_flat():
+    """Mean/variance close to U[0,1) and no index-parity structure — what
+    unbiased stochastic rounding actually needs from the generator."""
+    from repro.comm import counter_uniform
+
+    u = np.asarray(counter_uniform(jax.random.key(3), (1 << 16,)))
+    assert abs(u.mean() - 0.5) < 0.01
+    assert abs(u.var() - 1.0 / 12.0) < 0.01
+    # adjacent counters (even/odd indices) must not correlate
+    corr = np.corrcoef(u[0::2], u[1::2])[0, 1]
+    assert abs(corr) < 0.02
+
+
+def test_topk_sampled_threshold_sends_about_frac_and_conserves_mass():
+    """Leaves above the ``sample`` cutoff use the subsampled threshold: the
+    sent fraction concentrates around ``frac`` and the EF residual still
+    conserves the offered signal exactly."""
+    x = {"a": jax.random.normal(jax.random.key(9), (64, 512))}  # 32768 > 1024
+    c = TopKCodec(frac=0.1, sample=1024)
+    wire, st = c.encode(x, c.init_state(x), None)
+    frac_sent = float(jnp.mean(wire["a"] != 0.0))
+    assert 0.05 < frac_sent < 0.2, frac_sent  # ~0.1 +- sampling noise
+    np.testing.assert_allclose(
+        np.asarray(wire["a"] + st["a"]), np.asarray(x["a"]), rtol=0, atol=0
+    )
+    # sample=0 restores the exact rule
+    exact = TopKCodec(frac=0.1, sample=0)
+    wire_e, _ = exact.encode(x, exact.init_state(x), None)
+    k = int(np.ceil(0.1 * x["a"].size))
+    assert int(jnp.sum(wire_e["a"] != 0)) <= k + 64  # ties only
+
+
+def test_make_codec_parses_topk_sample_arg():
+    c = make_codec("topk:0.2:0")
+    assert c.frac == 0.2 and c.sample == 0
+    c2 = make_codec("topk:0.1:512")
+    assert c2.frac == 0.1 and c2.sample == 512
+    with pytest.raises(ValueError):
+        make_codec("topk:0.1:-3")
+    with pytest.raises(ValueError):
+        TopKCodec(frac=0.1, sample=-1)

@@ -239,9 +239,11 @@ def test_slab_source_combine_matches_jnp():
 
 def test_use_kernels_issues_one_pallas_launch_per_round():
     """The acceptance probe: with use_kernels=True the gather round-set
-    issues O(1) Pallas launches per round — exactly 1 per coded round, and 1
-    per round-SET on the exact Gram path — independent of the model's
-    (groups x slots) count.  The per-slot reference pays one per segment."""
+    issues O(1) Pallas launches per round — exactly ONE ``slab_encode_combine``
+    per coded round (encode, stats, mixing, combine AND the self term all in
+    that one launch, for EVERY codec incl. top-k), and 1 per round-SET on the
+    exact Gram path — independent of the model's (groups x slots) count.  The
+    per-slot reference pays one per segment."""
     from repro.core import DRTConfig, gather_consensus_rounds, ring
     from repro.core.consensus import _combine_slab_per_slot
     from repro.utils.dispatch import count_pallas_launches
@@ -253,7 +255,9 @@ def test_use_kernels_issues_one_pallas_launch_per_round():
     assert n_segments > 1  # the claim is non-trivial for this model
 
     for rounds in (3, 8):
-        for codec, per_round in ((None, None), ("bf16", 1), ("int8", 1)):
+        for codec, per_round in (
+            (None, None), ("bf16", 1), ("int8", 1), ("topk:0.25", 1),
+        ):
             n = count_pallas_launches(
                 lambda pK, codec=codec, rounds=rounds: gather_consensus_rounds(
                     part, pK, C, DRTConfig(), rounds=rounds, codec=codec,
@@ -274,6 +278,97 @@ def test_use_kernels_issues_one_pallas_launch_per_round():
         lambda r: _combine_slab_per_slot(layout, A, r), regions
     )
     assert n_ref == n_segments
+
+
+# ---------------------------------------------------------------------------
+# fused encode -> combine coded-round kernels (slab_codec.py)
+# ---------------------------------------------------------------------------
+
+
+def test_slab_quant_encode_kernel_bitwise_matches_jnp_encode():
+    """The standalone int8 encode kernel (in-kernel counter RNG + one-hot
+    scale reconstruction) reproduces the jnp batched slab encode bit for
+    bit — same uniforms, same scales, same rounding decisions."""
+    from repro.core import packing
+    from repro.core.consensus import _agent_keys, _layout_col_maps
+    from repro.comm import make_codec
+    from repro.kernels import slab_quant_encode
+
+    K = 4
+    pK, part, layout = _slab_setup(K)
+    regions = layout.pack_regions(pK)
+    codec = make_codec("int8")
+    keys = _agent_keys(jax.random.key(5), K)
+    wire, _ = packing.slab_encode_batched(codec, layout, regions, (), keys)
+    scales = packing.slab_quant_scales(codec, layout, regions)
+    w0, w1 = packing.leaf_key_words(layout, keys)
+    col_seg, col_leaf, col_idx = _layout_col_maps(layout)
+    q_kernel = slab_quant_encode(
+        scales, col_seg, col_leaf, col_idx, w0, w1, layout.join(regions)
+    )
+    assert q_kernel.dtype == jnp.int8
+    q_jnp = layout.join(
+        tuple(q.astype(jnp.float32) for q in wire.q)
+    ).astype(jnp.int8)
+    np.testing.assert_array_equal(np.asarray(q_kernel), np.asarray(q_jnp))
+    np.testing.assert_array_equal(np.asarray(scales), np.asarray(wire.s))
+
+
+@pytest.mark.parametrize("algorithm", ["drt", "classical"])
+@pytest.mark.parametrize("codec", ["bf16", "f16", "int8", "topk:0.25"])
+def test_slab_encode_combine_round_matches_jnp_round(codec, algorithm):
+    """One fused launch per coded round == the jnp coded round (encode,
+    stats, mixing, off-diagonal combine, full-precision self term), for every
+    kernel-supported codec x algorithm."""
+    from repro.core import DRTConfig, gather_consensus_rounds, ring
+
+    K = 4
+    pK, part, layout = _slab_setup(K)
+    topo = ring(K)
+    C = jnp.asarray(topo.c_matrix(), jnp.float32)
+    metro = jnp.asarray(topo.metropolis(), jnp.float32)
+    rng = jax.random.key(3)
+    outs, As, sts = {}, {}, {}
+    for use_kernels in (False, True):
+        outs[use_kernels], As[use_kernels], sts[use_kernels] = (
+            gather_consensus_rounds(
+                part, pK, C, DRTConfig(), rounds=3, codec=codec, rng=rng,
+                algorithm=algorithm, metropolis=metro, layout=layout,
+                use_kernels=use_kernels,
+            )
+        )
+    assert _region_err(
+        jax.tree.leaves(outs[True]), jax.tree.leaves(outs[False])
+    ) < 1e-5
+    np.testing.assert_allclose(
+        np.asarray(As[True]), np.asarray(As[False]), atol=1e-6
+    )
+    if sts[True] != ():  # top-k EF residual rides outside the kernel
+        assert _region_err(
+            jax.tree.leaves(sts[True]), jax.tree.leaves(sts[False])
+        ) == 0.0
+
+
+def test_permute_quant_encode_kernel_bitwise_matches_slab_encode():
+    """The permute engine's kernel-backed per-shard int8 encode returns the
+    same SlabQuant wire as the jnp per-agent slab encode."""
+    from repro.core import packing
+    from repro.core.consensus import _permute_quant_encode_kernels
+    from repro.comm import make_codec
+
+    pK, part, layout = _slab_setup(1)
+    single = jax.tree.map(lambda x: x[0], pK)
+    regions = layout.pack_regions(single)
+    codec = make_codec("int8")
+    key = jax.random.key(9)
+    wire_jnp, _ = packing.slab_encode(codec, layout, regions, (), key)
+    wire_k = _permute_quant_encode_kernels(layout, regions, codec, key)
+    np.testing.assert_array_equal(
+        np.asarray(wire_k.s), np.asarray(wire_jnp.s)
+    )
+    for a, b in zip(wire_k.q, wire_jnp.q):
+        assert a.dtype == b.dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_selective_scan_matches_model_impl():
