@@ -31,6 +31,13 @@ reviewed act), and FAILS (exit 1) when any tracked metric regresses:
   many_steps_speedup  the donated multi-step driver's steps/s gain over
                       per-step dispatch >= tracked * (1 - threshold), and
                       never below break-even.
+  telemetry_overhead_ratio
+                      enabled/disabled us_per_call of the exact DRT slab
+                      round-set with in-graph consensus telemetry
+                      (repro.obs).  HARD absolute ceiling 1.05 on top of
+                      the tracked-relative bound: "near-free when enabled"
+                      is part of the observability contract, not a drift
+                      budget.
 
 Untimed rows (permute-engine wire-volume rows, tagged ``"untimed": true``)
 are excluded from every computation.  On failure the gate prints the full
@@ -85,6 +92,8 @@ def collect_metrics(doc) -> list[tuple[str, float, str]]:
         out.append((f"pallas_launches[{codec}]", float(n), "down"))
     tm = doc.get("train_many_steps") or {}
     out.append(("many_steps_speedup", tm.get("speedup_many_steps"), "up"))
+    tl = doc.get("telemetry") or {}
+    out.append(("telemetry_overhead_ratio", tl.get("overhead_ratio"), "down"))
     return out
 
 
@@ -158,6 +167,11 @@ def main(argv=None) -> int:
         if name == "many_steps_speedup" and fresh_v <= 1.0:
             ok = False
             bound = max(bound, 1.0)
+        # telemetry must stay near-free whatever the tracked margin: the
+        # enabled round-set may cost at most 5% over the disabled one
+        if name == "telemetry_overhead_ratio":
+            bound = min(bound, 1.05)
+            ok = fresh_v <= bound
         table.append((name, tracked_v, fresh_v, bound, "OK" if ok else "REGRESSION"))
         failed = failed or not ok
 

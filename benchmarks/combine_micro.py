@@ -21,6 +21,11 @@ PR 4 adds the *orchestration* metrics around the rounds:
                      (``make_many_steps`` scanning local-step + consensus)
                      vs per-step jitted dispatch at 8 steps/call.
 
+PR 6 adds ``telemetry``: us/call of the exact DRT slab round-set with
+in-graph consensus telemetry (``obs=ObsConfig()``) vs disabled — the
+near-free-when-enabled half of the observability contract (the
+zero-cost-when-disabled half is a jaxpr-identity test).
+
 Permute-engine rows carry the engine-specific wire volume only by default;
 timing one needs a multi-device mesh, so those rows are tagged
 ``"untimed": true`` (instead of a null ``us_per_call``) and excluded from
@@ -343,6 +348,41 @@ def run_trace_compile(K: int = 16, rounds: int = SCAN_ROUNDS, codecs=(None, "bf1
     return rows
 
 
+def run_telemetry_overhead(K: int = 16, rounds: int = ROUNDS):
+    """Runtime cost of the in-graph telemetry (repro.obs): interleaved
+    medians of the exact DRT slab round-set with ``obs=None`` (must trace to
+    the pre-telemetry program — asserted in tests/test_obs.py) vs
+    ``obs=ObsConfig()`` (per-round ConsensusMetrics ride the scan ys).  The
+    enabled path reads disagreement/DRT distances off the carried Gram
+    recurrence, so the ratio should stay ~1.0; check_regression.py hard-gates
+    it below 1.05."""
+    from repro.obs.metrics import ObsConfig
+
+    pK = _model_stack(jax.random.key(0), K)
+    template = jax.tree.map(lambda x: x[0], pK)
+    part = LayerPartition.build(template)
+    layout = build_slab_layout(part, template)
+    topo = make_topology("ring", K)
+    C = jnp.asarray(topo.c_matrix(), jnp.float32)
+    metro = jnp.asarray(topo.metropolis(), jnp.float32)
+    fns = {
+        name: jax.jit(
+            lambda pK, obs=obs: gather_consensus_rounds(
+                part, pK, C, DRTConfig(), rounds=rounds, algorithm="drt",
+                metropolis=metro, layout=layout, obs=obs,
+            )[0]
+        )
+        for name, obs in (("disabled", None), ("enabled", ObsConfig()))
+    }
+    times = _time_paired(fns, pK, iters=15)
+    return dict(
+        rounds=rounds,
+        us_disabled=times["disabled"] * 1e6,
+        us_enabled=times["enabled"] * 1e6,
+        overhead_ratio=times["enabled"] / times["disabled"],
+    )
+
+
 def run_dispatch_counts(K: int = 16, rounds: int = ROUNDS):
     """Static Pallas-launch counts of one ``use_kernels=True`` round-set:
     the whole-slab batched kernels issue ONE launch per coded round (and one
@@ -496,6 +536,7 @@ def write_bench_json(
         "trace_compile": {"rounds": SCAN_ROUNDS, "rows": run_trace_compile(K=K)},
         "dispatch": {"rounds": ROUNDS, "rows": run_dispatch_counts(K=K)},
         "train_many_steps": run_train_chunking(),
+        "telemetry": run_telemetry_overhead(K=K),
     }
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)
@@ -530,6 +571,10 @@ def main():
     print(f"\nmulti-step driver ({tm['steps_per_call']} steps/call, {tm['model']}): "
           f"{tm['steps_per_s_single']:.0f} -> {tm['steps_per_s_chunked']:.0f} steps/s "
           f"({tm['speedup_many_steps']:.2f}x)")
+    tl = doc["telemetry"]
+    print(f"telemetry overhead (exact drt slab, {tl['rounds']} rounds): "
+          f"{tl['us_disabled']:.0f}us off -> {tl['us_enabled']:.0f}us on "
+          f"({tl['overhead_ratio']:.3f}x)")
     rows = run(K=16)
     print()
     print(f"{'topology':10s} {'algo':>9s} {'us tree':>9s} {'us slab':>9s} {'x':>5s} "

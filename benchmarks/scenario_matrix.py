@@ -13,6 +13,14 @@ Each cell trains the same small MLP from the same init through
 loss, test accuracy and parameter disagreement; per (schedule, codec) a
 ``gap`` row compares classical to DRT disagreement.
 
+The ``disagreement`` column is the in-graph telemetry quantity: ``tr.epoch``
+reads ``mean_k |x_k - xbar|^2`` off the :class:`repro.obs.ConsensusMetrics`
+emitted by the consensus round-set (the Gram-recurrence diagonal), so this
+benchmark, ``launch.train --metrics-jsonl`` and the tests all report THE
+SAME number from the same code path — no ad-hoc recomputation here.  The
+``disagreement_ratio`` gap rows are invariant to the mean-vs-sum convention
+(both cells divide by the same K).
+
 Run:  PYTHONPATH=src python benchmarks/scenario_matrix.py [--fast]
 Writes ``results/scenario_matrix.json``.
 """

@@ -40,7 +40,10 @@ def collective_bytes_per_step(
     wire_bytes received per agent.  permute engine: one ppermute per exchange
     round => n_rounds x wire_bytes.
     """
-    from repro.core.consensus import permutation_decomposition  # lazy: no cycle
+    from repro.core.consensus import (  # lazy: no cycle
+        matching_decomposition,
+        permutation_decomposition,
+    )
 
     resolved = make_codec(codec)
     if isinstance(template, int):
@@ -58,7 +61,10 @@ def collective_bytes_per_step(
         return {"recv_bytes": (K - 1) * per_round, "rounds": 1}
     decomp = permutation_decomposition(topology)
     if decomp is None:
-        return {"recv_bytes": (K - 1) * per_round, "rounds": 1}
+        # what the engine actually runs for decomposition-less graphs (chain,
+        # churn-realized topologies): one ppermute per greedy matching —
+        # keeps the analytic number equal to the runtime wire counters
+        decomp = matching_decomposition(topology)
     return {"recv_bytes": len(decomp) * per_round, "rounds": len(decomp)}
 
 

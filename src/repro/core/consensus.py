@@ -86,6 +86,9 @@ from repro.core import drt as drt_mod
 from repro.core import packing
 from repro.core.drt import DRTConfig
 from repro.core.topology import Topology
+from repro.obs import metrics as obs_metrics
+from repro.obs import profiling as obs_profiling
+from repro.obs.metrics import ConsensusMetrics, ObsConfig
 from repro.utils.pytree import LayerPartition
 
 Algorithm = Literal["drt", "classical"]
@@ -169,13 +172,20 @@ def _scan_rounds(body, carry, xs, rounds: int, unroll: bool):
     executes the same ops on the same values).  A single round skips the
     scan machinery outright; the per-step production cadence pays no loop
     overhead.
+
+    Returns ``(carry, ys)`` like ``lax.scan``: a body emitting per-round
+    outputs (telemetry) gets them stacked along a leading ``(rounds,)`` axis
+    on the unrolled path too; a body emitting ``None`` ys returns ``None``.
     """
     if unroll or rounds == 1:
+        ys = []
         for r in range(rounds):
-            carry, _ = body(carry, jax.tree.map(lambda x: x[r], xs))
-        return carry
-    carry, _ = jax.lax.scan(body, carry, xs)
-    return carry
+            carry, y = body(carry, jax.tree.map(lambda x: x[r], xs))
+            ys.append(y)
+        if ys[0] is None:
+            return carry, None
+        return carry, jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    return jax.lax.scan(body, carry, xs)
 
 
 # ---------------------------------------------------------------------------
@@ -470,6 +480,7 @@ def gather_consensus_rounds(
     path: ConsensusPath = "slab",
     use_kernels: bool = False,
     unroll: bool = False,
+    obs: "ObsConfig | None" = None,
 ):
     """``rounds`` consensus steps with ONE pack/unpack around the whole set.
 
@@ -498,6 +509,16 @@ def gather_consensus_rounds(
     Returns ``(new_K, A_last, new_codec_state)``.  ``path="tree"`` (or a
     codec without a slab fast path) falls back to scanning the per-leaf
     reference oracle :func:`gather_consensus_step`.
+
+    Telemetry: with ``obs=`` an :class:`~repro.obs.ObsConfig`, the return
+    gains a fourth element — a :class:`~repro.obs.ConsensusMetrics` stack
+    with leading ``(rounds,)`` axis emitted as the round scan's ys (see
+    :mod:`repro.obs.metrics` for field semantics).  ``obs=None`` (default)
+    traces the EXACT pre-telemetry program: the Gram recurrence reuses its
+    carried state for the disagreement, the coded path reads its wire/
+    decoded slabs, and the fused single-launch kernel round (which keeps
+    those in VMEM) is only used when telemetry is off.  The tree oracle
+    prices its telemetry by re-deriving the wire (documented oracle cost).
     """
     wire_codec = _resolve_codec(codec, None)
     if path not in ("slab", "tree"):
@@ -508,7 +529,10 @@ def gather_consensus_rounds(
     ):
         path = "tree"
     if rounds <= 0:
-        return psi_K, None, codec_state if codec_state is not None else ()
+        state0 = codec_state if codec_state is not None else ()
+        if obs is None:
+            return psi_K, None, state0
+        return psi_K, None, state0, obs_metrics.empty_metrics(partition.num_layers)
     K = jax.tree.leaves(psi_K)[0].shape[0]
     L = partition.num_layers
     C_stack = _round_stack(C, rounds, "C")
@@ -523,37 +547,83 @@ def gather_consensus_rounds(
             elif state is None:
                 state = ()
 
+        if obs is not None:
+            template = _template_sds(psi_K)
+            idb = float(IdentityCodec().wire_bytes(template))
+
         def tree_body(carry, xs):
             psi, st, _ = carry
             r, C_r, metro_r = xs
+            round_rng = None
             if wire_codec is None:
-                psi, A = gather_consensus_step(
+                new_psi, A = gather_consensus_step(
                     partition, psi, C_r, cfg,
                     algorithm=algorithm, metropolis=metro_r,
                 )
-                return (psi, st, A), None
-            psi, A, st = gather_consensus_step(
-                partition, psi, C_r, cfg,
-                algorithm=algorithm, metropolis=metro_r,
-                codec=wire_codec, codec_state=st,
-                rng=jax.random.fold_in(rng, r) if rng is not None else None,
+                new_st = st
+            else:
+                round_rng = jax.random.fold_in(rng, r) if rng is not None else None
+                new_psi, A, new_st = gather_consensus_step(
+                    partition, psi, C_r, cfg,
+                    algorithm=algorithm, metropolis=metro_r,
+                    codec=wire_codec, codec_state=st,
+                    rng=round_rng,
+                )
+            if obs is None:
+                return (new_psi, new_st, A), None
+            # oracle-priced telemetry: the slab paths read these quantities
+            # off state they already carry; the per-leaf oracle re-derives
+            # the wire the step consumed (same keys => bit-identical wire)
+            if wire_codec is None:
+                send = jnp.asarray(idb, jnp.float32)
+                psi_hat = psi
+            else:
+                keys = _agent_keys(_require_rng(wire_codec, round_rng), K)
+                wire_K, _ = jax.vmap(wire_codec.encode)(psi, st, keys)
+                send = jnp.mean(
+                    obs_metrics.tree_wire_send_bytes(wire_codec, wire_K, template)
+                )
+                psi_hat = jax.vmap(wire_codec.decode)(wire_K)
+            if algorithm == "drt":
+                d2, _ = partition.pairwise_sq_dists(psi_hat)
+                d2m, d2x = obs_metrics.d2_summaries(d2)
+            else:
+                d2m = d2x = jnp.zeros((L,), jnp.float32)
+            if wire_codec is not None and wire_codec.stateful:
+                ef = obs_metrics.tree_mean_sq_norm(new_st)
+            else:
+                ef = jnp.zeros((), jnp.float32)
+            m = ConsensusMetrics(
+                disagreement=obs_metrics.tree_disagreement(new_psi),
+                layer_d2_mean=d2m,
+                layer_d2_max=d2x,
+                mix_entropy=obs_metrics.mixing_entropy(A),
+                ef_residual=ef,
+                wire_send_bytes=send,
+                wire_recv_bytes=(K - 1.0) * send,
+                compression_ratio=idb / jnp.maximum(send, 1.0),
+                edges=obs_metrics.edge_count(C_r if C_r is not None else metro_r),
             )
-            return (psi, st, A), None
+            return (new_psi, new_st, A), m
 
-        psi_K, state, A_last = _scan_rounds(
+        (psi_K, state, A_last), metrics = _scan_rounds(
             tree_body,
             (psi_K, state, A0),
             (jnp.arange(rounds), C_stack, metro_stack),
             rounds,
             unroll,
         )
-        return psi_K, A_last, state if state is not None else ()
+        state = state if state is not None else ()
+        if obs is None:
+            return psi_K, A_last, state
+        return psi_K, A_last, state, metrics
 
     if layout is None:
         layout = packing.cached_slab_layout(partition, _template_sds(psi_K))
     # packed ONCE for the whole round-set; carried between rounds as per-group
     # contiguous regions so no round re-slices or re-concatenates the slab
-    regions = layout.pack_regions(psi_K)
+    with obs_profiling.scope(obs, "consensus.pack"):
+        regions = layout.pack_regions(psi_K)
     stateful = wire_codec is not None and wire_codec.stateful
     if stateful:
         if codec_state is None or codec_state == ():
@@ -578,7 +648,50 @@ def gather_consensus_rounds(
         # The accumulated product starts from the exact identity: I @ A is
         # bit-identical to A, so seeding the scan carry costs nothing.
         eyeL = jnp.broadcast_to(jnp.eye(K, dtype=jnp.float32), (L, K, K))
-        if algorithm == "classical":
+        metrics = None
+        if algorithm not in ("classical", "drt"):
+            raise ValueError(f"unknown algorithm {algorithm!r}")
+        if obs is not None:
+            # telemetry rides the Gram recurrence: the carried (L, K, K)
+            # Gram delivers the disagreement (post-round diagonal trick) and
+            # the pre-mix d2 summaries without touching the D parameters.
+            # Classical gains the G carry ONLY here — obs=None keeps its
+            # bare (M, A) carry and today's exact jaxpr.
+            send = jnp.asarray(obs_metrics.slab_identity_bytes(layout), jnp.float32)
+
+            def exact_body(carry, xs):
+                G, M, _ = carry
+                _, C_r, metro_r = xs
+                d2, n2 = packing.gram_sq_dists(G)
+                if algorithm == "classical":
+                    A = jnp.broadcast_to(metro_r, (L, K, K))
+                else:
+                    A = drt_mod.drt_mixing_matrices(d2, n2, C_r, cfg)
+                G2 = packing.gram_update(G, A)
+                d2m, d2x = obs_metrics.d2_summaries(d2)
+                m = ConsensusMetrics(
+                    disagreement=packing.gram_disagreement(G2),
+                    layer_d2_mean=d2m,
+                    layer_d2_max=d2x,
+                    mix_entropy=obs_metrics.mixing_entropy(A),
+                    ef_residual=jnp.zeros((), jnp.float32),
+                    wire_send_bytes=send,
+                    wire_recv_bytes=(K - 1.0) * send,
+                    compression_ratio=jnp.ones((), jnp.float32),
+                    edges=obs_metrics.edge_count(
+                        C_r if C_r is not None else metro_r
+                    ),
+                )
+                return (G2, jnp.einsum("pij,pjk->pik", M, A), A), m
+
+            (_, M, A_last), metrics = _scan_rounds(
+                exact_body,
+                (layout.gram(regions), eyeL, A0),
+                (jnp.arange(rounds), C_stack, metro_stack),
+                rounds,
+                unroll,
+            )
+        elif algorithm == "classical":
 
             def exact_body(carry, xs):
                 M, _ = carry
@@ -586,14 +699,14 @@ def gather_consensus_rounds(
                 A = jnp.broadcast_to(metro_r, (L, K, K))
                 return (jnp.einsum("pij,pjk->pik", M, A), A), None
 
-            M, A_last = _scan_rounds(
+            (M, A_last), _ = _scan_rounds(
                 exact_body,
                 (eyeL, A0),
                 (jnp.arange(rounds), C_stack, metro_stack),
                 rounds,
                 unroll,
             )
-        elif algorithm == "drt":
+        else:
 
             def exact_body(carry, xs):
                 G, M, _ = carry
@@ -606,24 +719,35 @@ def gather_consensus_rounds(
                     A,
                 ), None
 
-            _, M, A_last = _scan_rounds(
+            (_, M, A_last), _ = _scan_rounds(
                 exact_body,
                 (layout.gram(regions), eyeL, A0),
                 (jnp.arange(rounds), C_stack, metro_stack),
                 rounds,
                 unroll,
             )
-        else:
-            raise ValueError(f"unknown algorithm {algorithm!r}")
-        if use_kernels:
-            regions = _combine_slab_kernels(layout, M, regions)
-            new_K = layout.unpack_regions(regions, like=psi_K)
-        else:
-            # fused combine+unpack: one read of the regions, one write per leaf
-            new_K = layout.combine_unpack(M, regions, like=psi_K)
-        return new_K, A_last, codec_state if codec_state is not None else ()
+        with obs_profiling.scope(obs, "consensus.combine"):
+            if use_kernels:
+                regions = _combine_slab_kernels(layout, M, regions)
+                new_K = layout.unpack_regions(regions, like=psi_K)
+            else:
+                # fused combine+unpack: one read of the regions, one write per leaf
+                new_K = layout.combine_unpack(M, regions, like=psi_K)
+        state0 = codec_state if codec_state is not None else ()
+        if obs is None:
+            return new_K, A_last, state0
+        return new_K, A_last, state0, metrics
 
-    fused_kernel = use_kernels and _fused_kernel_supported(wire_codec, algorithm)
+    # the fully-fused kernel round keeps the wire / decoded slabs / Gram in
+    # VMEM — nothing observable — so telemetry routes coded rounds through
+    # the partially-fused path (everything still one combine launch)
+    fused_kernel = (
+        use_kernels
+        and _fused_kernel_supported(wire_codec, algorithm)
+        and obs is None
+    )
+    if obs is not None:
+        idb = obs_metrics.slab_identity_bytes(layout)
 
     def coded_body(carry, xs):
         regions, res, _ = carry
@@ -639,26 +763,62 @@ def gather_consensus_rounds(
             return (regions, res, A), None
         # natively-batched encode over the agent axis (bit-identical wire to
         # vmapping the per-agent two-phase oracle, without its transposes)
-        wire, res = packing.slab_encode_batched(
-            wire_codec, layout, regions, res, keys
-        )
-        decoded = packing.slab_decode(wire_codec, layout, wire)  # f32 regions
-        A = _slab_mixing(layout, decoded, C_r, cfg, algorithm, metro_r, L)
+        with obs_profiling.scope(obs, "consensus.encode"):
+            wire, res = packing.slab_encode_batched(
+                wire_codec, layout, regions, res, keys
+            )
+        with obs_profiling.scope(obs, "consensus.decode"):
+            decoded = packing.slab_decode(wire_codec, layout, wire)  # f32 regions
+        d2 = None
+        if obs is not None and algorithm == "drt":
+            # same stats _slab_mixing computes — held onto for the telemetry
+            d2, n2 = layout.pairwise_sq_dists(decoded)
+            A = drt_mod.drt_mixing_matrices(d2, n2, C_r, cfg)
+        else:
+            A = _slab_mixing(layout, decoded, C_r, cfg, algorithm, metro_r, L)
         eye = jnp.eye(K, dtype=A.dtype)
         A_off = A * (1.0 - eye)[None]
-        if use_kernels:
-            # codec outside the fused slab_encode_combine family (e.g. a
-            # custom cast dtype): keep the PR-4 whole-slab combine kernel
-            # rather than silently ignoring use_kernels
-            off = _combine_slab_kernels(layout, A_off, decoded)
+        with obs_profiling.scope(obs, "consensus.combine"):
+            if use_kernels:
+                # codec outside the fused slab_encode_combine family (e.g. a
+                # custom cast dtype): keep the PR-4 whole-slab combine kernel
+                # rather than silently ignoring use_kernels
+                off = _combine_slab_kernels(layout, A_off, decoded)
+            else:
+                off = layout.combine(A_off, decoded)
+            diag = jnp.diagonal(A, axis1=1, axis2=2)  # (L, K)
+            selfed = layout.scale_by_layer(diag.T, regions)  # full-precision self
+            regions = jax.tree.map(jnp.add, off, selfed)
+        if obs is None:
+            return (regions, res, A), None
+        if d2 is not None:
+            d2m, d2x = obs_metrics.d2_summaries(d2)
         else:
-            off = layout.combine(A_off, decoded)
-        diag = jnp.diagonal(A, axis1=1, axis2=2)  # (L, K)
-        selfed = layout.scale_by_layer(diag.T, regions)  # full-precision self
-        regions = jax.tree.map(jnp.add, off, selfed)
-        return (regions, res, A), None
+            # classical coded rounds have no distance stats in flight and
+            # telemetry does not add a Gram pass for them
+            d2m = d2x = jnp.zeros((L,), jnp.float32)
+        if stateful:
+            ef = (
+                sum(jnp.sum(jnp.square(t.astype(jnp.float32))) for t in res)
+                / float(K)
+            )
+        else:
+            ef = jnp.zeros((), jnp.float32)
+        send = jnp.mean(obs_metrics.slab_wire_send_bytes(wire_codec, layout, wire))
+        m = ConsensusMetrics(
+            disagreement=packing.region_disagreement(regions),
+            layer_d2_mean=d2m,
+            layer_d2_max=d2x,
+            mix_entropy=obs_metrics.mixing_entropy(A),
+            ef_residual=ef,
+            wire_send_bytes=send,
+            wire_recv_bytes=(K - 1.0) * send,
+            compression_ratio=idb / jnp.maximum(send, 1.0),
+            edges=obs_metrics.edge_count(C_r if C_r is not None else metro_r),
+        )
+        return (regions, res, A), m
 
-    regions, res, A_last = _scan_rounds(
+    (regions, res, A_last), metrics = _scan_rounds(
         coded_body,
         (regions, res if stateful else (), A0),
         (jnp.arange(rounds), C_stack, metro_stack),
@@ -666,12 +826,19 @@ def gather_consensus_rounds(
         unroll,
     )
 
-    new_K = layout.unpack_regions(regions, like=psi_K)
+    with obs_profiling.scope(obs, "consensus.unpack"):
+        new_K = layout.unpack_regions(regions, like=psi_K)
     if stateful:
         like = codec_state if codec_state not in (None, ()) else psi_K
         # the error-feedback residual stays f32 whatever the param dtype
-        return new_K, A_last, layout.unpack_regions(res, like=like, dtype=jnp.float32)
-    return new_K, A_last, codec_state if codec_state is not None else ()
+        res_tree = layout.unpack_regions(res, like=like, dtype=jnp.float32)
+        if obs is None:
+            return new_K, A_last, res_tree
+        return new_K, A_last, res_tree, metrics
+    state0 = codec_state if codec_state is not None else ()
+    if obs is None:
+        return new_K, A_last, state0
+    return new_K, A_last, state0, metrics
 
 
 # ---------------------------------------------------------------------------
@@ -904,6 +1071,7 @@ class PermuteConsensus:
         *,
         rounds: int = 1,
         start_round: int = 0,
+        obs: "ObsConfig | None" = None,
     ):
         """psi_local: single-agent tree (leaves WITHOUT leading agent axis).
 
@@ -915,6 +1083,14 @@ class PermuteConsensus:
         With a ``schedule``, round ``r`` exchanges over
         ``schedule.topology_at(start_round + r)``; ``start_round`` must be a
         concrete Python int (the decomposition is re-derived on the host).
+
+        Telemetry: with ``obs=`` an :class:`~repro.obs.ObsConfig` the return
+        gains a trailing per-round :class:`~repro.obs.ConsensusMetrics`
+        stack (this shard's LOCAL view for distances/entropy/wire; the
+        disagreement is the GLOBAL ``mean_k ||x_k - x_bar||^2``, which costs
+        one D-sized ``psum`` per round — the engine's one non-free metric).
+        Fully-churned rounds still emit a row (zero wire volume, zero
+        entropy).  ``obs=None`` traces the exact pre-telemetry program.
         """
         if self.schedule is not None:
             if not isinstance(start_round, (int, np.integer)):
@@ -939,15 +1115,17 @@ class PermuteConsensus:
         start_round = int(start_round) if self.schedule is not None else 0
         if path == "tree":
             return self._call_tree(
-                psi_local, codec_state, rng, rounds, wire_codec, start_round
+                psi_local, codec_state, rng, rounds, wire_codec, start_round, obs
             )
         return self._call_slab(
-            psi_local, codec_state, rng, rounds, wire_codec, start_round
+            psi_local, codec_state, rng, rounds, wire_codec, start_round, obs
         )
 
     # -- slab hot path -------------------------------------------------------
 
-    def _call_slab(self, psi_local, codec_state, rng, rounds, wire_codec, start_round):
+    def _call_slab(
+        self, psi_local, codec_state, rng, rounds, wire_codec, start_round, obs=None
+    ):
         part = self.partition
         ax = self.axis_name
         my = jax.lax.axis_index(ax)
@@ -995,25 +1173,85 @@ class PermuteConsensus:
             diff = jax.tree.map(jnp.subtract, self_hat, recv)
             return _norms(diff), _norms(recv)
 
+        if obs is not None:
+            obs_ms = []
+            L_part = part.num_layers
+            idb = obs_metrics.slab_identity_bytes(layout)
+            K_glob = self.topology.num_agents
+
+            def _global_disagreement(regs):
+                # the engine never holds the full agent stack, so the global
+                # mean_k ||x_k - x_bar||^2 costs one D-sized psum per round —
+                # the one telemetry term here that is not read off local state
+                loc = jnp.zeros((), jnp.float32)
+                for t in regs:
+                    x = t.astype(jnp.float32)
+                    xbar = jax.lax.psum(x, ax) / K_glob
+                    loc = loc + jnp.sum(jnp.square(x - xbar))
+                for a in self.norm_reduce_axes:
+                    loc = jax.lax.psum(loc, a)
+                return jax.lax.psum(loc, ax) / K_glob
+
+            def _round_metrics(regs, wire, res_now, topo, n_ex, stats):
+                """stats: (d2s, cws, w_all) stacks, or None on a no-edge round."""
+                if wire_codec is not None:
+                    per_wire = obs_metrics.slab_wire_send_bytes(
+                        wire_codec, layout, wire
+                    )
+                else:
+                    per_wire = jnp.asarray(idb, jnp.float32)
+                if stats is not None:
+                    d2s, cws, w_all = stats
+                    d2m, d2x = obs_metrics.neighbour_d2_summaries(d2s, cws > 0)
+                    ent = obs_metrics.column_entropy(w_all)
+                else:
+                    d2m = d2x = jnp.zeros((L_part,), jnp.float32)
+                    ent = jnp.zeros((), jnp.float32)
+                if stateful:
+                    ef = jnp.asarray(
+                        sum(
+                            jnp.sum(jnp.square(t.astype(jnp.float32)))
+                            for t in res_now
+                        ),
+                        jnp.float32,
+                    )
+                else:
+                    ef = jnp.zeros((), jnp.float32)
+                vol = n_ex * per_wire  # one send + one receive per exchange
+                return ConsensusMetrics(
+                    disagreement=_global_disagreement(regs),
+                    layer_d2_mean=d2m,
+                    layer_d2_max=d2x,
+                    mix_entropy=ent,
+                    ef_residual=ef,
+                    wire_send_bytes=vol,
+                    wire_recv_bytes=vol,
+                    compression_ratio=idb / jnp.maximum(per_wire, 1.0),
+                    edges=jnp.asarray(
+                        float(np.sum(topo.adjacency)) / 2.0, jnp.float32
+                    ),
+                )
+
         static = self.schedule is None or getattr(self.schedule, "static", False)
         static_ctx = self._round_ctx(start_round, 0, None) if static else None
         for r in range(rounds):
             topo, perms, inv_srcs, Cmat = self._round_ctx(start_round, r, static_ctx)
             if wire_codec is not None:
                 key = jax.random.fold_in(jax.random.fold_in(base_rng, r), my)
-                if self.use_kernels and isinstance(
-                    wire_codec, packing.Int8StochasticCodec
-                ):
-                    # kernel-backed encode: ONE slab_quant_encode launch
-                    # (in-kernel RNG + scale reconstruction); bit-identical
-                    # wire to the jnp slab encode
-                    wire = _permute_quant_encode_kernels(
-                        layout, regions, wire_codec, key
-                    )
-                else:
-                    wire, res = packing.slab_encode(
-                        wire_codec, layout, regions, res, key
-                    )
+                with obs_profiling.scope(obs, "consensus.encode"):
+                    if self.use_kernels and isinstance(
+                        wire_codec, packing.Int8StochasticCodec
+                    ):
+                        # kernel-backed encode: ONE slab_quant_encode launch
+                        # (in-kernel RNG + scale reconstruction); bit-identical
+                        # wire to the jnp slab encode
+                        wire = _permute_quant_encode_kernels(
+                            layout, regions, wire_codec, key
+                        )
+                    else:
+                        wire, res = packing.slab_encode(
+                            wire_codec, layout, regions, res, key
+                        )
                 # pin the compressed representation across the wire: without
                 # the barrier XLA hoists the f32 up-convert above the
                 # collective-permute, silently un-compressing it
@@ -1025,6 +1263,10 @@ class PermuteConsensus:
             if not perms:
                 # fully-churned round (no edges anywhere): every agent keeps
                 # its iterate; a stateful codec's residual still advanced
+                if obs is not None:
+                    obs_ms.append(
+                        _round_metrics(regions, wire, res, topo, 0.0, None)
+                    )
                 continue
 
             recvs, d2s, n2s, cws, srcs = [], [], [], [], []
@@ -1081,21 +1323,44 @@ class PermuteConsensus:
                     )  # (1+n, n_slots)
                     out_regions.append(jnp.sum(w_g[..., None] * srcs_g, axis=0))
                 regions = tuple(out_regions)
+            if obs is not None:
+                obs_ms.append(
+                    _round_metrics(
+                        regions, wire, res, topo, float(len(perms)),
+                        (jnp.stack(d2s), jnp.stack(cws), w_all),
+                    )
+                )
 
-        out = layout.unpack_regions(regions, like=psi_local)
+        with obs_profiling.scope(obs, "consensus.unpack"):
+            out = layout.unpack_regions(regions, like=psi_local)
+        metrics = None
+        if obs is not None:
+            metrics = (
+                obs_metrics.stack_metrics(obs_ms)
+                if obs_ms
+                else obs_metrics.empty_metrics(part.num_layers)
+            )
         if has_codec:
             if stateful:
                 like = codec_state if codec_state not in (None, ()) else psi_local
                 # the error-feedback residual stays f32 whatever the param dtype
-                return out, layout.unpack_regions(
-                    res, like=like, dtype=jnp.float32
-                )
-            return out, codec_state if codec_state is not None else ()
-        return out
+                res_tree = layout.unpack_regions(res, like=like, dtype=jnp.float32)
+                if obs is None:
+                    return out, res_tree
+                return out, res_tree, metrics
+            state0 = codec_state if codec_state is not None else ()
+            if obs is None:
+                return out, state0
+            return out, state0, metrics
+        if obs is None:
+            return out
+        return out, metrics
 
     # -- per-leaf reference oracle -------------------------------------------
 
-    def _call_tree(self, psi_local, codec_state, rng, rounds, wire_codec, start_round):
+    def _call_tree(
+        self, psi_local, codec_state, rng, rounds, wire_codec, start_round, obs=None
+    ):
         part = self.partition
         ax = self.axis_name
         my = jax.lax.axis_index(ax)
@@ -1110,6 +1375,61 @@ class PermuteConsensus:
             for a in self.norm_reduce_axes:
                 n = jax.lax.psum(n, a)
             return n
+
+        if obs is not None:
+            obs_ms = []
+            L_part = part.num_layers
+            K_glob = self.topology.num_agents
+            template = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), psi_local
+            )
+            idb = float(IdentityCodec().wire_bytes(template))
+
+            def _global_disagreement(tree):
+                loc = jnp.zeros((), jnp.float32)
+                for t in jax.tree.leaves(tree):
+                    x = t.astype(jnp.float32)
+                    xbar = jax.lax.psum(x, ax) / K_glob
+                    loc = loc + jnp.sum(jnp.square(x - xbar))
+                for a in self.norm_reduce_axes:
+                    loc = jax.lax.psum(loc, a)
+                return jax.lax.psum(loc, ax) / K_glob
+
+            def _round_metrics(tree, wire, state_now, topo, n_ex, stats):
+                if wire_codec is not None:
+                    per_wire = obs_metrics.tree_wire_send_bytes(
+                        wire_codec, wire, template
+                    )
+                else:
+                    per_wire = jnp.asarray(idb, jnp.float32)
+                if stats is not None:
+                    d2s, cws, w_all = stats
+                    d2m, d2x = obs_metrics.neighbour_d2_summaries(d2s, cws > 0)
+                    ent = obs_metrics.column_entropy(w_all)
+                else:
+                    d2m = d2x = jnp.zeros((L_part,), jnp.float32)
+                    ent = jnp.zeros((), jnp.float32)
+                ef = jnp.asarray(
+                    sum(
+                        jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(state_now)
+                    ),
+                    jnp.float32,
+                )
+                vol = n_ex * per_wire
+                return ConsensusMetrics(
+                    disagreement=_global_disagreement(tree),
+                    layer_d2_mean=d2m,
+                    layer_d2_max=d2x,
+                    mix_entropy=ent,
+                    ef_residual=ef,
+                    wire_send_bytes=vol,
+                    wire_recv_bytes=vol,
+                    compression_ratio=idb / jnp.maximum(per_wire, 1.0),
+                    edges=jnp.asarray(
+                        float(np.sum(topo.adjacency)) / 2.0, jnp.float32
+                    ),
+                )
 
         new_state = codec_state
         static = self.schedule is None or getattr(self.schedule, "static", False)
@@ -1131,7 +1451,12 @@ class PermuteConsensus:
                 wire = psi_local
                 psi_self_hat = psi_local
             if not perms:
-                continue  # fully-churned round: keep the iterate
+                # fully-churned round: keep the iterate
+                if obs is not None:
+                    obs_ms.append(
+                        _round_metrics(psi_local, wire, new_state, topo, 0.0, None)
+                    )
+                continue
 
             # --- exchange: collect neighbour trees + their per-layer stats --
             recvs, d2s, n2s, cws, srcs = [], [], [], [], []
@@ -1166,9 +1491,29 @@ class PermuteConsensus:
                 scaled = part.scale_by_layer(w, recv)
                 out = jax.tree.map(jnp.add, out, scaled)
             psi_local = out
+            if obs is not None:
+                w_all = jnp.concatenate([w_self[None], w_nbrs], axis=0)
+                obs_ms.append(
+                    _round_metrics(
+                        psi_local, wire, new_state, topo, float(len(perms)),
+                        (jnp.stack(d2s), jnp.stack(cws), w_all),
+                    )
+                )
+        metrics = None
+        if obs is not None:
+            metrics = (
+                obs_metrics.stack_metrics(obs_ms)
+                if obs_ms
+                else obs_metrics.empty_metrics(part.num_layers)
+            )
         if has_codec:
-            return psi_local, new_state if new_state is not None else ()
-        return psi_local
+            state0 = new_state if new_state is not None else ()
+            if obs is None:
+                return psi_local, state0
+            return psi_local, state0, metrics
+        if obs is None:
+            return psi_local
+        return psi_local, metrics
 
 
 def collective_bytes_per_step(

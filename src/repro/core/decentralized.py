@@ -27,6 +27,7 @@ from repro.core.drt import DRTConfig
 from repro.core.dynamic import make_schedule
 from repro.core.packing import SlabLayout, build_slab_layout, slab_template_supported
 from repro.core.topology import Topology
+from repro.obs.metrics import ObsConfig
 from repro.optim.optimizers import Optimizer
 from repro.utils.pytree import LayerPartition
 
@@ -158,7 +159,12 @@ class DecentralizedTrainer:
             {"loss": jnp.mean(losses)},
         )
 
-    def consensus(self, state: DecentralizedState, rng: jax.Array | None = None):
+    def consensus(
+        self,
+        state: DecentralizedState,
+        rng: jax.Array | None = None,
+        obs: "ObsConfig | None" = None,
+    ):
         """``consensus_steps`` combination rounds (eq. 3b / second line of (11)).
 
         DRT recomputes the mixing matrices each round (they are time varying);
@@ -174,6 +180,11 @@ class DecentralizedTrainer:
         With a dynamic ``cfg.schedule`` round ``t`` of this round-set mixes
         over graph ``state.step * consensus_steps + t`` — a deterministic
         function of the step, so checkpoint resume replays the sequence.
+
+        With ``obs=`` an :class:`~repro.obs.ObsConfig`, returns
+        ``(state, A_last, metrics)`` where ``metrics`` is the per-round
+        :class:`~repro.obs.ConsensusMetrics` stack; ``obs=None`` keeps the
+        two-tuple return and today's exact jaxpr.
         """
         if self.codec is not None and rng is None:
             rng = jax.random.fold_in(jax.random.key(0), state.step)
@@ -182,7 +193,7 @@ class DecentralizedTrainer:
             C, metropolis = self.schedule.mixing_stacks(
                 state.step * self.cfg.consensus_steps, self.cfg.consensus_steps
             )
-        params, A_last, comm = gather_consensus_rounds(
+        out = gather_consensus_rounds(
             self.partition,
             state.params,
             C,
@@ -196,8 +207,17 @@ class DecentralizedTrainer:
             layout=self._layout,
             path=self.cfg.consensus_path,
             use_kernels=self.cfg.use_kernels,
+            obs=obs,
         )
-        return DecentralizedState(params, state.opt_state, state.step, comm), A_last
+        if obs is None:
+            params, A_last, comm = out
+            return DecentralizedState(params, state.opt_state, state.step, comm), A_last
+        params, A_last, comm, metrics = out
+        return (
+            DecentralizedState(params, state.opt_state, state.step, comm),
+            A_last,
+            metrics,
+        )
 
     def disagreement(self, params_K) -> jax.Array:
         """sum_k || w_k - w_bar ||^2 (cf. Lemma 3's LHS with the plain mean)."""
@@ -210,7 +230,7 @@ class DecentralizedTrainer:
 
     # -- convenience epoch driver (simulator) ----------------------------------
 
-    def make_many_steps(self, *, donate: bool = True):
+    def make_many_steps(self, *, donate: bool = True, obs: "ObsConfig | None" = None):
         """One jitted, buffer-donated program for a CHUNK of training steps.
 
         Returns ``many(state, batches_K, keys) -> (state, {"loss": (n,)})``
@@ -227,17 +247,27 @@ class DecentralizedTrainer:
 
         ``donate=True`` (default) donates the state argument so XLA updates
         params / optimizer state / EF residuals in place across the chunk.
+
+        With ``obs=``, the metrics dict gains ``"consensus"`` — the
+        per-step :class:`~repro.obs.ConsensusMetrics` stacks riding the scan
+        ys with leading ``(n, rounds)`` axes.
         """
 
         def many(state: DecentralizedState, batches_K, keys):
             def body(st, inp):
                 batch, key = inp
                 st, metrics = self.local_step(st, batch, key)
-                st, _ = self.consensus(st)
-                return st, metrics["loss"]
+                if obs is None:
+                    st, _ = self.consensus(st)
+                    return st, metrics["loss"]
+                st, _, cm = self.consensus(st, obs=obs)
+                return st, (metrics["loss"], cm)
 
-            state, losses = jax.lax.scan(body, state, (batches_K, keys))
-            return state, {"loss": losses}
+            state, ys = jax.lax.scan(body, state, (batches_K, keys))
+            if obs is None:
+                return state, {"loss": ys}
+            losses, cm = ys
+            return state, {"loss": losses, "consensus": cm}
 
         return jax.jit(many, donate_argnums=(0,)) if donate else many
 
@@ -245,6 +275,13 @@ class DecentralizedTrainer:
         """Scan over an epoch of per-agent batches, then run consensus.
 
         ``batches_K``: pytree of arrays with leading (n_batches, K, ...) axes.
+
+        ``metrics["disagreement"]`` is the post-consensus network
+        disagreement read from the :class:`~repro.obs.ConsensusMetrics`
+        telemetry (``mean_k ||x_k - x_bar||^2`` after the last round) — the
+        SAME quantity, from the same code path, that ``launch.train`` and
+        ``benchmarks/scenario_matrix`` report.  The legacy
+        :meth:`disagreement` (sum over agents) remains for direct use.
         """
         n_batches = jax.tree.leaves(batches_K)[0].shape[0]
         keys = jax.random.split(rng, n_batches)
@@ -255,8 +292,10 @@ class DecentralizedTrainer:
             return st, metrics["loss"]
 
         state, losses = jax.lax.scan(body, state, (batches_K, keys))
-        state, A = self.consensus(state)
-        return state, {
-            "loss": jnp.mean(losses),
-            "disagreement": self.disagreement(state.params),
-        }
+        if self.cfg.consensus_steps > 0:
+            state, _, cm = self.consensus(state, obs=ObsConfig())
+            dis = cm.disagreement[-1]
+        else:
+            state, _ = self.consensus(state)
+            dis = self.disagreement(state.params) / self.K
+        return state, {"loss": jnp.mean(losses), "disagreement": dis}

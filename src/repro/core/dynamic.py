@@ -104,6 +104,17 @@ class TopologySchedule:
         adj = jax.vmap(self.adjacency_at)(ts)
         return _stacks_from_adjacency(adj)
 
+    def edge_counts(self, start_round, rounds: int) -> jax.Array:
+        """Per-round realized undirected edge counts, ``(rounds,)`` float32.
+
+        The schedule-density ground truth for the telemetry's
+        ``ConsensusMetrics.edges`` field (cross-checked in tests): an
+        agent-drop or edge-drop schedule shows up here round by round.
+        """
+        ts = jnp.asarray(start_round) + jnp.arange(rounds)
+        adj = jax.vmap(self.adjacency_at)(ts)
+        return jnp.sum(jnp.asarray(adj, jnp.float32), axis=(-2, -1)) / 2.0
+
     def topology_at(self, t: int) -> Topology:
         """Concrete host-side realization of round ``t`` (Python int).
 

@@ -476,6 +476,31 @@ def gram_update(gram: jax.Array, A: jax.Array) -> jax.Array:
     )
 
 
+def gram_disagreement(gram: jax.Array) -> jax.Array:
+    """Network disagreement ``mean_k ||x_k - x_bar||^2`` (summed over
+    layers) read off per-layer Gram matrices ``(L, K, K)``.
+
+    Per layer: ``mean_k G[kk] - mean_{kl} G[kl]`` — the telemetry path's
+    free ride on the exact consensus recurrence (no extra pass over the D
+    parameters; :func:`region_disagreement` is the direct oracle)."""
+    diag = jnp.diagonal(gram, axis1=1, axis2=2)  # (L, K)
+    return jnp.sum(jnp.mean(diag, axis=-1) - jnp.mean(gram, axis=(-2, -1)))
+
+
+def region_disagreement(regions: tuple) -> jax.Array:
+    """Direct network disagreement ``mean_k ||x_k - x_bar||^2`` over
+    agent-batched slab regions (leaves ``(n_slots, K, s_pad)``).
+
+    Lane-padding columns are zero across agents, so they cancel against the
+    mean and contribute nothing."""
+    K = regions[0].shape[1]
+    total = jnp.zeros((), F32)
+    for region in regions:
+        x = region.astype(F32)
+        total = total + jnp.sum(jnp.square(x - jnp.mean(x, axis=1, keepdims=True)))
+    return total / float(K)
+
+
 # ---------------------------------------------------------------------------
 # layout construction
 # ---------------------------------------------------------------------------

@@ -92,6 +92,7 @@ def make_train_step(
     codec=None,
     mesh=None,
     param_specs=None,
+    obs=None,
 ):
     """Returns step(state, batch_K, key) -> (state, metrics).
 
@@ -121,6 +122,13 @@ def make_train_step(
     ppermute decomposition on the HOST and therefore cannot follow a dynamic
     schedule from inside a jitted step — pass ``consensus_impl="gather"``
     (static schedules are folded into the topology and remain fine).
+
+    ``obs`` (an :class:`repro.obs.ObsConfig`) threads in-graph consensus
+    telemetry through the step: ``metrics["consensus"]`` carries a
+    per-round :class:`repro.obs.ConsensusMetrics` stack (gather: global
+    ``(rounds, ...)`` leaves; permute: per-agent ``(K, rounds, ...)``
+    leaves).  ``obs=None`` (default) traces the exact pre-telemetry step —
+    telemetry is zero-cost when disabled.
     """
     cfg = bundle.cfg
     K = cfg.num_agents
@@ -185,14 +193,29 @@ def make_train_step(
             def consensus(params, comm, ckey, step):
                 def body(local):
                     sq = jax.tree.map(lambda x: x[0], local)
-                    out = engine(sq, rounds=consensus_rounds)
-                    return jax.tree.map(lambda x: x[None], out)
+                    if obs is None:
+                        out = engine(sq, rounds=consensus_rounds)
+                        return jax.tree.map(lambda x: x[None], out)
+                    out, cm = engine(sq, rounds=consensus_rounds, obs=obs)
+                    return (
+                        jax.tree.map(lambda x: x[None], out),
+                        jax.tree.map(lambda x: x[None], cm),
+                    )
 
-                new = shard_map(
-                    body, mesh=mesh, in_specs=(param_specs,), out_specs=param_specs,
-                    check_rep=False,
+                if obs is None:
+                    new = shard_map(
+                        body, mesh=mesh, in_specs=(param_specs,),
+                        out_specs=param_specs, check_rep=False,
+                    )(params)
+                    return new, comm, None
+                # metrics come back as per-agent (K, rounds, ...) stacks:
+                # each shard emits its local view with a leading length-1
+                # agent axis, gathered over the data mesh axis
+                new, cm = shard_map(
+                    body, mesh=mesh, in_specs=(param_specs,),
+                    out_specs=(param_specs, P("data")), check_rep=False,
                 )(params)
-                return new, comm
+                return new, comm, cm
 
         else:
 
@@ -200,19 +223,38 @@ def make_train_step(
                 def body(local, lcomm, k):
                     sq = jax.tree.map(lambda x: x[0], local)
                     sc = jax.tree.map(lambda x: x[0], lcomm)
-                    out, nc = engine(
-                        sq, codec_state=sc, rng=k, rounds=consensus_rounds
+                    if obs is None:
+                        out, nc = engine(
+                            sq, codec_state=sc, rng=k, rounds=consensus_rounds
+                        )
+                        return (
+                            jax.tree.map(lambda x: x[None], out),
+                            jax.tree.map(lambda x: x[None], nc),
+                        )
+                    out, nc, cm = engine(
+                        sq, codec_state=sc, rng=k, rounds=consensus_rounds,
+                        obs=obs,
                     )
                     return (
                         jax.tree.map(lambda x: x[None], out),
                         jax.tree.map(lambda x: x[None], nc),
+                        jax.tree.map(lambda x: x[None], cm),
                     )
 
+                if obs is None:
+                    new, nc = shard_map(
+                        body,
+                        mesh=mesh,
+                        in_specs=(param_specs, comm_specs, P()),
+                        out_specs=(param_specs, comm_specs),
+                        check_rep=False,
+                    )(params, comm, ckey)
+                    return new, nc, None
                 return shard_map(
                     body,
                     mesh=mesh,
                     in_specs=(param_specs, comm_specs, P()),
-                    out_specs=(param_specs, comm_specs),
+                    out_specs=(param_specs, comm_specs, P("data")),
                     check_rep=False,
                 )(params, comm, ckey)
 
@@ -242,7 +284,7 @@ def make_train_step(
                 C_t, metro_t = schedule.mixing_stacks(
                     step * consensus_rounds, consensus_rounds
                 )
-            new, _, new_comm = gather_consensus_rounds(
+            out = gather_consensus_rounds(
                 partition,
                 params,
                 C_t,
@@ -256,8 +298,14 @@ def make_train_step(
                 layout=layout,
                 path=tcfg.consensus_path,
                 use_kernels=tcfg.use_kernels,
+                obs=obs,
             )
-            return new, comm if effective_codec is None else new_comm
+            if obs is None:
+                new, _, new_comm = out
+                cm = None
+            else:
+                new, _, new_comm, cm = out
+            return new, comm if effective_codec is None else new_comm, cm
 
     def step(state: TrainState, batch_K, key):
         if wire_codec is None:
@@ -281,11 +329,11 @@ def make_train_step(
             # not passed): initialize the residual here, matching the gather
             # engine's auto-init, instead of tripping a shard_map spec mismatch
             comm = init_comm_state(wire_codec, params)
-        params, comm = consensus(params, comm, ckey, state.step)
-        return (
-            TrainState(params, opt_state, state.step + 1, comm),
-            {"loss": jnp.mean(losses)},
-        )
+        params, comm, cm = consensus(params, comm, ckey, state.step)
+        metrics = {"loss": jnp.mean(losses)}
+        if cm is not None:
+            metrics["consensus"] = cm
+        return TrainState(params, opt_state, state.step + 1, comm), metrics
 
     return step
 
@@ -301,6 +349,7 @@ def make_train_many_steps(
     mesh=None,
     param_specs=None,
     donate: bool = True,
+    obs=None,
 ):
     """Donated multi-step driver: a CHUNK of train steps as ONE device program.
 
@@ -323,6 +372,12 @@ def make_train_many_steps(
     per step — at large K x D the allocator traffic per step drops to zero.
     Pass ``donate=False`` to get the plain function (e.g. to compose it
     under an outer jit or shard_map with explicit shardings).
+
+    With ``obs`` set the result gains ``metrics["consensus"]``: the per-step
+    :class:`repro.obs.ConsensusMetrics` stacks, scanned into leaves with a
+    leading ``(n_steps,)`` axis (slice step ``j`` off with
+    ``jax.tree.map(lambda x: x[j], cm)`` before handing it to
+    :func:`repro.obs.consensus_records`).
     """
     step = make_train_step(
         bundle,
@@ -334,16 +389,22 @@ def make_train_many_steps(
         codec=codec,
         mesh=mesh,
         param_specs=param_specs,
+        obs=obs,
     )
 
     def many(state: TrainState, batches_K, keys):
         def body(st, inp):
             batch, key = inp
             st, metrics = step(st, batch, key)
-            return st, metrics["loss"]
+            if obs is None:
+                return st, metrics["loss"]
+            return st, (metrics["loss"], metrics["consensus"])
 
-        state, losses = jax.lax.scan(body, state, (batches_K, keys))
-        return state, {"loss": losses}
+        state, ys = jax.lax.scan(body, state, (batches_K, keys))
+        if obs is None:
+            return state, {"loss": ys}
+        losses, cm = ys
+        return state, {"loss": losses, "consensus": cm}
 
     return jax.jit(many, donate_argnums=(0,)) if donate else many
 
@@ -399,6 +460,22 @@ def main(argv=None) -> None:
     )
     ap.add_argument("--schedule-seed", type=int, default=0,
                     help="seed for gossip draws and churn failures")
+    ap.add_argument(
+        "--metrics-jsonl", default=None,
+        help="enable in-graph consensus telemetry (repro.obs) and append one "
+             "JSON record per consensus round to this file: disagreement "
+             "mean|x_i - xbar|^2, per-layer DRT distance mean/max, mixing-"
+             "weight entropy, error-feedback residual norm, wire send/recv "
+             "bytes, compression ratio and live edge count, keyed by "
+             "step/round; a console summary table prints at the end",
+    )
+    ap.add_argument(
+        "--profile-dir", default=None,
+        help="write a jax.profiler trace of the whole run to this directory "
+             "(view in Perfetto / TensorBoard) and turn on named consensus "
+             "spans (consensus.pack/encode/combine/unpack) so rounds are "
+             "attributable in the timeline; implies telemetry on",
+    )
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args(argv)
 
@@ -419,34 +496,79 @@ def main(argv=None) -> None:
     stream = SyntheticTokenStream(
         TokenStreamConfig(vocab=bundle.cfg.vocab, seq_len=args.seq)
     )
-    if args.steps_per_call > 1:
-        many = make_train_many_steps(
-            bundle, topo, opt, tcfg, consensus_rounds=args.consensus_rounds
-        )
-        i = 0
-        while i < args.steps:
-            n = min(args.steps_per_call, args.steps - i)
-            tokens = jnp.stack([
-                jnp.asarray(stream.agent_batches(args.batch, args.agents, step=j))
-                for j in range(i, i + n)
-            ])  # (n, K, batch, seq)
-            keys = jnp.stack([jax.random.key(j) for j in range(i, i + n)])
-            state, metrics = many(state, {"tokens": tokens}, keys)
-            last = i + n - 1
-            print(f"step {last:4d}  loss {float(metrics['loss'][-1]):.4f}  "
-                  f"({n} steps/call)")
-            i += n
-    else:
-        step = jax.jit(
-            make_train_step(bundle, topo, opt, tcfg,
-                            consensus_rounds=args.consensus_rounds)
-        )
-        for i in range(args.steps):
-            batch = {"tokens": jnp.asarray(
-                stream.agent_batches(args.batch, args.agents, step=i))}
-            state, metrics = step(state, batch, jax.random.key(i))
-            if i % 10 == 0 or i == args.steps - 1:
-                print(f"step {i:4d}  loss {float(metrics['loss']):.4f}")
+
+    from repro import obs as repro_obs
+    from repro.obs.metrics import ObsConfig
+
+    obs = (
+        ObsConfig(annotate=args.profile_dir is not None)
+        if (args.metrics_jsonl or args.profile_dir)
+        else None
+    )
+    sink = repro_obs.JsonlSink(args.metrics_jsonl) if args.metrics_jsonl else None
+    thru = repro_obs.Throughput()
+    tokens_per_step = args.agents * args.batch * args.seq
+
+    def emit(cm, step_idx: int) -> None:
+        if sink is not None and cm is not None:
+            for rec in repro_obs.consensus_records(cm, step=step_idx):
+                sink.write(rec)
+
+    with repro_obs.trace(args.profile_dir):
+        if args.steps_per_call > 1:
+            many = make_train_many_steps(
+                bundle, topo, opt, tcfg,
+                consensus_rounds=args.consensus_rounds, obs=obs,
+            )
+            i = 0
+            while i < args.steps:
+                n = min(args.steps_per_call, args.steps - i)
+                tokens = jnp.stack([
+                    jnp.asarray(stream.agent_batches(args.batch, args.agents, step=j))
+                    for j in range(i, i + n)
+                ])  # (n, K, batch, seq)
+                keys = jnp.stack([jax.random.key(j) for j in range(i, i + n)])
+                with repro_obs.annotation(f"train.chunk[{i}:{i + n}]"):
+                    state, metrics = many(state, {"tokens": tokens}, keys)
+                    losses = jax.device_get(metrics["loss"])  # syncs the chunk
+                rate = thru.update(n, n * tokens_per_step)
+                last = i + n - 1
+                print(
+                    f"steps {i:4d}..{last:4d}  "
+                    f"loss mean {float(losses.mean()):.4f} "
+                    f"last {float(losses[-1]):.4f}  "
+                    f"{rate.steps_per_s:7.2f} steps/s  "
+                    f"{rate.tokens_per_s:9.0f} tok/s  ({n} steps/call)"
+                )
+                if obs is not None:
+                    cm = jax.device_get(metrics["consensus"])
+                    for j in range(n):
+                        emit(jax.tree.map(lambda x: x[j], cm), i + j)
+                i += n
+        else:
+            step = jax.jit(
+                make_train_step(bundle, topo, opt, tcfg,
+                                consensus_rounds=args.consensus_rounds, obs=obs)
+            )
+            for i in range(args.steps):
+                batch = {"tokens": jnp.asarray(
+                    stream.agent_batches(args.batch, args.agents, step=i))}
+                with repro_obs.annotation(f"train.step[{i}]"):
+                    state, metrics = step(state, batch, jax.random.key(i))
+                    loss = float(metrics["loss"])  # syncs the step
+                rate = thru.update(1, tokens_per_step)
+                emit(metrics.get("consensus"), i)
+                if i % 10 == 0 or i == args.steps - 1:
+                    print(f"step {i:4d}  loss {loss:.4f}  "
+                          f"{rate.steps_per_s:7.2f} steps/s  "
+                          f"{rate.tokens_per_s:9.0f} tok/s")
+    life = thru.lifetime()
+    print(f"total: {life.steps} steps in {life.seconds:.1f}s  "
+          f"{life.steps_per_s:.2f} steps/s  {life.tokens_per_s:.0f} tok/s")
+    if sink is not None:
+        sink.close()
+        print(repro_obs.format_summary(
+            repro_obs.summarize(repro_obs.read_jsonl(args.metrics_jsonl))))
     if args.ckpt_dir:
         from repro.ckpt import save_train_state
 

@@ -1,0 +1,299 @@
+"""In-graph consensus telemetry: the ``ConsensusMetrics`` pytree + producers.
+
+Every quantity the paper (and the ROADMAP's consensus-control / learned-trust
+items) cares about — per-round network disagreement, the DRT layerwise
+distance statistics of eq. 12-14, mixing-weight entropy, error-feedback
+residual mass, realized wire bytes under codecs — is already computed (or one
+cheap reduction away) inside the jitted consensus round loops.  This module
+defines the per-round metric record both engines emit as stacked
+``lax.scan`` outputs and the small in-graph producers they share.
+
+Design rules
+------------
+* **Zero-cost disable.**  The engines take ``obs=None`` by default and then
+  trace EXACTLY the pre-telemetry program — nothing in this module is
+  imported into a trace unless an :class:`ObsConfig` is passed (asserted by
+  ``tests/test_obs.py``).
+* **Reuse carried quantities.**  On the exact (uncoded) gather path the
+  disagreement is read off the carried Gram recurrence diagonal
+  (:func:`repro.core.packing.gram_disagreement`) — no extra pass over the D
+  parameters; DRT distance summaries reuse the d2 statistics the mixing
+  matrices are built from.  The coded slab path pays one O(K x D)
+  elementwise reduction per round (:func:`~repro.core.packing.region_disagreement`);
+  the permute engine pays one D-sized ``psum`` per round for the *global*
+  disagreement (opt-in, documented on the engine).
+* **Runtime counters, not analytic echoes.**  The wire-byte counters are
+  derived from the layout's leaf plans and the realized wire (top-k counts
+  actual nonzeros), independently of :mod:`repro.comm.accounting` — the
+  parity test between the two is a genuine cross-check.
+
+Field semantics (all f32, leading ``(rounds,)`` axis after stacking):
+
+``disagreement``
+    ``mean_k ||x_k - x_bar||^2`` summed over parameters, AFTER the round's
+    combine.  (The trainer's legacy :meth:`DecentralizedTrainer.disagreement`
+    keeps its *sum over agents* convention; this is the mean.)
+``layer_d2_mean`` / ``layer_d2_max``  (rounds, L)
+    Off-diagonal mean / max of the per-layer pairwise squared distances
+    ``d2`` BEFORE the round's combine (the statistics eq. 12-14 consume).
+    Zeros where d2 is not already available (classical coded rounds — the
+    classical mixing matrix needs no distances and telemetry does not add a
+    Gram pass there).  The permute engine reports each agent's LOCAL
+    neighbour view instead of the all-pairs view.
+``mix_entropy``
+    Mean column entropy of the realized mixing matrices A in nats
+    (``log K`` = uniform averaging, 0 = keep-own-iterate).
+``ef_residual``
+    Mean per-agent squared norm of the codec's error-feedback residual
+    AFTER the round (0 for stateless codecs / exact exchange).
+``wire_send_bytes`` / ``wire_recv_bytes``
+    Mean per-agent bytes put on / received from the wire this round.
+    gather: one publish, (K-1) receives; permute: one send + one receive
+    per exchange of the round's decomposition.
+``compression_ratio``
+    f32-equivalent identity bytes / per-wire sent bytes (>= 1 for real
+    compression; 1.0 on the exact path).
+``edges``
+    Undirected edge count of the round's REALIZED graph (from the support
+    matrix C_t) — the schedule-density signal for gossip/churn runs;
+    cross-checked against :meth:`TopologySchedule.edge_counts`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.codec import (
+    CastCodec,
+    IdentityCodec,
+    Int8StochasticCodec,
+    TopKCodec,
+)
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class ObsConfig:
+    """Switchboard for in-graph consensus telemetry.
+
+    Passing ANY ``ObsConfig`` to an engine turns metric emission on;
+    ``obs=None`` (the default everywhere) keeps today's exact jaxpr.
+    ``annotate=True`` additionally wraps the slab phases (pack / encode /
+    decode / combine / unpack) in ``jax.named_scope`` spans so profiler
+    traces attribute time to them (the ``--profile-dir`` workflow).
+    """
+
+    annotate: bool = False
+
+
+class ConsensusMetrics(NamedTuple):
+    """One consensus round's telemetry (see module docstring for semantics).
+
+    A NamedTuple of f32 arrays so it rides ``lax.scan`` as stacked ys and
+    crosses ``shard_map`` like any other pytree; fields gain a leading
+    ``(rounds,)`` axis when returned from a round-set.
+    """
+
+    disagreement: jax.Array
+    layer_d2_mean: jax.Array
+    layer_d2_max: jax.Array
+    mix_entropy: jax.Array
+    ef_residual: jax.Array
+    wire_send_bytes: jax.Array
+    wire_recv_bytes: jax.Array
+    compression_ratio: jax.Array
+    edges: jax.Array
+
+
+def empty_metrics(num_layers: int) -> ConsensusMetrics:
+    """A zero-round metric stack (``rounds <= 0`` round-sets)."""
+    z = jnp.zeros((0,), F32)
+    zl = jnp.zeros((0, num_layers), F32)
+    return ConsensusMetrics(z, zl, zl, z, z, z, z, z, z)
+
+
+def stack_metrics(per_round: list) -> ConsensusMetrics:
+    """Stack per-round records into the (rounds,)-leading form — the
+    Python-loop engines' analogue of the scanned ys."""
+    return jax.tree.map(lambda *a: jnp.stack(a), *per_round)
+
+
+# ---------------------------------------------------------------------------
+# distance / weight statistics
+# ---------------------------------------------------------------------------
+
+
+def d2_summaries(d2: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Off-diagonal mean and max per layer of the pairwise squared
+    distances ``d2 (L, K, K)`` -> two ``(L,)`` arrays."""
+    K = d2.shape[-1]
+    off = ~jnp.eye(K, dtype=bool)
+    masked = jnp.where(off, d2.astype(F32), 0.0)
+    mean = jnp.sum(masked, axis=(-2, -1)) / float(max(K * (K - 1), 1))
+    return mean, jnp.max(masked, axis=(-2, -1))
+
+
+def neighbour_d2_summaries(
+    d2s: jax.Array, mask: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """The permute engine's LOCAL analogue of :func:`d2_summaries`: mean/max
+    per layer over one agent's real received neighbours.
+
+    ``d2s``: (n_nbrs, L) per-neighbour per-layer distances; ``mask``:
+    (n_nbrs,) True for real neighbours (cw > 0 — phantom self-receives of
+    unmatched agents are excluded)."""
+    m = mask[:, None].astype(F32)
+    n_eff = jnp.maximum(jnp.sum(m), 1.0)
+    d = d2s.astype(F32) * m
+    return jnp.sum(d, axis=0) / n_eff, jnp.max(d, axis=0)
+
+
+def mixing_entropy(A: jax.Array) -> jax.Array:
+    """Mean column entropy (nats) of per-layer mixing matrices ``A (L, K,
+    K)``, column-stochastic over axis 1.  ``log K`` = uniform averaging,
+    0 = every agent keeps its own iterate."""
+    p = A.astype(F32)
+    plogp = jnp.where(p > 0.0, p * jnp.log(jnp.where(p > 0.0, p, 1.0)), 0.0)
+    return -jnp.mean(jnp.sum(plogp, axis=-2))
+
+
+def column_entropy(w_all: jax.Array) -> jax.Array:
+    """Entropy of ONE agent's mixing column stacked as ``(1 + n_nbrs, L)``
+    (the permute engine's local view).  Its mean over agents equals
+    :func:`mixing_entropy` of the same round's full A: zero weights
+    contribute nothing either way."""
+    p = w_all.astype(F32)
+    plogp = jnp.where(p > 0.0, p * jnp.log(jnp.where(p > 0.0, p, 1.0)), 0.0)
+    return -jnp.mean(jnp.sum(plogp, axis=0))
+
+
+def edge_count(C: jax.Array) -> jax.Array:
+    """Undirected edge count of a round's realized graph from its support
+    matrix ``C (K, K)`` (self loops sit on the diagonal)."""
+    K = C.shape[-1]
+    return (jnp.sum((C > 0.0).astype(F32)) - float(K)) / 2.0
+
+
+def tree_disagreement(tree_K) -> jax.Array:
+    """Direct ``mean_k ||x_k - x_bar||^2`` on an agent-stacked tree — the
+    tree (oracle) path's analogue of
+    :func:`repro.core.packing.region_disagreement`."""
+    leaves = jax.tree.leaves(tree_K)
+    K = leaves[0].shape[0]
+    total = jnp.zeros((), F32)
+    for l in leaves:
+        x = l.astype(F32)
+        total = total + jnp.sum(jnp.square(x - jnp.mean(x, axis=0, keepdims=True)))
+    return total / float(K)
+
+
+def tree_mean_sq_norm(tree_K) -> jax.Array:
+    """Mean per-agent squared norm of an agent-stacked tree (EF residuals)."""
+    leaves = jax.tree.leaves(tree_K)
+    K = leaves[0].shape[0]
+    total = jnp.zeros((), F32)
+    for l in leaves:
+        total = total + jnp.sum(jnp.square(l.astype(F32)))
+    return total / float(K)
+
+
+# ---------------------------------------------------------------------------
+# wire-byte counters (runtime, layout-derived — NOT calls into accounting)
+# ---------------------------------------------------------------------------
+
+
+def slab_static_wire_bytes(codec, layout) -> float:
+    """Analytic per-agent wire bytes of one encoded slab for codecs whose
+    volume is shape-static (None/identity, cast, int8), derived from the
+    layout's leaf plans.  Independent of :mod:`repro.comm.accounting` so the
+    runtime-vs-analytic parity test is a genuine cross-check."""
+    if codec is None or isinstance(codec, IdentityCodec):
+        return float(
+            sum(
+                int(np.prod(p.shape)) * jnp.dtype(p.dtype).itemsize
+                for g in layout.groups
+                for p in g.float_leaves
+            )
+        )
+    if isinstance(codec, CastCodec):
+        item = jnp.dtype(codec.dtype).itemsize
+        return float(
+            sum(
+                int(np.prod(p.shape)) * item
+                for g in layout.groups
+                for p in g.float_leaves
+            )
+        )
+    if isinstance(codec, Int8StochasticCodec):
+        total = 0
+        for g in layout.groups:
+            for p in g.float_leaves:
+                n_scales = g.n_slots if p.scale_per_slot else 1
+                total += int(np.prod(p.shape)) + n_scales * 4
+        return float(total)
+    raise ValueError(
+        f"codec {getattr(codec, 'name', codec)!r} has no static wire volume "
+        "(top-k is data dependent — use slab_wire_send_bytes on the wire)"
+    )
+
+
+def slab_identity_bytes(layout) -> float:
+    """f32-equivalent (uncompressed) per-agent slab bytes."""
+    return slab_static_wire_bytes(None, layout)
+
+
+def slab_wire_send_bytes(codec, layout, wire) -> jax.Array:
+    """Realized per-agent bytes of an encoded slab wire, in-graph.
+
+    ``wire``: regions from ``packing.slab_encode[_batched]`` — leaves shaped
+    ``(n_slots, *batch, s_pad)`` (``batch = (K,)`` on the gather engine, ``()``
+    on a permute shard).  Returns ``(*batch,)`` f32.  Static for
+    identity/cast/int8; top-k counts realized nonzeros at 8 bytes each
+    (value + index) — lane padding is zero-filled and exact zeros are never
+    sent, so the count covers exactly the transmitted values.
+    """
+    if isinstance(codec, TopKCodec):
+        batch = wire[0].shape[1:-1]
+        out = jnp.zeros(batch, F32)
+        for region in wire:
+            nnz = jnp.sum(
+                (region != 0).astype(F32), axis=(0, region.ndim - 1)
+            )
+            out = out + 8.0 * nnz
+        return out
+    if isinstance(codec, Int8StochasticCodec):
+        batch = wire.q[0].shape[1:-1]
+    else:
+        batch = wire[0].shape[1:-1]
+    return jnp.full(batch, slab_static_wire_bytes(codec, layout), F32)
+
+
+def tree_wire_send_bytes(codec, wire, template) -> jax.Array:
+    """Realized per-agent wire bytes on the tree (oracle) path.
+
+    ``wire`` leaves may carry leading batch axes beyond the single-agent
+    ``template`` shapes (the gather engine's agent axis).  Returns
+    ``(*batch,)`` f32 — static (the codec's analytic volume) except for
+    top-k, whose dense sent leaves are counted at 8 bytes per nonzero."""
+    if not isinstance(codec, TopKCodec):
+        resolved = codec if codec is not None else IdentityCodec()
+        return jnp.asarray(float(resolved.wire_bytes(template)), F32)
+    static = 0.0
+    out = None
+    for w, t in zip(jax.tree.leaves(wire), jax.tree.leaves(template)):
+        if jnp.issubdtype(jnp.dtype(t.dtype), jnp.floating):
+            nb = w.ndim - len(t.shape)
+            nnz = 8.0 * jnp.sum(
+                (w != 0).astype(F32), axis=tuple(range(nb, w.ndim))
+            )
+            out = nnz if out is None else out + nnz
+        else:
+            static += int(np.prod(t.shape)) * jnp.dtype(t.dtype).itemsize
+    if out is None:
+        out = jnp.zeros((), F32)
+    return out + static

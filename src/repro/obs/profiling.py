@@ -1,0 +1,46 @@
+"""Profiling hooks: named in-graph scopes + the ``--profile-dir`` trace.
+
+Two layers, matching how JAX attributes time:
+
+* :func:`scope` — ``jax.named_scope`` around the slab phases (pack / encode /
+  decode / combine / unpack) inside the jitted consensus graph, gated on
+  ``ObsConfig.annotate`` so the default trace is untouched.  The names land
+  in HLO op metadata, so fused-kernel regressions show up attributed in the
+  trace viewer instead of as one anonymous fusion.
+* :func:`trace` / :func:`annotation` — host-side ``jax.profiler`` session
+  around the train loop plus ``TraceAnnotation`` spans per dispatched chunk,
+  driven by ``launch.train --profile-dir``.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def scope(obs, name: str):
+    """In-graph ``jax.named_scope(name)`` when ``obs`` requests annotation;
+    a free ``nullcontext`` otherwise (including ``obs=None``)."""
+    if obs is not None and getattr(obs, "annotate", False):
+        return jax.named_scope(name)
+    return contextlib.nullcontext()
+
+
+@contextlib.contextmanager
+def trace(profile_dir):
+    """Profiler session writing a TensorBoard-loadable trace under
+    ``profile_dir``; a no-op when ``profile_dir`` is falsy."""
+    if not profile_dir:
+        yield
+        return
+    jax.profiler.start_trace(str(profile_dir))
+    try:
+        yield
+    finally:
+        jax.profiler.stop_trace()
+
+
+def annotation(name: str):
+    """Host-side ``TraceAnnotation`` span (visible in the trace viewer's
+    python row); use around each dispatched train chunk."""
+    return jax.profiler.TraceAnnotation(name)

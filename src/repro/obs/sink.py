@@ -1,0 +1,151 @@
+"""Host-side structured metric sinks: JSONL writer + CSV/console summaries.
+
+The in-graph side of the telemetry system emits :class:`ConsensusMetrics`
+stacks; this module is where they land on the host.  Records are flat dicts
+with a ``kind`` discriminator plus ``step`` / ``round`` / (optional)
+``agent`` keys, one JSON object per line — greppable, appendable, and
+trivially loadable into pandas/polars without a schema registry.
+
+Typical producer loop (what ``launch.train --metrics-jsonl`` runs)::
+
+    with JsonlSink(path) as sink:
+        for step in range(steps):
+            state, metrics = train_step(state, batch, key)
+            for rec in consensus_records(metrics["consensus"], step=step):
+                sink.write(rec)
+
+and the consumer side::
+
+    records = read_jsonl(path)
+    print(format_summary(summarize(records)))
+    write_csv(records, "metrics.csv")
+"""
+from __future__ import annotations
+
+import csv
+import json
+from typing import Any, Iterable
+
+import numpy as np
+
+
+class JsonlSink:
+    """Append-only line-delimited JSON metric sink (context manager).
+
+    Line-buffered so records survive a crashed run; values are coerced to
+    plain Python scalars/lists (numpy and JAX arrays accepted).
+    """
+
+    def __init__(self, path):
+        self.path = str(path)
+        self._f = open(self.path, "a", buffering=1)
+
+    def write(self, record: dict) -> None:
+        self._f.write(json.dumps(record, default=_jsonable) + "\n")
+
+    def close(self) -> None:
+        self._f.close()
+
+    def __enter__(self) -> "JsonlSink":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def _jsonable(x):
+    arr = np.asarray(x)
+    if arr.ndim == 0:
+        return arr.item()
+    return arr.tolist()
+
+
+def consensus_records(
+    metrics, *, step: int, agent: int | None = None
+) -> list[dict]:
+    """Flatten a ``(rounds,)``-leading :class:`ConsensusMetrics` into one
+    record per round, keyed by ``step`` / ``round`` (and ``agent`` when the
+    caller holds per-agent stacks).  Scalar fields become floats; per-layer
+    fields become lists."""
+    fields = {k: np.asarray(v) for k, v in metrics._asdict().items()}
+    rounds = next(iter(fields.values())).shape[0]
+    records = []
+    for r in range(rounds):
+        rec: dict[str, Any] = {"kind": "consensus", "step": int(step), "round": r}
+        if agent is not None:
+            rec["agent"] = int(agent)
+        for key, val in fields.items():
+            v = val[r]
+            rec[key] = float(v) if v.ndim == 0 else v.tolist()
+        records.append(rec)
+    return records
+
+
+def read_jsonl(path) -> list[dict]:
+    """Load every record from a JSONL metric file."""
+    records = []
+    with open(str(path)) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                records.append(json.loads(line))
+    return records
+
+
+def summarize(records: Iterable[dict], kind: str = "consensus") -> dict:
+    """Per scalar metric key: ``{"mean": ..., "last": ..., "n": ...}`` over
+    all records of ``kind`` (rounds x steps x agents pooled)."""
+    rows = [r for r in records if r.get("kind") == kind]
+    keys: list[str] = []
+    for r in rows:
+        for k, v in r.items():
+            if k not in ("kind", "step", "round", "agent") and isinstance(
+                v, (int, float)
+            ) and k not in keys:
+                keys.append(k)
+    out = {}
+    for k in keys:
+        vals = [r[k] for r in rows if isinstance(r.get(k), (int, float))]
+        if vals:
+            out[k] = {
+                "mean": float(np.mean(vals)),
+                "last": float(vals[-1]),
+                "n": len(vals),
+            }
+    return out
+
+
+def format_summary(summary: dict) -> str:
+    """Console table for :func:`summarize` output."""
+    if not summary:
+        return "(no records)"
+    width = max(len(k) for k in summary)
+    lines = [f"{'metric':<{width}}  {'mean':>14}  {'last':>14}  {'n':>6}"]
+    for k, s in summary.items():
+        lines.append(
+            f"{k:<{width}}  {s['mean']:>14.6g}  {s['last']:>14.6g}  {s['n']:>6d}"
+        )
+    return "\n".join(lines)
+
+
+def write_csv(records: Iterable[dict], path) -> None:
+    """Write records of one kind to CSV (union of keys; list-valued fields
+    are JSON-encoded in their cell)."""
+    rows = list(records)
+    if not rows:
+        return
+    keys: list[str] = []
+    for r in rows:
+        for k in r:
+            if k not in keys:
+                keys.append(k)
+    with open(str(path), "w", newline="") as f:
+        writer = csv.DictWriter(f, fieldnames=keys)
+        writer.writeheader()
+        for r in rows:
+            writer.writerow(
+                {
+                    k: json.dumps(v) if isinstance(v, (list, dict)) else v
+                    for k, v in r.items()
+                }
+            )

@@ -1,0 +1,56 @@
+"""Host-side throughput tracking: steps/s and tokens/s for the train loop.
+
+Wraps wall-clock measurement around jitted chunk calls.  For honest numbers
+the device sync must land INSIDE the window — call :meth:`Throughput.update`
+only after ``block_until_ready`` (or a ``float()`` on a metric, which the
+launch loop does anyway to print the loss).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+@dataclasses.dataclass(frozen=True)
+class Rate:
+    """One measurement window's throughput."""
+
+    steps_per_s: float
+    tokens_per_s: float
+    steps: int
+    tokens: int
+    seconds: float
+
+
+class Throughput:
+    """Windowed + lifetime steps/s / tokens/s tracker.
+
+    ``update(steps, tokens)`` returns the :class:`Rate` for the window since
+    the previous update (the first window opens at construction);
+    ``lifetime()`` aggregates everything since construction.
+    """
+
+    def __init__(self, clock=time.perf_counter):
+        self._clock = clock
+        self._start = clock()
+        self._t0 = self._start
+        self.total_steps = 0
+        self.total_tokens = 0
+
+    def update(self, steps: int, tokens: int = 0) -> Rate:
+        now = self._clock()
+        dt = max(now - self._t0, 1e-9)
+        self._t0 = now
+        self.total_steps += steps
+        self.total_tokens += tokens
+        return Rate(steps / dt, tokens / dt, steps, tokens, dt)
+
+    def lifetime(self) -> Rate:
+        dt = max(self._clock() - self._start, 1e-9)
+        return Rate(
+            self.total_steps / dt,
+            self.total_tokens / dt,
+            self.total_steps,
+            self.total_tokens,
+            dt,
+        )

@@ -365,6 +365,81 @@ def test_train_many_steps_bitwise_matches_single_steps():
     assert "MANY-STEPS-BITWISE-OK" in out
 
 
+def test_permute_telemetry_matches_analytic_and_direct():
+    """PermuteConsensus(obs=...) on a real 4-device mesh: the per-agent
+    runtime wire counters equal ``comm.accounting.collective_bytes_per_step``
+    for every codec — including the chain graph, whose analytic row now uses
+    the same greedy matching decomposition the engine actually runs — and
+    the (psum'd, agent-replicated) global disagreement matches the direct
+    mean_k |x_k - xbar|^2 of the round output."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.core import ring, chain, DRTConfig
+        from repro.core.consensus import PermuteConsensus
+        from repro.comm.accounting import collective_bytes_per_step
+        from repro.obs.metrics import ObsConfig
+        from repro.utils.pytree import LayerPartition
+
+        K = 4
+        mesh = jax.make_mesh((K,), ("data",))
+
+        def tree_init(k):
+            k1, k2 = jax.random.split(k)
+            return {"embed": {"w": jax.random.normal(k1, (4, 8))},
+                    "blocks": {"w": jax.random.normal(k2, (3, 8, 8))}}
+
+        pK = jax.vmap(tree_init)(jax.random.split(jax.random.key(0), K))
+        part = LayerPartition.build(jax.tree.map(lambda x: x[0], pK))
+        specs = jax.tree.map(lambda _: P("data"), pK)
+        rng = jax.random.key(7)
+        template = jax.tree.map(lambda x: x[0], pK)
+
+        for topo in (ring(K), chain(K)):
+            for codec in (None, "int8", "topk:0.1:0"):
+                for path in ("slab", "tree"):
+                    eng = PermuteConsensus(part, topo, DRTConfig(),
+                                           axis_name="data", codec=codec,
+                                           path=path)
+                    def body(local):
+                        sq = jax.tree.map(lambda x: x[0], local)
+                        if codec:
+                            out, _, cm = eng(sq, rng=rng, rounds=2,
+                                             obs=ObsConfig())
+                        else:
+                            out, cm = eng(sq, rounds=2, obs=ObsConfig())
+                        return (jax.tree.map(lambda x: x[None], out),
+                                jax.tree.map(lambda x: x[None], cm))
+                    out, cm = shard_map(
+                        body, mesh=mesh, in_specs=(specs,),
+                        out_specs=(specs, P("data")), check_rep=False)(pK)
+                    tag = f"{topo.name}/{codec}/{path}"
+                    assert cm.disagreement.shape == (K, 2), tag
+                    d = np.asarray(cm.disagreement)
+                    assert np.allclose(d, d[0:1], rtol=1e-6), tag
+                    leaves = jax.tree.leaves(out)
+                    dis = sum(float(jnp.sum(jnp.square(
+                        l - jnp.mean(l, 0, keepdims=True)))) for l in leaves) / K
+                    np.testing.assert_allclose(float(d[0, -1]), dis,
+                                               rtol=1e-3, atol=1e-5,
+                                               err_msg=tag)
+                    acc = collective_bytes_per_step(topo, template,
+                                                    "permute", codec)
+                    got = np.asarray(cm.wire_recv_bytes)
+                    np.testing.assert_allclose(got, float(acc["recv_bytes"]),
+                                               err_msg=tag)
+                    np.testing.assert_allclose(np.asarray(cm.wire_send_bytes),
+                                               float(acc["recv_bytes"]),
+                                               err_msg=tag)
+                    want_edges = float(np.sum(topo.adjacency)) / 2
+                    np.testing.assert_allclose(np.asarray(cm.edges),
+                                               want_edges, err_msg=tag)
+        print("PERMUTE-TELEMETRY-OK")
+    """, devices=4)
+    assert "PERMUTE-TELEMETRY-OK" in out
+
+
 def test_permute_train_step_threads_codec_state():
     """End-to-end: the permute engine inside shard_map threads the top-k
     error-feedback residual through TrainState.comm, sharded like params."""
