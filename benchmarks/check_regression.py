@@ -38,6 +38,21 @@ reviewed act), and FAILS (exit 1) when any tracked metric regresses:
                       the tracked-relative bound: "near-free when enabled"
                       is part of the observability contract, not a drift
                       budget.
+  sparse_flop_speedup[K=..]
+                      dense coded round-set FLOPs / edge round-set FLOPs
+                      (XLA cost analysis, ring) — the machine-independent
+                      O(K^2 D) -> O(|E| D) floor break.  HARD absolute
+                      floor 1.5 at K=64 on top of the tracked-relative
+                      bound: the sparse path must always break the dense
+                      FLOP floor, whatever the runner.
+  sparse_speedup[K=..]
+                      dense/edge WALL ratio of the same coded round-sets
+                      (interleaved medians) — tracked relatively so the
+                      edge path can never silently regress below its
+                      recorded standing vs dense.  No absolute floor: the
+                      wall win tracks the host's matmul:bandwidth ratio
+                      (see combine_micro.run_sparse_paths), so a hard wall
+                      gate would pin a hardware property, not a code one.
 
 Untimed rows (permute-engine wire-volume rows, tagged ``"untimed": true``)
 are excluded from every computation.  On failure the gate prints the full
@@ -94,6 +109,13 @@ def collect_metrics(doc) -> list[tuple[str, float, str]]:
     out.append(("many_steps_speedup", tm.get("speedup_many_steps"), "up"))
     tl = doc.get("telemetry") or {}
     out.append(("telemetry_overhead_ratio", tl.get("overhead_ratio"), "down"))
+    for r in (doc.get("sparse") or {}).get("rows") or []:
+        if r.get("dense_untimed"):
+            continue  # analytic-only row (CI edge smoke / huge K)
+        out.append((f"sparse_flop_speedup[K={r['K']}]",
+                    r.get("sparse_flop_speedup"), "up"))
+        out.append((f"sparse_speedup[K={r['K']}]",
+                    r.get("sparse_speedup"), "up"))
     return out
 
 
@@ -172,6 +194,11 @@ def main(argv=None) -> int:
         if name == "telemetry_overhead_ratio":
             bound = min(bound, 1.05)
             ok = fresh_v <= bound
+        # the FLOP floor break is a hard claim, not a drift budget: at
+        # K=64 the edge path must cost < 1/1.5 the dense coded FLOPs
+        if name == "sparse_flop_speedup[K=64]":
+            bound = max(bound, 1.5)
+            ok = fresh_v >= bound
         table.append((name, tracked_v, fresh_v, bound, "OK" if ok else "REGRESSION"))
         failed = failed or not ok
 

@@ -26,6 +26,17 @@ in-graph consensus telemetry (``obs=ObsConfig()``) vs disabled — the
 near-free-when-enabled half of the observability contract (the
 zero-cost-when-disabled half is a jaxpr-identity test).
 
+PR 7 adds ``sparse``: the edge-list consensus path (``path="edge"``) vs
+the dense coded round at K=16/64/256 on a ring — wall medians
+(interleaved, compiled executables) AND XLA cost-analysis FLOPs/bytes per
+program.  ``sparse_flop_speedup`` (dense/edge FLOPs) is the
+machine-independent floor break and is hard-gated >= 1.5 at K=64 by
+``check_regression.py``; ``sparse_speedup`` (wall) is tracked relatively
+only, because on this bandwidth-bound single-core host the dense K²D
+BLAS is compute-cheap while the edge path streams more bytes.  ``--K n
+--path edge [--devices m]`` refreshes just the sparse section (the CI
+large-K smoke runs it sharded over forced host devices).
+
 Permute-engine rows carry the engine-specific wire volume only by default;
 timing one needs a multi-device mesh, so those rows are tagged
 ``"untimed": true`` (instead of a null ``us_per_call``) and excluded from
@@ -60,7 +71,14 @@ if "--permute-timing" in sys.argv:  # must precede any jax import
         "--xla_force_host_platform_device_count=16 "
         + os.environ.get("XLA_FLAGS", "")
     )
+if "--devices" in sys.argv:  # ditto: forced host devices for the sharded
+    _n = sys.argv[sys.argv.index("--devices") + 1]  # large-K edge-path smoke
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_n} "
+        + os.environ.get("XLA_FLAGS", "")
+    )
 
+import argparse
 import json
 import time
 
@@ -71,6 +89,7 @@ from repro.comm import collective_bytes_per_step as codec_bytes_per_step
 from repro.core import (
     DRTConfig,
     build_slab_layout,
+    edge_stacks_from_topology,
     gather_consensus_rounds,
     make_topology,
 )
@@ -305,6 +324,139 @@ def run_permute_timing(K: int = 16, codecs=("identity", "bf16", "int8", "topk:0.
     return _time_paired(fns, pK, iters=5)
 
 
+def run_sparse_paths(
+    Ks=(16, 64, 256), rounds: int = ROUNDS, time_dense: bool = True,
+    dense_timed_max: int = 256, codec: "str | None" = "bf16",
+):
+    """Dense O(K^2 D) vs sparse edge-list O(|E| D) CODED round-sets on the
+    ring — the agent-axis scaling trajectory (``sparse_speedup`` rows, gated
+    by check_regression.py).  The coded path is where the dense floor lives:
+    every dense coded round pays the (L, K, K)-vs-slab Gram stats plus the
+    (K, K) combine contraction, both O(K^2 D), while the edge round streams
+    O(|E| D) + O(Dmax K D).  Each timed row records BOTH wall time and
+    XLA's own cost analysis: ``sparse_flop_speedup`` (dense FLOPs / edge
+    FLOPs — the machine-independent O(K^2 D) -> O(|E| D) floor break,
+    hard-gated >= 1.5 at K=64 by check_regression.py) and bytes accessed.
+    Wall ``sparse_speedup`` is tracked relatively (no silent regression):
+    on this bandwidth-bound single-core host (~5 GB/s streaming vs ~43
+    GF/s BLAS) the dense contractions are compute-cheap enough that wall
+    stays near parity at every K even as the FLOP gap reaches 29x — the
+    wall win needs hardware whose matmul:bandwidth ratio is less lopsided
+    or a fused segment kernel (see kernels/slab_segment.py, interpret-mode
+    on CPU).  ``K > dense_timed_max``
+    (or ``time_dense=False``, the ``--path edge`` CI smoke) skips the dense
+    timing — those rows carry the analytic FLOP ratio and an ``untimed``
+    dense tag instead.  Under a forced multi-device host (``--devices N``)
+    the slab's agent axis and the edge tables are placed with the
+    ``launch/sharding.py`` consensus specs, exercising the sharded large-K
+    path end-to-end."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import max_in_degree_from_topology
+
+    n_dev = jax.device_count()
+    rng = jax.random.key(11)
+    rows = []
+    for K in Ks:
+        pK = _model_stack(jax.random.key(0), K)
+        template = jax.tree.map(lambda x: x[0], pK)
+        part = LayerPartition.build(template)
+        layout = build_slab_layout(part, template)
+        topo = make_topology("ring", K)
+        C = jnp.asarray(topo.c_matrix(), jnp.float32)
+        metro = jnp.asarray(topo.metropolis(), jnp.float32)
+        edges = edge_stacks_from_topology(topo, rounds)
+        dmax = max_in_degree_from_topology(topo)
+        e_dir = int(jnp.sum(edges.w[0] > 0.0))
+        sharded = n_dev > 1 and K % n_dev == 0
+        if sharded:
+            from repro.launch.sharding import edge_stack_pspecs
+
+            mesh = jax.make_mesh((n_dev,), ("data",))
+            pK = jax.tree.map(
+                lambda x: jax.device_put(x, NamedSharding(mesh, P("data"))), pK
+            )
+            edges = type(edges)(
+                *(
+                    jax.device_put(x, NamedSharding(mesh, s))
+                    for x, s in zip(edges, edge_stack_pspecs(mesh, e_dir))
+                )
+            )
+        common = dict(
+            rounds=rounds, algorithm="drt", metropolis=metro, layout=layout,
+            codec=codec, rng=rng if codec is not None else None,
+        )
+        fns = {
+            "dense": jax.jit(
+                lambda pK: gather_consensus_rounds(
+                    part, pK, C, DRTConfig(), path="slab", **common
+                )[0]
+            ),
+            "edge": jax.jit(
+                lambda pK: gather_consensus_rounds(
+                    part, pK, C, DRTConfig(), path="edge", edges=edges,
+                    max_in_degree=dmax, **common
+                )[0]
+            ),
+        }
+        row = dict(
+            K=K,
+            topology="ring",
+            algorithm="drt",
+            codec=codec or "none",
+            rounds=rounds,
+            directed_edges=e_dir,
+            max_in_degree=dmax,
+            dense_vs_edge_flop_ratio=K * K / e_dir,
+            devices=n_dev,
+            sharded=sharded,
+        )
+        iters = 9 if K <= 16 else (5 if K <= 64 else 3)
+        if time_dense and K <= dense_timed_max:
+            compiled = {k: f.lower(pK).compile() for k, f in fns.items()}
+            cost = {}
+            for k, ex in compiled.items():
+                ca = ex.cost_analysis()
+                cost[k] = ca[0] if isinstance(ca, list) else ca
+            times = _time_paired(compiled, pK, iters=iters)
+            row.update(
+                us_dense=times["dense"] * 1e6,
+                us_edge=times["edge"] * 1e6,
+                sparse_speedup=times["dense"] / times["edge"],
+                flops_dense=cost["dense"].get("flops", 0.0),
+                flops_edge=cost["edge"].get("flops", 0.0),
+                bytes_dense=cost["dense"].get("bytes accessed", 0.0),
+                bytes_edge=cost["edge"].get("bytes accessed", 0.0),
+                sparse_flop_speedup=(
+                    cost["dense"].get("flops", 0.0)
+                    / max(cost["edge"].get("flops", 0.0), 1.0)
+                ),
+            )
+        else:
+            row.update(us_edge=_time(fns["edge"], pK, iters=iters) * 1e6,
+                       dense_untimed=True)
+        rows.append(row)
+    return rows
+
+
+def update_sparse_section(path: str, Ks, time_dense: bool = True) -> dict:
+    """Re-measure the sparse rows for ``Ks`` and merge them into the bench
+    doc at ``path`` (rows for other K values are kept) — the large-K CI
+    smoke refreshes K=64 without re-running the full suite."""
+    rows = run_sparse_paths(Ks=Ks, time_dense=time_dense)
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        doc = {"generated_by": "benchmarks/combine_micro.py"}
+    sec = doc.setdefault("sparse", {"rounds": ROUNDS})
+    keep = [r for r in sec.get("rows", []) if r["K"] not in {r2["K"] for r2 in rows}]
+    sec["rows"] = sorted(keep + rows, key=lambda r: r["K"])
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    return doc
+
+
 def run_trace_compile(K: int = 16, rounds: int = SCAN_ROUNDS, codecs=(None, "bf16")):
     """Trace/compile wall-time of ONE jitted round-set: scanned (lax.scan,
     O(1) in rounds) vs the unrolled parity oracle (O(rounds)) — the metric
@@ -518,7 +670,8 @@ def codec_overhead_ratios(rows) -> dict:
 
 
 def write_bench_json(
-    path: str = BENCH_JSON, K: int = 16, permute_timing: bool = False
+    path: str = BENCH_JSON, K: int = 16, permute_timing: bool = False,
+    sparse_Ks=(16, 64, 256),
 ) -> dict:
     """Emit the perf-trajectory artifact consumed by CI and future PRs."""
     permute_times = run_permute_timing(K=K) if permute_timing else None
@@ -533,6 +686,7 @@ def write_bench_json(
         "speedup_slab_vs_tree": speedup,
         "codec_overhead": codec_overhead_ratios(rows),
         "rows": rows,
+        "sparse": {"rounds": ROUNDS, "rows": run_sparse_paths(Ks=sparse_Ks)},
         "trace_compile": {"rounds": SCAN_ROUNDS, "rows": run_trace_compile(K=K)},
         "dispatch": {"rounds": ROUNDS, "rows": run_dispatch_counts(K=K)},
         "train_many_steps": run_train_chunking(),
@@ -543,8 +697,55 @@ def write_bench_json(
     return doc
 
 
-def main():
-    doc = write_bench_json(permute_timing="--permute-timing" in sys.argv)
+def _print_sparse(doc):
+    print(f"\nsparse edge path vs dense O(K^2 D) (coded drt round-sets, "
+          f"ring, {doc['sparse']['rounds']} rounds/call):")
+    print(f"{'K':>4s} {'|E|dir':>7s} {'us dense':>10s} {'us edge':>10s} "
+          f"{'wall':>7s} {'flops':>7s} {'flop K^2/|E|':>13s} {'devices':>8s}")
+    for r in doc["sparse"]["rows"]:
+        dense = "untimed" if r.get("dense_untimed") else f"{r['us_dense']:.0f}"
+        sp = "-" if r.get("dense_untimed") else f"{r['sparse_speedup']:.2f}x"
+        fsp = (
+            "-" if "sparse_flop_speedup" not in r
+            else f"{r['sparse_flop_speedup']:.1f}x"
+        )
+        print(f"{r['K']:4d} {r['directed_edges']:7d} {dense:>10s} "
+              f"{r['us_edge']:10.0f} {sp:>7s} {fsp:>7s} "
+              f"{r['dense_vs_edge_flop_ratio']:13.1f} {r['devices']:8d}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--permute-timing", action="store_true",
+                    help="time PermuteConsensus on 16 forced host devices")
+    ap.add_argument("--K", default=None,
+                    help="comma list of agent counts for the sparse "
+                         "dense-vs-edge sweep (default 16,64,256 — K=256 is "
+                         "the gated crossover row)")
+    ap.add_argument("--path", default="all", choices=["all", "edge"],
+                    help="'edge' re-measures ONLY the sparse edge rows and "
+                         "merges them into the existing bench doc (the "
+                         "large-K CI smoke); 'all' runs the full suite")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="force N host devices (must be on the command line "
+                         "— consumed before jax init) so the sparse sweep "
+                         "runs with the agent axis sharded over a data mesh")
+    ap.add_argument("--out", default=BENCH_JSON,
+                    help="bench doc path (default: repo-root BENCH_consensus.json)")
+    args = ap.parse_args(argv)
+    sparse_Ks = (
+        tuple(int(k) for k in args.K.split(",")) if args.K else (16, 64, 256)
+    )
+
+    if args.path == "edge":
+        doc = update_sparse_section(args.out, sparse_Ks, time_dense=False)
+        _print_sparse(doc)
+        print(f"\nupdated sparse rows in {os.path.abspath(args.out)}")
+        return doc["sparse"]["rows"]
+
+    doc = write_bench_json(
+        args.out, permute_timing=args.permute_timing, sparse_Ks=sparse_Ks
+    )
     print(f"slab vs tree (identity, gather, K={doc['K']}, "
           f"{doc['rounds_per_call']} rounds/call): {doc['speedup_slab_vs_tree']:.2f}x")
     print(f"{'engine':8s} {'path':5s} {'codec':10s} {'us/call':>10s} {'recv MB/round':>14s}")
@@ -575,6 +776,7 @@ def main():
     print(f"telemetry overhead (exact drt slab, {tl['rounds']} rounds): "
           f"{tl['us_disabled']:.0f}us off -> {tl['us_enabled']:.0f}us on "
           f"({tl['overhead_ratio']:.3f}x)")
+    _print_sparse(doc)
     rows = run(K=16)
     print()
     print(f"{'topology':10s} {'algo':>9s} {'us tree':>9s} {'us slab':>9s} {'x':>5s} "
@@ -584,7 +786,7 @@ def main():
               f"{r['us_slab']:9.0f} {r['slab_speedup']:5.1f} "
               f"{r['gather_recv_mb_identity']:9.2f} {r['permute_recv_mb_identity']:9.2f} "
               f"{r['permute_recv_mb_int8']:9.2f}")
-    print(f"\nwrote {os.path.abspath(BENCH_JSON)}")
+    print(f"\nwrote {os.path.abspath(args.out)}")
     return rows
 
 

@@ -85,6 +85,7 @@ from repro.comm import collective_bytes_per_step as _codec_bytes_per_step
 from repro.core import drt as drt_mod
 from repro.core import packing
 from repro.core.drt import DRTConfig
+from repro.core.dynamic import EdgeStacks, csr_from_edges, metropolis_edge_weights
 from repro.core.topology import Topology
 from repro.obs import metrics as obs_metrics
 from repro.obs import profiling as obs_profiling
@@ -92,7 +93,7 @@ from repro.obs.metrics import ConsensusMetrics, ObsConfig
 from repro.utils.pytree import LayerPartition
 
 Algorithm = Literal["drt", "classical"]
-ConsensusPath = Literal["slab", "tree"]
+ConsensusPath = Literal["slab", "tree", "edge"]
 
 
 def _resolve_codec(codec, exchange_dtype) -> "WireCodec | None":
@@ -478,6 +479,8 @@ def gather_consensus_rounds(
     rng: jax.Array | None = None,
     layout: "packing.SlabLayout | None" = None,
     path: ConsensusPath = "slab",
+    edges: "EdgeStacks | None" = None,
+    max_in_degree: int | None = None,
     use_kernels: bool = False,
     unroll: bool = False,
     obs: "ObsConfig | None" = None,
@@ -510,6 +513,21 @@ def gather_consensus_rounds(
     codec without a slab fast path) falls back to scanning the per-leaf
     reference oracle :func:`gather_consensus_step`.
 
+    ``path="edge"`` is the SPARSE hot path: pass ``edges=`` (a per-round
+    :class:`~repro.core.dynamic.EdgeStacks` from
+    :meth:`~repro.core.dynamic.TopologySchedule.edge_stacks`) and every
+    round runs per-edge distance stats, the edge-factorized eq. 12-14
+    weights and a sparse combine — O(|E| D) per round instead of the dense
+    paths' O(K^2 D), numerically matching the dense result on the realized
+    graph (the dense path stays the parity oracle).  Pass
+    ``max_in_degree=`` (a static host bound, e.g.
+    :attr:`TopologySchedule.max_in_degree`) to run the GATHER-ONLY CSR
+    round: neighbour rows are gathered once per round and shared between
+    the stats and the combine, with no scatter anywhere (scatters
+    serialize on CPU backends); without it the round uses the
+    scatter-by-destination oracle.  With ``use_kernels=True`` each round
+    is ONE ``slab_edge_combine`` launch.
+
     Telemetry: with ``obs=`` an :class:`~repro.obs.ObsConfig`, the return
     gains a fourth element — a :class:`~repro.obs.ConsensusMetrics` stack
     with leading ``(rounds,)`` axis emitted as the round scan's ys (see
@@ -521,12 +539,19 @@ def gather_consensus_rounds(
     prices its telemetry by re-deriving the wire (documented oracle cost).
     """
     wire_codec = _resolve_codec(codec, None)
-    if path not in ("slab", "tree"):
+    if path not in ("slab", "tree", "edge"):
         raise ValueError(f"unknown consensus path {path!r}")
-    if path == "slab" and not (
+    if path == "edge" and edges is None:
+        raise ValueError(
+            'path="edge" needs edges= (an EdgeStacks round stack from '
+            "TopologySchedule.edge_stacks / edge_stacks_from_topology)"
+        )
+    if path in ("slab", "edge") and not (
         packing.slab_codec_supported(wire_codec)
         and packing.slab_template_supported(psi_K)
     ):
+        # the edge path is slab-native; codecs/templates without a slab fast
+        # path take the same per-leaf oracle fallback as path="slab"
         path = "tree"
     if rounds <= 0:
         state0 = codec_state if codec_state is not None else ()
@@ -636,6 +661,185 @@ def gather_consensus_rounds(
     exact = wire_codec is None or isinstance(wire_codec, IdentityCodec)
     if not exact:
         rng = _require_rng(wire_codec, rng)
+
+    if path == "edge":
+        # Sparse edge-list rounds: per-edge stats + edge-factorized mixing +
+        # gather/scatter combine — O(|E| D) per round where every dense slab
+        # round (and the dense exact Gram pass) is O(K^2 D).  Exact and coded
+        # rounds share ONE body: the exact Gram recurrence is deliberately
+        # NOT used here — on a sparse graph rounds x O(|E| D) undercuts even
+        # the recurrence's one-time O(K^2 D) Gram + combine passes.
+        if edges.src.ndim != 2 or edges.src.shape[0] != rounds:
+            raise ValueError(
+                f"edges stack covers {edges.src.shape[0] if edges.src.ndim == 2 else '?'} "
+                f"rounds, round-set runs {rounds}"
+            )
+        E = edges.src.shape[-1]
+        edge_kernel = use_kernels and obs is None and algorithm in ("drt", "classical")
+        if obs is not None:
+            idb = obs_metrics.slab_identity_bytes(layout)
+            send_exact = jnp.asarray(
+                obs_metrics.slab_identity_bytes(layout), jnp.float32
+            )
+        bl = jnp.asarray(layout.block_layer)
+
+        def edge_body(carry, xs):
+            regions, res, _ = carry
+            r, src, dst, w = xs
+            if exact:
+                new_res, wire = res, None
+                with obs_profiling.scope(obs, "consensus.decode"):
+                    decoded = regions
+            else:
+                keys = _agent_keys(jax.random.fold_in(rng, r), K)
+                with obs_profiling.scope(obs, "consensus.encode"):
+                    wire, new_res = packing.slab_encode_batched(
+                        wire_codec, layout, regions, res, keys
+                    )
+                # materialize the WIRE, not the decoded slab: the sparse
+                # round's gather/stat consumers then re-read compact wire
+                # bytes with the (cheap) decode fused in, instead of either
+                # a full f32 slab or a per-consumer re-run of the encode
+                # chain (XLA duplicates fused producers — ruinous for the
+                # int8 stochastic-rounding RNG)
+                wire = jax.lax.optimization_barrier(wire)
+                with obs_profiling.scope(obs, "consensus.decode"):
+                    decoded = packing.slab_decode(wire_codec, layout, wire)
+            d2e = None
+            if edge_kernel:
+                # ONE slab_edge_combine launch: gather-by-edge stats +
+                # eq. 12-14 edge factors + scatter-combine (self term rides
+                # along); coded rounds feed it the jnp-decoded slab
+                from repro.kernels import slab_edge_combine
+
+                out, A_self, A_e = slab_edge_combine(
+                    bl, layout.join(regions), layout.join(decoded),
+                    src, dst, w,
+                    algorithm=algorithm,
+                    num_layers=L,
+                    kappa=cfg.kappa,
+                    N_clip=cfg.resolve_N(K),
+                    weight_mode=cfg.weight_mode,
+                    lane=layout.lane,
+                )
+                new_regions = layout.split(out)
+            else:
+                csr = None
+                if max_in_degree is not None:
+                    # gather-only round: per-destination CSR tables derived
+                    # in-graph from the sorted edge list (D-free algebra),
+                    # Dmax neighbour gathers shared by stats and combine —
+                    # no scatter anywhere (scatters serialize on CPU)
+                    nbr, pos, valid, rank = csr_from_edges(
+                        src, dst, w, K, max_in_degree
+                    )
+                    if exact:
+                        nbr_rows = layout.csr_neighbor_rows(decoded, nbr)
+                    else:
+                        # gather COMPACT wire rows and decode after: dequant
+                        # is per-row, so decode(take(wire)) == take(decoded)
+                        # bit for bit, but the neighbour reads move 2x (bf16)
+                        # / ~4x (int8) fewer bytes than an f32 slab gather
+                        nbr_rows = [
+                            packing.slab_decode(
+                                wire_codec, layout,
+                                packing.slab_wire_take(
+                                    wire_codec, wire, nbr[:, j]
+                                ),
+                            )
+                            for j in range(max_in_degree)
+                        ]
+                    csr = (pos, valid, nbr_rows)
+                if algorithm == "drt":
+                    n2 = layout.layer_sq_norms(decoded)
+                    if csr is not None:
+                        d2_csr = layout.csr_sq_dists(decoded, nbr_rows)
+                        d2e = jnp.where(
+                            (w > 0.0)[None], d2_csr[:, dst, rank], 0.0
+                        )
+                    else:
+                        d2e = layout.edge_sq_dists(decoded, src, dst)
+                    A_self, A_e = drt_mod.drt_edge_mixing(
+                        d2e, n2, src, dst, w, cfg, K
+                    )
+                elif algorithm == "classical":
+                    m_self, m_e = metropolis_edge_weights(src, dst, w, K)
+                    A_self = jnp.broadcast_to(m_self[None], (L, K))
+                    A_e = jnp.broadcast_to(m_e[None], (L, E))
+                else:
+                    raise ValueError(f"unknown algorithm {algorithm!r}")
+                with obs_profiling.scope(obs, "consensus.combine"):
+                    if csr is not None:
+                        pos, valid, nbr_rows = csr
+                        a_csr = jnp.where(valid[None], A_e[:, pos], 0.0)
+                        new_regions = layout.csr_combine(
+                            A_self, a_csr, regions, nbr_rows
+                        )
+                    else:
+                        new_regions = layout.edge_combine(
+                            A_self, A_e, src, dst, regions, decoded
+                        )
+            # densified (L, K, K) mixing matrices: tiny K^2 algebra for the
+            # A_last return / telemetry entropy, no D-sized work
+            A = drt_mod.edge_mixing_dense(A_self, A_e, src, dst, w, K)
+            if obs is None:
+                return (new_regions, new_res, A), None
+            mask = (w > 0.0).astype(jnp.float32)
+            n_dir = jnp.sum(mask)  # realized DIRECTED edge count
+            if d2e is not None:
+                # edge-RESTRICTED distance summaries: the stats the sparse
+                # round actually computed (the dense paths report all-pairs)
+                d2m = jnp.sum(d2e * mask[None], axis=1) / jnp.maximum(n_dir, 1.0)
+                d2x = jnp.max(d2e * mask[None], axis=1)
+            else:
+                d2m = d2x = jnp.zeros((L,), jnp.float32)
+            if stateful:
+                ef = (
+                    sum(jnp.sum(jnp.square(t.astype(jnp.float32))) for t in new_res)
+                    / float(K)
+                )
+            else:
+                ef = jnp.zeros((), jnp.float32)
+            if exact:
+                send = send_exact
+            else:
+                send = jnp.mean(
+                    obs_metrics.slab_wire_send_bytes(wire_codec, layout, wire)
+                )
+            m = ConsensusMetrics(
+                disagreement=packing.region_disagreement(new_regions),
+                layer_d2_mean=d2m,
+                layer_d2_max=d2x,
+                mix_entropy=obs_metrics.mixing_entropy(A),
+                ef_residual=ef,
+                # neighbour-only receive volume: mean in-degree x send — the
+                # sparse wire's honest number (dense paths bill (K-1) x send)
+                wire_recv_bytes=(n_dir / float(K)) * send,
+                wire_send_bytes=send,
+                compression_ratio=idb / jnp.maximum(send, 1.0),
+                edges=n_dir / 2.0,
+            )
+            return (new_regions, new_res, A), m
+
+        (regions, res, A_last), metrics = _scan_rounds(
+            edge_body,
+            (regions, res if stateful else (), A0),
+            (jnp.arange(rounds), edges.src, edges.dst, edges.w),
+            rounds,
+            unroll,
+        )
+        with obs_profiling.scope(obs, "consensus.unpack"):
+            new_K = layout.unpack_regions(regions, like=psi_K)
+        if stateful:
+            like = codec_state if codec_state not in (None, ()) else psi_K
+            res_tree = layout.unpack_regions(res, like=like, dtype=jnp.float32)
+            if obs is None:
+                return new_K, A_last, res_tree
+            return new_K, A_last, res_tree, metrics
+        state0 = codec_state if codec_state is not None else ()
+        if obs is None:
+            return new_K, A_last, state0
+        return new_K, A_last, state0, metrics
 
     if exact:
         # Exact exchange: the combine is linear, so the whole round-set runs

@@ -24,7 +24,11 @@ import jax.numpy as jnp
 from repro.comm import WireCodec, init_comm_state, make_codec
 from repro.core.consensus import Algorithm, ConsensusPath, gather_consensus_rounds
 from repro.core.drt import DRTConfig
-from repro.core.dynamic import make_schedule
+from repro.core.dynamic import (
+    edge_stacks_from_topology,
+    make_schedule,
+    max_in_degree_from_topology,
+)
 from repro.core.packing import SlabLayout, build_slab_layout, slab_template_supported
 from repro.core.topology import Topology
 from repro.obs.metrics import ObsConfig
@@ -53,8 +57,9 @@ class TrainerConfig:
     # WireCodec instance; None keeps the exact full-precision exchange
     codec: "WireCodec | str | None" = None
     # "slab" (default) packs the agent-stacked tree once per consensus
-    # round-set and runs every round on the flat (K, D) slab; "tree" is the
-    # per-leaf reference oracle
+    # round-set and runs every round on the flat (K, D) slab; "edge" runs the
+    # sparse O(|E| D) edge-list rounds over the realized graph (dense slab
+    # stays the parity oracle); "tree" is the per-leaf reference oracle
     consensus_path: ConsensusPath = "slab"
     # run the slab combine/stats through the Pallas kernels (interpret mode
     # on CPU, real kernels on TPU)
@@ -100,6 +105,7 @@ class DecentralizedTrainer:
             self.schedule = None
         self._C = jnp.asarray(mix_topo.c_matrix(), jnp.float32)
         self._metropolis = jnp.asarray(mix_topo.metropolis(), jnp.float32)
+        self._mix_topo = mix_topo
         self._partition: LayerPartition | None = None
         self._layout: SlabLayout | None = None
 
@@ -136,7 +142,8 @@ class DecentralizedTrainer:
         self._partition = LayerPartition.build(template, stacked_keys=self.stacked_keys)
         self._layout = (
             build_slab_layout(self._partition, template)
-            if self.cfg.consensus_path == "slab" and slab_template_supported(template)
+            if self.cfg.consensus_path in ("slab", "edge")
+            and slab_template_supported(template)
             else None  # non-float leaves: consensus falls back to the oracle
         )
         return self._partition
@@ -193,6 +200,23 @@ class DecentralizedTrainer:
             C, metropolis = self.schedule.mixing_stacks(
                 state.step * self.cfg.consensus_steps, self.cfg.consensus_steps
             )
+        edges = None
+        max_in_degree = None
+        if self.cfg.consensus_path == "edge":
+            # the sparse view of the SAME round-set graphs the dense stacks
+            # above realize (bit-consistent by the schedule contract); the
+            # host Dmax bound keys the gather-only CSR combine
+            if self.schedule is not None:
+                edges = self.schedule.edge_stacks(
+                    state.step * self.cfg.consensus_steps,
+                    self.cfg.consensus_steps,
+                )
+                max_in_degree = self.schedule.max_in_degree
+            else:
+                edges = edge_stacks_from_topology(
+                    self._mix_topo, self.cfg.consensus_steps
+                )
+                max_in_degree = max_in_degree_from_topology(self._mix_topo)
         out = gather_consensus_rounds(
             self.partition,
             state.params,
@@ -206,6 +230,8 @@ class DecentralizedTrainer:
             rng=rng,
             layout=self._layout,
             path=self.cfg.consensus_path,
+            edges=edges,
+            max_in_degree=max_in_degree,
             use_kernels=self.cfg.use_kernels,
             obs=obs,
         )

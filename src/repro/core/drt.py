@@ -146,6 +146,103 @@ def drt_weights_from_params(partition, params_K, C, cfg: DRTConfig) -> jax.Array
 
 
 # ---------------------------------------------------------------------------
+# Sparse (edge-list) factorization of eqs. (12)-(14)
+# ---------------------------------------------------------------------------
+
+
+def drt_edge_mixing(
+    d2_e: jax.Array,
+    n2: jax.Array,
+    src: jax.Array,
+    dst: jax.Array,
+    w: jax.Array,
+    cfg: DRTConfig,
+    K: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Eqs. (12)-(14) on a padded directed edge list — O(|E| L) not O(K^2 L).
+
+    The edge-list factorization of :func:`drt_mixing_matrices`: instead of
+    materializing (L, K, K) log weights, every per-column reduction of the
+    dense pipeline (clip min, self-weight logsumexp, normalization sum)
+    becomes a segment scatter-reduce keyed on ``dst``.  Numerically (not
+    bit-) identical to the dense construction on the realized graph —
+    shifted exponentials accumulate in a different order.
+
+    d2_e: (L, E) squared per-layer distances ``||w_src - w_dst||^2`` per edge;
+    n2: (L, K) squared norms; src/dst/w: (E,) padded directed edge list
+    (``w == 0`` marks padding; ``w`` is the off-diagonal C entry).
+    Returns ``(A_self (L, K), A_e (L, E))`` — column-stochastic:
+    ``A_self[:, k] + sum_{e: dst[e]==k} A_e[:, e] == 1``; an isolated agent
+    gets ``A_self = 1`` (the identity column), matching the dense path.
+    """
+    L = d2_e.shape[0]
+    N = cfg.resolve_N(K)
+    d2_e = d2_e.astype(jnp.float32)
+    n2 = n2.astype(jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    mask = w > 0.0
+
+    # eq. (14) per edge: ratio against the SOURCE agent's layer norms
+    ratio = d2_e / (n2[:, src] + cfg.kappa)
+    log_prod = jnp.sum(jnp.log1p(ratio), axis=0) + (L + 1) * jnp.log(2.0)  # (E,)
+    if cfg.weight_mode == "paper":
+        log_denom = jnp.log(d2_e + cfg.kappa)
+    elif cfg.weight_mode == "exact_grad":
+        log_denom = jnp.log(n2[:, src] + cfg.kappa + d2_e)
+    else:
+        raise ValueError(f"unknown weight_mode {cfg.weight_mode!r}")
+    log_w = jnp.log(jnp.where(mask, w, 1.0))
+    log_a = log_prod[None, :] - log_denom + log_w[None, :]  # (L, E)
+    log_a = jnp.where(mask[None], log_a, _NEG_INF)
+
+    # eq. (13) clip: min positive entry per (p, dst) column via segment-min
+    log_min = jnp.full((L, K), -_NEG_INF, jnp.float32).at[:, dst].min(
+        jnp.where(mask[None], log_a, -_NEG_INF)
+    )
+    log_clipped = jnp.minimum(log_a, jnp.log(N) + log_min[:, dst])
+    log_clipped = jnp.where(mask[None], log_clipped, _NEG_INF)
+
+    # self weight: a~_kk = c_kk/(n_k - 1) * sum over incoming edges
+    # (two-pass segment logsumexp: scatter-max shift, then scatter-sum)
+    n_k = 1.0 + jnp.zeros((K,), jnp.float32).at[dst].add(mask.astype(jnp.float32))
+    denom = jnp.maximum(n_k - 1.0, 1.0)
+    m1 = jnp.full((L, K), _NEG_INF, jnp.float32).at[:, dst].max(
+        jnp.where(mask[None], log_clipped, _NEG_INF)
+    )
+    sumexp = jnp.zeros((L, K), jnp.float32).at[:, dst].add(
+        jnp.where(mask[None], jnp.exp(log_clipped - m1[:, dst]), 0.0)
+    )
+    log_sum = jnp.where(sumexp > 0.0, m1 + jnp.log(jnp.maximum(sumexp, 1e-30)),
+                        _NEG_INF)
+    log_self = -jnp.log(denom)[None, :] + log_sum  # c_kk == 1 on support
+
+    # eq. (12) normalize: shifted exp over {self} u {incoming edges}
+    m = jnp.maximum(log_self, m1)
+    a_self = jnp.exp(log_self - m)
+    a_e = jnp.where(mask[None], jnp.exp(log_clipped - m[:, dst]), 0.0)
+    colsum = a_self + jnp.zeros((L, K), jnp.float32).at[:, dst].add(a_e)
+    return a_self / colsum, a_e / colsum[:, dst]
+
+
+def edge_mixing_dense(
+    A_self: jax.Array,
+    A_e: jax.Array,
+    src: jax.Array,
+    dst: jax.Array,
+    w: jax.Array,
+    K: int,
+) -> jax.Array:
+    """Densify edge-factorized mixing weights into (L, K, K) — the oracle /
+    telemetry bridge (A[p, l, k] = weight agent k applies to psi_l)."""
+    mask = jnp.asarray(w, jnp.float32) > 0.0
+    L = A_self.shape[0]
+    A = jnp.zeros((L, K, K), A_self.dtype)
+    A = A.at[:, src, dst].add(jnp.where(mask[None], A_e, 0.0))
+    idx = jnp.arange(K)
+    return A.at[:, idx, idx].set(A_self)
+
+
+# ---------------------------------------------------------------------------
 # The DRT distance itself (eqs. 8, 9) — used by tests / analysis
 # ---------------------------------------------------------------------------
 

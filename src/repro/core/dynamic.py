@@ -39,12 +39,99 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.topology import Topology, make_topology
+
+
+class EdgeStacks(NamedTuple):
+    """Per-round padded DIRECTED edge lists — the sparse view of a schedule.
+
+    Every undirected edge {l, k} of round r appears twice: once as
+    ``(src=l, dst=k)`` and once as ``(src=k, dst=l)``; entries are sorted by
+    ``(dst, src)`` so each destination agent's incoming edges are contiguous
+    (the segment order the dst-partitioned sharding of
+    :mod:`repro.launch.sharding` relies on).  Rounds are padded to a common
+    ``E_max`` with ``src = dst = 0`` and ``w = 0`` — padding is numerically
+    inert on the edge consensus path (weights are masked on ``w > 0`` and
+    scatter-adds contribute exact zeros).
+
+    ``w`` carries the support weight of the edge (the off-diagonal ``C``
+    entry — 1.0 for every built-in topology); degrees and Metropolis/DRT
+    segment weights are derived from the list in-graph
+    (:func:`metropolis_edge_weights`, :func:`repro.core.drt.drt_edge_mixing`).
+    """
+
+    src: jax.Array  # (rounds, E_max) int32
+    dst: jax.Array  # (rounds, E_max) int32
+    w: jax.Array  # (rounds, E_max) float32; 0.0 marks padding
+
+
+def metropolis_edge_weights(
+    src: jax.Array, dst: jax.Array, w: jax.Array, K: int
+) -> tuple[jax.Array, jax.Array]:
+    """Metropolis-Hastings weights (eq. 5) on a padded directed edge list.
+
+    Returns ``(m_self (K,), m_e (E,))`` — the edge-list factorization of
+    :func:`metropolis_from_adjacency`'s column: ``m_e[e]`` is the weight
+    agent ``dst[e]`` applies to ``src[e]``'s iterate, ``m_self[k]`` the
+    diagonal.  Padding edges (``w == 0``) get weight 0 and an isolated agent
+    keeps the identity column, matching the dense construction.
+    """
+    mask = (jnp.asarray(w, jnp.float32) > 0.0).astype(jnp.float32)
+    deg = jnp.ones((K,), jnp.float32).at[dst].add(mask)  # n_k incl. self loop
+    m_e = jnp.where(
+        mask > 0.0, 1.0 / jnp.maximum(deg[src], deg[dst]), 0.0
+    )
+    m_self = 1.0 - jnp.zeros((K,), jnp.float32).at[dst].add(m_e)
+    return m_self, m_e
+
+
+def csr_from_edges(
+    src: jax.Array,
+    dst: jax.Array,
+    w: jax.Array,
+    K: int,
+    max_in_degree: int,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Per-DESTINATION CSR view of a padded (dst, src)-sorted edge list —
+    the D-free index algebra behind the gather-only combine.
+
+    The edge-table contract (real edges sorted ascending by ``(dst, src)``,
+    padding ``w == 0`` rows trailing) means each destination's incoming
+    edges are contiguous, so one ``searchsorted`` per bound recovers the
+    segment offsets without any scatter.  Returns
+
+      nbr   (K, Dmax) int32  source agent of the j-th in-edge (0 when padded)
+      pos   (K, Dmax) int32  that edge's row in the edge list (clipped)
+      valid (K, Dmax) bool   j < in_degree(k)
+      rank  (E,)      int32  each edge's CSR slot index within its dst segment
+
+    ``rank`` maps per-edge quantities (L, E) to CSR layout ``(L, K, Dmax)``
+    and back: edge ``e`` lives at ``[dst[e], rank[e]]``.  All outputs are
+    traced-compatible; ``max_in_degree`` must be a static host bound (see
+    ``TopologySchedule.max_in_degree``).
+    """
+    E = src.shape[0]
+    mask = jnp.asarray(w, jnp.float32) > 0.0
+    # padding rows carry dst = 0; remap them past every real key so the
+    # composite stays sorted and searchsorted sees clean segments
+    key = jnp.where(mask, dst, K)
+    ks = jnp.arange(K)
+    offs = jnp.searchsorted(key, ks, side="left")
+    deg = jnp.searchsorted(key, ks, side="right") - offs
+    j = jnp.arange(max_in_degree)
+    pos = jnp.clip(offs[:, None] + j[None, :], 0, E - 1)  # (K, Dmax)
+    valid = j[None, :] < deg[:, None]
+    nbr = jnp.where(valid, src[pos], 0)
+    rank = jnp.clip(jnp.arange(E) - offs[jnp.clip(dst, 0, K - 1)], 0,
+                    max_in_degree - 1)
+    return nbr, pos, valid, rank
 
 
 def c_from_adjacency(adj: jax.Array) -> jax.Array:
@@ -126,6 +213,81 @@ class TopologySchedule:
         """
         raise NotImplementedError
 
+    # -- sparse (edge-list) view ----------------------------------------------
+
+    def _host_edge_period(self) -> int:
+        """Host period of the realized graph sequence: ``topology_at(t)``
+        repeats with this period.  Subclasses with a finite cycle implement
+        it; the base raises so a custom aperiodic schedule fails loudly
+        rather than silently truncating its edge view."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not expose a host edge period; "
+            "implement _host_edge_period() to enable the sparse "
+            "edge_stacks() view"
+        )
+
+    @functools.cached_property
+    def _edge_table(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(P, E_max) numpy (src, dst, w) tables realized ONCE on the host
+        from the same canonical graph sequence as ``topology_at`` /
+        ``mixing_stacks`` (both views read the same seeded cycle tables, so
+        the sparse view is bit-consistent with the dense stacks).  Directed
+        edges sorted by (dst, src); padding entries are ``src = dst = 0``
+        with ``w = 0``."""
+        P = self._host_edge_period()
+        per_round = []
+        for t in range(P):
+            adj = np.asarray(self.topology_at(t).adjacency, dtype=bool)
+            # np.nonzero walks row-major: taking the FIRST axis as dst yields
+            # the canonical (dst, src) sort without an extra argsort
+            d, s = np.nonzero(adj)
+            per_round.append((s.astype(np.int32), d.astype(np.int32)))
+        E_max = max(max((len(s) for s, _ in per_round), default=0), 1)
+        src = np.zeros((P, E_max), np.int32)
+        dst = np.zeros((P, E_max), np.int32)
+        w = np.zeros((P, E_max), np.float32)
+        for t, (s, d) in enumerate(per_round):
+            src[t, : len(s)] = s
+            dst[t, : len(d)] = d
+            w[t, : len(s)] = 1.0
+        return src, dst, w
+
+    @property
+    def max_edges(self) -> int:
+        """Padded DIRECTED edge count ``E_max`` per round (2x the undirected
+        count of the densest round in the period)."""
+        return int(self._edge_table[0].shape[1])
+
+    @property
+    def max_in_degree(self) -> int:
+        """Host bound on any agent's in-degree over the schedule period —
+        the static ``Dmax`` of the CSR (gather-only) combine; see
+        :func:`csr_from_edges`."""
+        _, dst, w = self._edge_table
+        m = 1
+        for t in range(dst.shape[0]):
+            real = w[t] > 0.0
+            if real.any():
+                m = max(m, int(np.bincount(dst[t][real]).max()))
+        return m
+
+    def edge_stacks(self, start_round, rounds: int) -> EdgeStacks:
+        """Per-round padded edge lists for one round-set — the sparse
+        counterpart of :meth:`mixing_stacks` (same rounds, same graphs, bit
+        consistent: both realize from the same host tables).
+
+        Returns an :class:`EdgeStacks` with ``(rounds, E_max)`` leaves;
+        ``start_round`` may be a traced scalar.  This is what
+        ``gather_consensus_rounds(..., path="edge", edges=...)`` scans
+        instead of the dense ``(rounds, K, K)`` mixing stacks.
+        """
+        src, dst, w = self._edge_table
+        P = src.shape[0]
+        ts = (jnp.asarray(start_round) + jnp.arange(rounds)) % P
+        return EdgeStacks(
+            jnp.asarray(src)[ts], jnp.asarray(dst)[ts], jnp.asarray(w)[ts]
+        )
+
 
 @dataclasses.dataclass(frozen=True)
 class StaticSchedule(TopologySchedule):
@@ -158,6 +320,9 @@ class StaticSchedule(TopologySchedule):
     def topology_at(self, t: int) -> Topology:
         del t
         return self.topology
+
+    def _host_edge_period(self) -> int:
+        return 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -223,6 +388,9 @@ class PeriodicSchedule(TopologySchedule):
     def topology_at(self, t: int) -> Topology:
         return self.topologies[int(self._phase(int(t)))]
 
+    def _host_edge_period(self) -> int:
+        return self.rounds_per_topology * len(self.topologies)
+
 
 @dataclasses.dataclass(frozen=True)
 class RandomGossipSchedule(TopologySchedule):
@@ -267,6 +435,9 @@ class RandomGossipSchedule(TopologySchedule):
 
     def topology_at(self, t: int) -> Topology:
         return Topology(f"gossip@{int(t)}", self._table[int(t) % self.cycle])
+
+    def _host_edge_period(self) -> int:
+        return self.cycle
 
 
 def one_peer_exponential(K: int) -> PeriodicSchedule:
@@ -342,6 +513,9 @@ class ChurnSchedule(TopologySchedule):
         adj = base_adj & self._mask_table[int(t) % self.cycle]
         return Topology(f"churn({self.base.topology_at(int(t)).name})@{int(t)}", adj)
 
+    def _host_edge_period(self) -> int:
+        return math.lcm(self.base._host_edge_period(), self.cycle)
+
 
 # ---------------------------------------------------------------------------
 # spec parser (CLI / TrainerConfig convenience)
@@ -410,3 +584,59 @@ def make_schedule(
     if sched is not None and sched.num_agents != K:
         raise ValueError(f"schedule has K={sched.num_agents}, expected {K}")
     return sched
+
+
+def edge_stacks_from_topology(topology: Topology, rounds: int) -> EdgeStacks:
+    """Static-graph convenience: the topology's edge list broadcast over a
+    round-set (what ``path="edge"`` consumes when no schedule is set)."""
+    return StaticSchedule(topology).edge_stacks(0, rounds)
+
+
+def max_in_degree_from_topology(topology: Topology) -> int:
+    """Static-graph convenience: the host ``Dmax`` bound for the CSR
+    (gather-only) edge combine — see :func:`csr_from_edges`."""
+    return StaticSchedule(topology).max_in_degree
+
+
+def schedule_graph_stats(
+    schedule: TopologySchedule, *, rounds: "int | None" = None
+) -> dict:
+    """Realized graph statistics over one host period (dryrun surface).
+
+    Returns a plain dict: ``K``, ``E_max`` (padded directed width),
+    per-round undirected edge counts (min/mean/max over the sampled rounds),
+    degree min/mean/max (self loop excluded), and
+    ``dense_vs_edge_flop_ratio`` — the per-round FLOP headroom of the sparse
+    consensus path, ``K^2 / mean directed |E|`` (dense stats + combine are
+    each O(K^2 D); the edge path's are each O(|E_directed| D)).
+    """
+    K = schedule.num_agents
+    src, dst, w = schedule._edge_table
+    P = src.shape[0]
+    n = P if rounds is None else min(rounds, P)
+    directed = w[:n].sum(axis=1)  # real (non-padding) directed edges per round
+    degs = []
+    for t in range(n):
+        counts = np.bincount(dst[t][w[t] > 0], minlength=K)
+        degs.append(counts)
+    degs = np.stack(degs) if degs else np.zeros((1, K), np.int64)
+    mean_directed = float(directed.mean()) if n else 0.0
+    return {
+        "K": K,
+        "period": P,
+        "rounds_sampled": n,
+        "E_max": int(src.shape[1]),
+        "undirected_edges": {
+            "min": float(directed.min() / 2.0),
+            "mean": mean_directed / 2.0,
+            "max": float(directed.max() / 2.0),
+        },
+        "degree": {
+            "min": int(degs.min()),
+            "mean": float(degs.mean()),
+            "max": int(degs.max()),
+        },
+        "dense_vs_edge_flop_ratio": (
+            float(K * K) / mean_directed if mean_directed else float("inf")
+        ),
+    }

@@ -387,6 +387,110 @@ class SlabLayout:
         Returns ``(d2 (L, K, K), n2 (L, K))``."""
         return gram_sq_dists(self.gram(regions))
 
+    def edge_sq_dists(self, regions: tuple, src: jax.Array, dst: jax.Array) -> jax.Array:
+        """Per-EDGE per-layer squared distances ``||x_src - x_dst||^2`` over
+        a padded directed edge list — ``(L, E)`` f32, O(|E| D) where the
+        dense :meth:`pairwise_sq_dists` Gram is O(K^2 D).  Direct differences
+        (not the Gram trick): on a sparse graph materializing only the
+        realized pairs is the whole point.  Padding edges (src = dst = 0)
+        produce exact 0 rows."""
+        outs = []
+        for region in regions:
+            x = region.astype(F32)
+            diff = jnp.take(x, src, axis=1) - jnp.take(x, dst, axis=1)
+            outs.append(jnp.sum(jnp.square(diff), axis=-1))  # (n, E)
+        return jnp.concatenate(outs, axis=0)
+
+    def edge_combine(
+        self,
+        A_self: jax.Array,
+        A_e: jax.Array,
+        src: jax.Array,
+        dst: jax.Array,
+        regions_self: tuple,
+        regions_dec: tuple,
+    ) -> tuple:
+        """Sparse mixing combine: gather-by-edge + scatter-add-by-destination,
+        O(|E| D) against :meth:`combine`'s O(K^2 D) matmul.
+
+        ``new[p, k] = A_self[p, k] * self[p, k]
+                      + sum_{e: dst[e]==k} A_e[p, e] * dec[p, src[e]]``
+
+        ``regions_self`` carries each agent's OWN (full-precision) regions,
+        ``regions_dec`` the decoded neighbour view (the same tuple on an
+        exact round) — mirroring the coded dense path's self/off-diagonal
+        split.  Padding edges must arrive with ``A_e == 0`` (the weight
+        builders guarantee it), making their scatter contribution exact 0.
+        """
+        out = []
+        for grp, reg_s, reg_d in zip(self.groups, regions_self, regions_dec):
+            a_self = jax.lax.slice_in_dim(
+                A_self, grp.layer0, grp.layer0 + grp.n_slots, axis=0
+            )  # (n, K)
+            a_e = jax.lax.slice_in_dim(
+                A_e, grp.layer0, grp.layer0 + grp.n_slots, axis=0
+            )  # (n, E)
+            acc = reg_s.astype(F32) * a_self[..., None]
+            gathered = jnp.take(reg_d.astype(F32), src, axis=1) * a_e[..., None]
+            out.append(acc.at[:, dst].add(gathered))
+        return tuple(out)
+
+    # -- CSR (per-destination) sparse round pieces ----------------------------
+    #
+    # The scatter in :meth:`edge_combine` serializes on CPU backends.  The
+    # CSR formulation (``csr_from_edges``) makes the whole sparse round
+    # gather-only: ``Dmax`` neighbour gathers shared between the distance
+    # stats and the combine, then pure elementwise work.
+
+    def csr_neighbor_rows(self, regions: tuple, nbr: jax.Array) -> list:
+        """One gathered neighbour slab per CSR in-slot: ``nbr`` is
+        ``(K, Dmax)`` source indices; returns a length-``Dmax`` list of
+        region tuples (``regions``-shaped, f32).  Padded slots gather agent
+        0's rows — their weights are zero downstream."""
+        return [
+            tuple(jnp.take(reg.astype(F32), nbr[:, j], axis=1) for reg in regions)
+            for j in range(nbr.shape[1])
+        ]
+
+    def csr_sq_dists(self, regions: tuple, nbr_rows: list) -> jax.Array:
+        """Per-layer squared distances of each agent to each gathered
+        in-neighbour — ``(L, K, Dmax)`` f32.  Same per-element differences
+        as :meth:`edge_sq_dists` in CSR layout (map between the two with
+        ``csr_from_edges``'s ``rank``)."""
+        cols = []
+        for nbrj in nbr_rows:
+            outs = []
+            for reg, g in zip(regions, nbrj):
+                diff = g - reg.astype(F32)
+                outs.append(jnp.sum(jnp.square(diff), axis=-1))  # (n, K)
+            cols.append(jnp.concatenate(outs, axis=0))  # (L, K)
+        return jnp.stack(cols, axis=-1)
+
+    def csr_combine(
+        self,
+        A_self: jax.Array,
+        a_csr: jax.Array,
+        regions_self: tuple,
+        nbr_rows: list,
+    ) -> tuple:
+        """Gather-only sparse combine: ``new[p, k] = A_self[p, k] self[p, k]
+        + sum_j a_csr[p, k, j] nbr_rows[j][p, k]`` — no scatter; padded CSR
+        slots arrive with ``a_csr == 0``.  ``nbr_rows`` is the same list the
+        stats consumed, so XLA gathers each neighbour slab once."""
+        out = []
+        for gi, (grp, reg_s) in enumerate(zip(self.groups, regions_self)):
+            a_self = jax.lax.slice_in_dim(
+                A_self, grp.layer0, grp.layer0 + grp.n_slots, axis=0
+            )  # (n, K)
+            acc = reg_s.astype(F32) * a_self[..., None]
+            for j, nbrj in enumerate(nbr_rows):
+                a_j = jax.lax.slice_in_dim(
+                    a_csr[..., j], grp.layer0, grp.layer0 + grp.n_slots, axis=0
+                )
+                acc = acc + nbrj[gi] * a_j[..., None]
+            out.append(acc)
+        return tuple(out)
+
     # -- weighted combines -----------------------------------------------------
 
     def combine(self, A: jax.Array, regions: tuple) -> tuple:
@@ -793,6 +897,21 @@ def slab_encode(codec, layout: SlabLayout, regions: tuple, state, key):
             new_state.append(y - sent)
         return tuple(wire), tuple(new_state)
     raise NotImplementedError(f"no slab fast path for codec {codec!r}")
+
+
+def slab_wire_take(codec, wire, idx: jax.Array):
+    """Gather agent rows of an ENCODED wire — the wire analogue of
+    ``jnp.take(region, idx, axis=1)`` per region.  Feeding the result to
+    :func:`slab_decode` reconstructs exactly ``take`` of the decoded slab
+    (dequant is per-row), but the gather itself moves compact wire bytes —
+    the sparse round's neighbour reads are 2x (bf16) / ~4x (int8) cheaper
+    than gathering a materialized f32 slab."""
+    if isinstance(wire, SlabQuant):
+        return SlabQuant(
+            q=tuple(jnp.take(q, idx, axis=1) for q in wire.q),
+            s=jnp.take(wire.s, idx, axis=0),  # scales carry K on axis 0
+        )
+    return tuple(jnp.take(x, idx, axis=1) for x in wire)
 
 
 def slab_decode(codec, layout: SlabLayout, wire) -> tuple:

@@ -11,6 +11,9 @@ mode on CPU; see EXPERIMENTS.md §Perf for the HBM-traffic math per kernel).
   slab_source_combine   whole-slab {self}+neighbour combine (permute engine)
   slab_encode_combine   a WHOLE coded round (encode + Gram + DRT mixing +
                         combine + self term) in ONE launch per round
+  slab_edge_combine     a sparse consensus round over a padded edge list
+                        (per-edge stats + eq. 12-14 edge factors +
+                        gather/scatter combine), one O(|E| D) launch
   slab_quant_encode     fused int8 encode: in-kernel counter RNG + scale
                         reconstruction + stochastic round, one launch
   slab_cast_combine     bf16/f16 cast-combine round, wire never in HBM
@@ -28,6 +31,7 @@ from repro.kernels.ops import (
     slab_cast_combine,
     slab_combine,
     slab_dequant_combine,
+    slab_edge_combine,
     slab_encode_combine,
     slab_quant_encode,
     slab_source_combine,
@@ -45,6 +49,7 @@ __all__ = [
     "slab_combine",
     "slab_dequant_combine",
     "slab_source_combine",
+    "slab_edge_combine",
     "slab_encode_combine",
     "slab_quant_encode",
     "slab_cast_combine",

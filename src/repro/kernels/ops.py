@@ -21,6 +21,7 @@ from repro.kernels.slab_codec import slab_cast_combine as _slab_cast_combine
 from repro.kernels.slab_codec import slab_encode_combine as _slab_encode_combine
 from repro.kernels.slab_codec import slab_quant_encode as _slab_quant_encode
 from repro.kernels.slab_combine import slab_combine as _slab_combine
+from repro.kernels.slab_segment import slab_edge_combine as _slab_edge_combine
 from repro.kernels.slab_combine import slab_dequant_combine as _slab_dequant_combine
 from repro.kernels.slab_combine import slab_source_combine as _slab_source_combine
 
@@ -85,6 +86,15 @@ def slab_encode_combine(block_layer, slab, wire_operands, mix, *, interpret: boo
     on the packed (K, D) slab in ONE grid launch."""
     return _slab_encode_combine(
         block_layer, slab, wire_operands, mix,
+        interpret=_INTERPRET if interpret is None else interpret, **kw,
+    )
+
+
+def slab_edge_combine(block_layer, self_slab, dec_slab, src, dst, w, *, interpret: bool | None = None, **kw):
+    """ONE sparse (edge-list) consensus round — gather-by-edge stats +
+    eq. 12-14 edge factors + scatter-combine — in ONE grid launch."""
+    return _slab_edge_combine(
+        block_layer, self_slab, dec_slab, src, dst, w,
         interpret=_INTERPRET if interpret is None else interpret, **kw,
     )
 

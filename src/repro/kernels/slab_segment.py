@@ -1,0 +1,228 @@
+"""Pallas TPU kernel: fused edge-list (sparse) consensus round on the slab.
+
+The dense round kernels (``slab_combine``, ``slab_encode_combine``) pay
+O(K^2) per lane block — an all-pairs Gram accumulation plus a (K, K) mixing
+matmul — regardless of how sparse the realized graph is.  On the sparse
+topologies the paper cares about (ring, ER, gossip draws) the realized edge
+count |E| is O(K), so the dense kernels waste a factor of K.
+
+``slab_edge_combine`` runs ONE launch per consensus round over the packed
+(K, D) slab with a padded DIRECTED edge list (``src``/``dst``/``w``,
+``w == 0`` marking padding — see :class:`repro.core.dynamic.EdgeStacks`):
+
+  * phase 0 streams the decoded slab once, accumulating the per-DRT-layer
+    squared norms ``n2 (L, K)`` and per-EDGE squared distances ``d2e (L, E)``
+    into VMEM scratch — O(|E| x lane) work per block instead of the dense
+    Gram's O(K^2 x lane);
+  * the first phase-1 step runs the SAME edge-factorized eq. 12-14 pipeline
+    as the jnp path (:func:`repro.core.drt.drt_edge_mixing`, traced
+    in-kernel) on the scratch stats and writes the column-stochastic factors
+    ``A_self (L, K)`` / ``A_e (L, E)`` to whole-array VMEM-resident outputs;
+  * phase 1 writes each block's combined output
+    ``out = A_self[p] * x_self + scatter_dst(A_e[p] * gather_src(x_dec))``
+    — the full-precision self term and the decoded neighbour contributions
+    in one pass, O(|E| x lane) per block.
+
+``algorithm='classical'`` needs no stats phase: a single-phase grid computes
+the Metropolis edge factorization in-kernel at the first block (the same
+:func:`repro.core.dynamic.metropolis_edge_weights` code) and combines.
+
+The caller passes the DECODED slab separately from the self slab, so one
+kernel serves exact rounds (``dec is self``) and coded rounds (jnp
+encode/decode feeds the kernel; the round's slab-side stats + mixing +
+combine still collapse into this one launch).
+
+TPU caveat: the per-edge gather/scatter (``x[src]``, ``.at[dst].add``) does
+not vectorize on the TPU VPU the way the dense one-hot matmuls do; this
+kernel is the *interpret-mode-validated* structural template for the sparse
+path (tier-1 pins it against the jnp edge path bit-for-bit in interpret
+mode).  On real TPUs the expected lowering is a sort-free segment matmul
+over the dst-contiguous edge order — the edge lists arrive (dst, src)-sorted
+precisely so that rewrite stays local to this file.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import drt as drt_mod
+from repro.core.dynamic import metropolis_edge_weights
+
+F32 = jnp.float32
+
+LANES = 128
+
+
+def _edge_combine_block(x_self, x_dec, src, dst, a_self, a_e):
+    """out[k, c] = a_self[k] x_self[k, c] + sum_{e: dst[e]==k} a_e[e] x_dec[src[e], c].
+
+    Padding edges arrive with ``a_e == 0`` (the weight builders mask on
+    ``w > 0``), so their scatter contribution is an exact zero."""
+    out = x_self * a_self[:, None]
+    gathered = jnp.take(x_dec, src, axis=0) * a_e[:, None]
+    return out.at[dst].add(gathered)
+
+
+def _edge_kernel(algorithm, kappa, N_clip, weight_mode, num_layers, *refs):
+    (bl_ref, self_ref, dec_ref, src_ref, dst_ref, w_ref,
+     out_ref, As_ref, Ae_ref, *scratch) = refs
+    src = src_ref[0]
+    dst = dst_ref[0]
+    w = w_ref[0]
+    K = self_ref.shape[0]
+    p = bl_ref[0]  # this block's DRT layer
+
+    if algorithm == "classical":
+        # single phase: weights are a pure function of the edge list — derive
+        # them once at block 0 (the same jnp code as the unkerneled path, so
+        # the factors match bit for bit), combine every block
+        @pl.when(pl.program_id(1) == 0)
+        def _weights():
+            m_self, m_e = metropolis_edge_weights(src, dst, w, K)
+            As_ref[...] = jnp.broadcast_to(m_self[None, :], As_ref.shape)
+            Ae_ref[...] = jnp.broadcast_to(m_e[None, :], Ae_ref.shape)
+
+        out_ref[...] = _edge_combine_block(
+            self_ref[...].astype(F32), dec_ref[...].astype(F32),
+            src, dst, As_ref[pl.ds(p, 1)][0], Ae_ref[pl.ds(p, 1)][0],
+        )
+        return
+
+    n2_scr, d2e_scr = scratch
+    ph = pl.program_id(0)
+    i = pl.program_id(1)
+    x_dec = dec_ref[...].astype(F32)
+
+    @pl.when(ph == 0)
+    def _stats_phase():
+        @pl.when(i == 0)
+        def _init():
+            n2_scr[...] = jnp.zeros_like(n2_scr)
+            d2e_scr[...] = jnp.zeros_like(d2e_scr)
+
+        n2_scr[pl.ds(p, 1)] = n2_scr[pl.ds(p, 1)] + jnp.sum(
+            jnp.square(x_dec), axis=1
+        )[None]
+        diff = jnp.take(x_dec, src, axis=0) - jnp.take(x_dec, dst, axis=0)
+        d2e_scr[pl.ds(p, 1)] = d2e_scr[pl.ds(p, 1)] + jnp.sum(
+            jnp.square(diff), axis=1
+        )[None]
+
+    @pl.when(jnp.logical_and(ph == 1, i == 0))
+    def _mixing():
+        # the SAME edge-factorized eq. 12-14 pipeline as the jnp path, traced
+        # in-kernel on the accumulated stats; the factors land in the
+        # whole-array VMEM-resident outputs which phase-1 blocks read back
+        cfg = drt_mod.DRTConfig(N=N_clip, kappa=kappa, weight_mode=weight_mode)
+        A_self, A_e = drt_mod.drt_edge_mixing(
+            d2e_scr[...], n2_scr[...], src, dst, w, cfg, K
+        )
+        As_ref[...] = A_self
+        Ae_ref[...] = A_e
+
+    @pl.when(ph == 1)
+    def _combine_phase():
+        out_ref[...] = _edge_combine_block(
+            self_ref[...].astype(F32), x_dec,
+            src, dst, As_ref[pl.ds(p, 1)][0], Ae_ref[pl.ds(p, 1)][0],
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "algorithm", "num_layers", "kappa", "N_clip", "weight_mode", "lane",
+        "interpret",
+    ),
+)
+def slab_edge_combine(
+    block_layer: jax.Array,
+    self_slab: jax.Array,
+    dec_slab: jax.Array,
+    src: jax.Array,
+    dst: jax.Array,
+    w: jax.Array,
+    *,
+    algorithm: str = "drt",
+    num_layers: int,
+    kappa: float = 1e-6,
+    N_clip: float = 32.0,
+    weight_mode: str = "paper",
+    lane: int = LANES,
+    interpret: bool = True,
+):
+    """ONE sparse consensus round's slab work in ONE launch (see module doc).
+
+    ``block_layer``: (n_blocks,) int32 — ``SlabLayout.block_layer``.
+    ``self_slab``: (K, D) f32 packed current iterates (the full-precision
+    self term).  ``dec_slab``: (K, D) f32 decoded neighbour view (pass
+    ``self_slab`` again for an exact round).
+    ``src``/``dst``/``w``: (E,) padded directed edge list (w == 0 padding).
+
+    Returns ``(combined (K, D) f32, A_self (L, K), A_e (L, E))`` — the
+    edge-factorized mixing weights are kernel outputs so the engine can
+    densify them for ``A_last``/telemetry without recomputing stats.
+    """
+    K, D = self_slab.shape
+    nb = block_layer.shape[0]
+    if nb * lane != D:
+        raise ValueError(f"slab width {D} != {nb} blocks x {lane} lanes")
+    E = src.shape[0]
+    drt = algorithm == "drt"
+    if not drt and algorithm != "classical":
+        raise ValueError(f"unknown algorithm {algorithm!r}")
+    grid = (2, nb) if drt else (1, nb)
+
+    in_specs = [
+        pl.BlockSpec((1,), lambda ph, i: (i,), memory_space=pltpu.SMEM),
+        pl.BlockSpec((K, lane), lambda ph, i: (0, i)),
+        pl.BlockSpec((K, lane), lambda ph, i: (0, i)),
+        pl.BlockSpec((1, E), lambda ph, i: (0, 0)),
+        pl.BlockSpec((1, E), lambda ph, i: (0, 0)),
+        pl.BlockSpec((1, E), lambda ph, i: (0, 0)),
+    ]
+    out_specs = (
+        # DRT's phase 0 parks the slab window on block 0 without writing
+        # (same trick as slab_encode_combine); classical is single phase and
+        # just walks the blocks.  The A_self/A_e windows are the whole array
+        # every step, staying VMEM-resident for the per-block reads
+        pl.BlockSpec(
+            (K, lane),
+            (lambda ph, i: (0, ph * i)) if drt else (lambda ph, i: (0, i)),
+        ),
+        pl.BlockSpec((num_layers, K), lambda ph, i: (0, 0)),
+        pl.BlockSpec((num_layers, E), lambda ph, i: (0, 0)),
+    )
+    out_shape = (
+        jax.ShapeDtypeStruct((K, D), F32),
+        jax.ShapeDtypeStruct((num_layers, K), F32),
+        jax.ShapeDtypeStruct((num_layers, E), F32),
+    )
+    kernel = functools.partial(
+        _edge_kernel, algorithm, float(kappa), float(N_clip), weight_mode,
+        num_layers,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=(
+            [pltpu.VMEM((num_layers, K), F32), pltpu.VMEM((num_layers, E), F32)]
+            if drt
+            else []
+        ),
+        interpret=interpret,
+    )(
+        jnp.asarray(block_layer, jnp.int32),
+        self_slab.astype(F32),
+        dec_slab.astype(F32),
+        jnp.asarray(src, jnp.int32)[None, :],
+        jnp.asarray(dst, jnp.int32)[None, :],
+        jnp.asarray(w, F32)[None, :],
+    )

@@ -248,7 +248,51 @@ def main(argv=None):
     ap.add_argument("--codec", default=None,
                     help="wire codec: identity|bf16|f16|int8|topk[:frac]")
     ap.add_argument("--out", default=None)
+    ap.add_argument(
+        "--graph-stats", action="store_true",
+        help="print realized |E| / degree stats for --topology/--schedule "
+             "over --agents (incl. the dense-vs-edge FLOP ratio the sparse "
+             "consensus path exploits) and exit",
+    )
+    ap.add_argument("--topology", default="ring",
+                    help="graph for --graph-stats (e.g. ring, erdos_renyi)")
+    ap.add_argument("--agents", type=int, default=16)
+    ap.add_argument("--er-p", type=float, default=0.1,
+                    help="erdos_renyi edge probability (paper uses 0.1)")
+    ap.add_argument("--schedule", default=None,
+                    help="schedule spec for --graph-stats (same grammar as "
+                         "launch.train: name, 'periodic:a,b[@n]', 'gossip[:p]', "
+                         "'onepeer')")
+    ap.add_argument("--agent-dropout", type=float, default=0.0)
+    ap.add_argument("--edge-dropout", type=float, default=0.0)
+    ap.add_argument("--schedule-seed", type=int, default=0)
+    ap.add_argument("--stats-rounds", type=int, default=None,
+                    help="rounds to sample for --graph-stats (default: one "
+                         "full schedule period)")
     args = ap.parse_args(argv)
+
+    if args.graph_stats:
+        from repro.core.dynamic import make_schedule, schedule_graph_stats
+
+        tkw = (
+            {"p": args.er_p, "seed": args.schedule_seed}
+            if args.topology == "erdos_renyi" else {}
+        )
+        topo = make_topology(args.topology, args.agents, **tkw)
+        sched = make_schedule(
+            args.schedule if args.schedule is not None else topo,
+            args.agents,
+            agent_drop=args.agent_dropout,
+            edge_drop=args.edge_dropout,
+            seed=args.schedule_seed,
+        )
+        stats = {"topology": args.topology, "schedule": args.schedule,
+                 **schedule_graph_stats(sched, rounds=args.stats_rounds)}
+        print(json.dumps(stats, indent=1, default=float))
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(stats, f, indent=1, default=float)
+        raise SystemExit(0)
 
     jobs = []
     archs = ASSIGNED_ARCHS if (args.all or args.arch is None) else [args.arch]

@@ -24,6 +24,7 @@ from typing import Any
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.dynamic import EdgeStacks
 from repro.launch.mesh import batch_axes, mesh_axis_sizes
 from repro.models.config import ModelConfig
 
@@ -200,6 +201,54 @@ def cache_pspecs(cfg: ModelConfig, caches_abstract, mesh, batch_size: int):
         return P(*([None] * len(shape)))
 
     return jax.tree_util.tree_map_with_path(spec_for, caches_abstract)
+
+
+# ---------------------------------------------------------------------------
+# consensus (agent-axis) specs — the edge path at K = 64 / 256
+# ---------------------------------------------------------------------------
+
+
+def consensus_slab_pspec(mesh, num_agents: int) -> P:
+    """Spec for a ``(K, D)`` flat consensus slab: the agent axis shards over
+    ``data`` whenever K divides by it (K = 64 on an 8-way data mesh puts 8
+    agents per shard), replicating otherwise.  D stays unsharded — the edge
+    combine gathers whole rows by source agent."""
+    axes = mesh_axis_sizes(mesh)
+    dsize = axes.get("data", 1)
+    k_ax = "data" if num_agents % dsize == 0 else None
+    return P(k_ax, None)
+
+
+def edge_stack_pspecs(mesh, e_max: int) -> EdgeStacks:
+    """Specs for ``EdgeStacks`` leaves ``(rounds, E_max)``: the edge axis
+    shards over ``data`` when E_max divides by it.  Because the tables are
+    (dst, src)-sorted, contiguous edge shards are destination-contiguous, so
+    on regular graphs (ring, torus, hypercube) each shard's scatter targets
+    land on the agents the slab spec places on the same devices."""
+    axes = mesh_axis_sizes(mesh)
+    dsize = axes.get("data", 1)
+    e_ax = "data" if e_max % dsize == 0 else None
+    spec = P(None, e_ax)
+    return EdgeStacks(src=spec, dst=spec, w=spec)
+
+
+def shard_consensus_inputs(mesh, psi_K, edges: "EdgeStacks | None" = None):
+    """Place a ``(K, D)`` slab (and optionally its edge stacks) on ``mesh``
+    with the consensus layout.  Returns ``(psi_K, edges)`` device_put with
+    :func:`consensus_slab_pspec` / :func:`edge_stack_pspecs`."""
+    slab = jax.device_put(
+        psi_K, NamedSharding(mesh, consensus_slab_pspec(mesh, psi_K.shape[0]))
+    )
+    if edges is None:
+        return slab, None
+    especs = edge_stack_pspecs(mesh, edges.src.shape[-1])
+    placed = EdgeStacks(
+        *(
+            jax.device_put(x, NamedSharding(mesh, s))
+            for x, s in zip(edges, especs)
+        )
+    )
+    return slab, placed
 
 
 def to_named(mesh, pspec_tree):

@@ -27,7 +27,11 @@ from repro.comm import WireCodec, init_comm_state, make_codec
 from repro.core import consensus as _consensus
 from repro.core.consensus import gather_consensus_rounds
 from repro.core.decentralized import TrainerConfig
-from repro.core.dynamic import make_schedule
+from repro.core.dynamic import (
+    edge_stacks_from_topology,
+    make_schedule,
+    max_in_degree_from_topology,
+)
 from repro.core.packing import (
     build_slab_layout,
     slab_codec_supported,
@@ -160,6 +164,12 @@ def make_train_step(
                 "PermuteConsensus(schedule=...) with a concrete start_round "
                 "outside jit)"
             )
+        if tcfg.consensus_path == "edge":
+            raise ValueError(
+                "the edge-list path is a gather-engine hot path (the permute "
+                "engine already exchanges neighbour-only traffic); use "
+                "consensus_impl='gather' with consensus_path='edge'"
+            )
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
 
@@ -270,7 +280,7 @@ def make_train_step(
         layout = None
         p1_template = jax.eval_shape(bundle.init, jax.random.key(0))
         if (
-            tcfg.consensus_path == "slab"
+            tcfg.consensus_path in ("slab", "edge")
             and slab_codec_supported(effective_codec)
             and slab_template_supported(p1_template)
         ):
@@ -284,6 +294,20 @@ def make_train_step(
                 C_t, metro_t = schedule.mixing_stacks(
                     step * consensus_rounds, consensus_rounds
                 )
+            edges = None
+            max_in_degree = None
+            if tcfg.consensus_path == "edge":
+                # the sparse view of the SAME round-set graphs (bit
+                # consistent with the dense stacks by the schedule contract);
+                # the host Dmax bound keys the gather-only CSR combine
+                if schedule is None:
+                    edges = edge_stacks_from_topology(topology, consensus_rounds)
+                    max_in_degree = max_in_degree_from_topology(topology)
+                else:
+                    edges = schedule.edge_stacks(
+                        step * consensus_rounds, consensus_rounds
+                    )
+                    max_in_degree = schedule.max_in_degree
             out = gather_consensus_rounds(
                 partition,
                 params,
@@ -297,6 +321,8 @@ def make_train_step(
                 rng=ckey,
                 layout=layout,
                 path=tcfg.consensus_path,
+                edges=edges,
+                max_in_degree=max_in_degree,
                 use_kernels=tcfg.use_kernels,
                 obs=obs,
             )
@@ -437,6 +463,12 @@ def main(argv=None) -> None:
              "chunk recompiles once for its smaller length)",
     )
     ap.add_argument(
+        "--consensus-path", default="slab", choices=["slab", "tree", "edge"],
+        help="consensus hot path: 'slab' = dense flat-slab rounds (default), "
+             "'edge' = sparse O(|E| D) edge-list rounds over the realized "
+             "graph (the large-K path), 'tree' = per-leaf reference oracle",
+    )
+    ap.add_argument(
         "--codec", default=None,
         help="wire codec for the consensus exchange: identity|bf16|f16|int8|"
              "topk[:frac[:sample]] (default: exact f32 exchange; "
@@ -491,7 +523,10 @@ def main(argv=None) -> None:
         edge_drop=args.edge_dropout,
         seed=args.schedule_seed,
     )
-    tcfg = TrainerConfig(algorithm=args.algorithm, codec=args.codec, schedule=schedule)
+    tcfg = TrainerConfig(
+        algorithm=args.algorithm, codec=args.codec, schedule=schedule,
+        consensus_path=args.consensus_path,
+    )
     state = init_train_state(bundle, opt, jax.random.key(0), codec=args.codec)
     stream = SyntheticTokenStream(
         TokenStreamConfig(vocab=bundle.cfg.vocab, seq_len=args.seq)
