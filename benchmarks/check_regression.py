@@ -54,6 +54,18 @@ reviewed act), and FAILS (exit 1) when any tracked metric regresses:
                       (see combine_micro.run_sparse_paths), so a hard wall
                       gate would pin a hardware property, not a code one.
 
+  momentum_rounds_ratio
+                      rounds the best heavy-ball beta needs to reach the
+                      beta=0 fixed-budget disagreement, over beta=0's
+                      count (combine_micro.run_consensus_control).  HARD
+                      ceiling 1.0: momentum may never need MORE rounds —
+                      a machine-independent round count, no wall clock.
+  round_savings       1 - mean_effective_rounds / max_rounds of the
+                      adaptive round budget at matched disagreement over
+                      noise-regrown round-sets.  HARD floor 0.25: the
+                      disagreement gate must save at least a quarter of
+                      the fixed budget.
+
 Untimed rows (permute-engine wire-volume rows, tagged ``"untimed": true``)
 are excluded from every computation.  On failure the gate prints the full
 tracked-vs-fresh metric table rather than a bare assert, so the CI log alone
@@ -109,6 +121,9 @@ def collect_metrics(doc) -> list[tuple[str, float, str]]:
     out.append(("many_steps_speedup", tm.get("speedup_many_steps"), "up"))
     tl = doc.get("telemetry") or {}
     out.append(("telemetry_overhead_ratio", tl.get("overhead_ratio"), "down"))
+    ctl = doc.get("control") or {}
+    out.append(("momentum_rounds_ratio", ctl.get("momentum_rounds_ratio"), "down"))
+    out.append(("round_savings", ctl.get("round_savings"), "up"))
     for r in (doc.get("sparse") or {}).get("rows") or []:
         if r.get("dense_untimed"):
             continue  # analytic-only row (CI edge smoke / huge K)
@@ -198,6 +213,17 @@ def main(argv=None) -> int:
         # K=64 the edge path must cost < 1/1.5 the dense coded FLOPs
         if name == "sparse_flop_speedup[K=64]":
             bound = max(bound, 1.5)
+            ok = fresh_v >= bound
+        # consensus-control claims are hard, machine-independent round
+        # counts (no wall clock involved): momentum must never need MORE
+        # rounds than plain mixing to reach the same disagreement, and the
+        # adaptive budget must save >= 25% of the fixed budget at matched
+        # disagreement
+        if name == "momentum_rounds_ratio":
+            bound = min(bound, 1.0)
+            ok = fresh_v <= bound
+        if name == "round_savings":
+            bound = max(bound, 0.25)
             ok = fresh_v >= bound
         table.append((name, tracked_v, fresh_v, bound, "OK" if ok else "REGRESSION"))
         failed = failed or not ok

@@ -535,6 +535,102 @@ def run_telemetry_overhead(K: int = 16, rounds: int = ROUNDS):
     )
 
 
+def run_consensus_control(
+    K: int = 16, max_rounds: int = 16, sets: int = 4, betas=(0.0, 0.2, 0.4)
+):
+    """Consensus-control trajectory on the K=16 ring (exact DRT slab):
+
+    ``momentum``: per heavy-ball beta, the disagreement after ``max_rounds``
+    fixed rounds and the round count needed to reach the beta=0 fixed-budget
+    disagreement — ``momentum_rounds_ratio`` (best beta's count over beta=0's)
+    is hard-gated <= 1.0 by check_regression.py (momentum must never need
+    MORE rounds than plain mixing to reach the same disagreement).
+
+    ``max_rounds`` defaults to 16 — on the K=16 ring (mixing time ~K^2/pi^2
+    ~ 26 rounds) heavy-ball needs a few rounds to build its velocity, so a
+    too-short budget understates both metrics.
+
+    ``adaptive``: ``sets`` successive round-sets with fresh per-agent noise
+    regrown between them (the local-SGD divergence pattern a training loop
+    produces).  Per set, a fixed ``max_rounds`` momentum-free run defines the
+    target disagreement; the adaptive run (best beta, ``round_tol`` = that
+    target) reaches it while the disagreement gate turns the tail rounds
+    into in-graph no-ops.  ``round_savings = 1 - mean_effective/max_rounds``
+    is hard-gated >= 0.25: the adaptive budget must save at least a quarter
+    of the fixed budget at matched disagreement."""
+    import numpy as np
+
+    from repro.obs.metrics import ObsConfig
+
+    pK = _model_stack(jax.random.key(0), K)
+    template = jax.tree.map(lambda x: x[0], pK)
+    part = LayerPartition.build(template)
+    layout = build_slab_layout(part, template)
+    topo = make_topology("ring", K)
+    C = jnp.asarray(topo.c_matrix(), jnp.float32)
+    metro = jnp.asarray(topo.metropolis(), jnp.float32)
+    obs = ObsConfig()
+
+    def round_set(p, beta, tol=None):
+        return gather_consensus_rounds(
+            part, p, C, DRTConfig(), rounds=max_rounds, algorithm="drt",
+            metropolis=metro, layout=layout, momentum=beta, round_tol=tol,
+            obs=obs,
+        )
+
+    # -- momentum: rounds-to-tolerance at the fixed budget ------------------
+    _, _, _, base_cm = round_set(pK, 0.0)
+    target = float(base_cm.disagreement[-1])
+    best_beta = max(betas)
+    mom_rows = []
+    rounds_to = {}
+    for beta in betas:
+        _, _, _, cm = round_set(pK, beta)
+        dis = np.asarray(cm.disagreement)
+        hit = np.nonzero(dis <= target * (1 + 1e-6))[0]
+        n = int(hit[0]) + 1 if hit.size else max_rounds
+        rounds_to[beta] = n
+        mom_rows.append(dict(
+            beta=beta, rounds=max_rounds, final_disagreement=float(dis[-1]),
+            rounds_to_fixed_target=n,
+        ))
+    momentum_rounds_ratio = rounds_to[best_beta] / rounds_to[0.0]
+
+    # -- adaptive: effective rounds at matched disagreement -----------------
+    adaptive_rows = []
+    p = pK
+    noise_keys = jax.random.split(jax.random.key(7), sets)
+    for s in range(sets):
+        out_f, _, _, cm_f = round_set(p, 0.0)
+        tol_s = float(cm_f.disagreement[-1])
+        _, _, _, cm_a = round_set(p, best_beta, tol=tol_s)
+        eff = float(cm_a.effective_rounds[-1])
+        adaptive_rows.append(dict(
+            set=s, round_tol=tol_s, effective_rounds=eff,
+            final_disagreement=float(cm_a.disagreement[-1]),
+        ))
+        # regrow per-agent divergence around the mixed point for the next set
+        leaves, treedef = jax.tree.flatten(out_f)
+        ks = jax.random.split(noise_keys[s], len(leaves))
+        p = jax.tree.unflatten(treedef, [
+            x + 0.5 * jax.random.normal(k, x.shape, x.dtype)
+            for x, k in zip(leaves, ks)
+        ])
+    mean_eff = float(np.mean([r["effective_rounds"] for r in adaptive_rows]))
+    return dict(
+        K=K,
+        max_rounds=max_rounds,
+        topology="ring",
+        algorithm="drt",
+        momentum_rows=mom_rows,
+        momentum_rounds_ratio=momentum_rounds_ratio,
+        adaptive_beta=best_beta,
+        adaptive_rows=adaptive_rows,
+        mean_effective_rounds=mean_eff,
+        round_savings=1.0 - mean_eff / max_rounds,
+    )
+
+
 def run_dispatch_counts(K: int = 16, rounds: int = ROUNDS):
     """Static Pallas-launch counts of one ``use_kernels=True`` round-set:
     the whole-slab batched kernels issue ONE launch per coded round (and one
@@ -691,6 +787,7 @@ def write_bench_json(
         "dispatch": {"rounds": ROUNDS, "rows": run_dispatch_counts(K=K)},
         "train_many_steps": run_train_chunking(),
         "telemetry": run_telemetry_overhead(K=K),
+        "control": run_consensus_control(K=K),
     }
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)
@@ -776,6 +873,17 @@ def main(argv=None):
     print(f"telemetry overhead (exact drt slab, {tl['rounds']} rounds): "
           f"{tl['us_disabled']:.0f}us off -> {tl['us_enabled']:.0f}us on "
           f"({tl['overhead_ratio']:.3f}x)")
+    ctl = doc["control"]
+    print(f"\nconsensus control (K={ctl['K']} ring, {ctl['max_rounds']} "
+          f"traced rounds):")
+    for r in ctl["momentum_rows"]:
+        print(f"  beta={r['beta']:.1f}  final dis {r['final_disagreement']:.4f}  "
+              f"rounds-to-target {r['rounds_to_fixed_target']}")
+    print(f"  momentum_rounds_ratio {ctl['momentum_rounds_ratio']:.2f} "
+          f"(gate <= 1.0)")
+    print(f"  adaptive beta={ctl['adaptive_beta']:.1f}: mean effective rounds "
+          f"{ctl['mean_effective_rounds']:.2f}/{ctl['max_rounds']} -> "
+          f"round_savings {ctl['round_savings']:.2f} (gate >= 0.25)")
     _print_sparse(doc)
     rows = run(K=16)
     print()

@@ -189,6 +189,25 @@ def _scan_rounds(body, carry, xs, rounds: int, unroll: bool):
     return jax.lax.scan(body, carry, xs)
 
 
+def _tree_net_disagreement(psi_K) -> jax.Array:
+    """Network disagreement ``mean_k ||x_k - x_bar||^2`` on an agent-stacked
+    tree — the adaptive round budget's gate signal on the tree oracle path.
+    Deliberately independent of the :mod:`repro.obs` telemetry producers:
+    the control path must trace with ``obs=None``."""
+    leaves = jax.tree.leaves(psi_K)
+    K = leaves[0].shape[0]
+    total = jnp.zeros((), jnp.float32)
+    for l in leaves:
+        x = l.astype(jnp.float32)
+        total = total + jnp.sum(jnp.square(x - jnp.mean(x, axis=0, keepdims=True)))
+    return total / float(K)
+
+
+def _tree_momentum_sq(mom) -> jax.Array:
+    """Sum of squares of a (f32) momentum tree, over every leaf."""
+    return sum(jnp.sum(jnp.square(m)) for m in jax.tree.leaves(mom))
+
+
 # ---------------------------------------------------------------------------
 # global (gather/einsum) engine — per-leaf reference oracle
 # ---------------------------------------------------------------------------
@@ -484,6 +503,8 @@ def gather_consensus_rounds(
     use_kernels: bool = False,
     unroll: bool = False,
     obs: "ObsConfig | None" = None,
+    momentum: float = 0.0,
+    round_tol: float | None = None,
 ):
     """``rounds`` consensus steps with ONE pack/unpack around the whole set.
 
@@ -537,6 +558,26 @@ def gather_consensus_rounds(
     decoded slabs, and the fused single-launch kernel round (which keeps
     those in VMEM) is only used when telemetry is off.  The tree oracle
     prices its telemetry by re-deriving the wire (documented oracle cost).
+
+    Consensus control (both knobs ride the scan carry on EVERY path and
+    obey the same zero-cost-disable contract as ``obs``: defaults trace
+    today's exact jaxpr):
+
+    * ``momentum=beta`` adds a heavy-ball term to the mixing recurrence,
+      ``x_{t+1} = A_t-mix(x_t) + beta * (x_t - x_{t-1})`` (Balu et al.,
+      arXiv 2010.11166) — the previous iterate joins the carry, and on the
+      exact Gram path the recurrence stays in (K, K) coefficient space:
+      ``M_{t+1} = M_t A_{t+1} + beta (M_t - M_{t-1})`` with
+      ``M_0 = M_{-1} = I`` (the momentum increment has zero column sums, so
+      ``M`` stays column-stochastic and the consensus fixed point is
+      preserved).
+    * ``round_tol=tol`` turns the static ``rounds`` into an ADAPTIVE budget
+      (Kong et al., arXiv 2102.04828): the scan still traces ``rounds``
+      iterations (compile stays O(1) in rounds), but each round first
+      checks the carried disagreement ``mean_k ||x_k - x_bar||^2`` against
+      ``tol`` and becomes an identity no-op (sticky, via ``jnp.where`` on
+      the carry) once it drops below.  Telemetry's ``effective_rounds``
+      reports the realized budget.
     """
     wire_codec = _resolve_codec(codec, None)
     if path not in ("slab", "tree", "edge"):
@@ -553,16 +594,30 @@ def gather_consensus_rounds(
         # the edge path is slab-native; codecs/templates without a slab fast
         # path take the same per-leaf oracle fallback as path="slab"
         path = "tree"
-    if rounds <= 0:
-        state0 = codec_state if codec_state is not None else ()
-        if obs is None:
-            return psi_K, None, state0
-        return psi_K, None, state0, obs_metrics.empty_metrics(partition.num_layers)
+    if rounds < 1:
+        raise ValueError(
+            f"gather_consensus_rounds needs rounds >= 1, got {rounds}; "
+            "skip the call entirely for a consensus-free step"
+        )
+    beta = float(momentum)
+    use_mom = beta != 0.0
+    use_adapt = round_tol is not None
+    if use_adapt:
+        round_tol = float(round_tol)
+        if not round_tol > 0.0:
+            raise ValueError(f"round_tol must be > 0, got {round_tol}")
     K = jax.tree.leaves(psi_K)[0].shape[0]
     L = partition.num_layers
     C_stack = _round_stack(C, rounds, "C")
     metro_stack = _round_stack(metropolis, rounds, "metropolis")
     A0 = jnp.zeros((L, K, K), jnp.float32)  # overwritten by round 1
+    # control extras ride the END of every scan carry: the previous iterate
+    # for momentum, then (active, effective-round counter) for the adaptive
+    # budget.  Disabled knobs append NOTHING — the default carry (and jaxpr)
+    # is bit-identical to the uncontrolled program.
+    ctl0 = ()
+    if use_adapt:
+        ctl0 = (jnp.ones((), bool), jnp.zeros((), jnp.float32))
 
     if path == "tree":
         state = codec_state
@@ -577,8 +632,14 @@ def gather_consensus_rounds(
             idb = float(IdentityCodec().wire_bytes(template))
 
         def tree_body(carry, xs):
-            psi, st, _ = carry
+            psi, st, A_prev, *ctl = carry
             r, C_r, metro_r = xs
+            if use_mom:
+                prev = ctl[0]
+            if use_adapt:
+                active, eff = ctl[-2], ctl[-1]
+                act = active & (_tree_net_disagreement(psi) > round_tol)
+                eff = eff + act.astype(jnp.float32)
             round_rng = None
             if wire_codec is None:
                 new_psi, A = gather_consensus_step(
@@ -594,8 +655,42 @@ def gather_consensus_rounds(
                     codec=wire_codec, codec_state=st,
                     rng=round_rng,
                 )
+            mom_sq = jnp.zeros((), jnp.float32)
+            if use_mom:
+                mom = jax.tree.map(
+                    lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                    psi, prev,
+                )
+                new_psi = jax.tree.map(
+                    lambda n, m: (n.astype(jnp.float32) + beta * m).astype(n.dtype),
+                    new_psi, mom,
+                )
+                if obs is not None:
+                    mom_sq = (beta * beta) * _tree_momentum_sq(mom) / float(K)
+            if use_adapt:
+                # sticky identity no-op once the budget gates off: the carry
+                # keeps its pre-round values, so the remaining traced rounds
+                # cost flops but change nothing
+                new_psi = jax.tree.map(
+                    lambda n, o: jnp.where(act, n, o), new_psi, psi
+                )
+                new_st = jax.tree.map(lambda n, o: jnp.where(act, n, o), new_st, st)
+                A = jnp.where(act, A, A_prev)
+                if use_mom:
+                    prev = jax.tree.map(
+                        lambda o, p: jnp.where(act, o, p), psi, prev
+                    )
+                if obs is not None:
+                    mom_sq = jnp.where(act, mom_sq, 0.0)
+            elif use_mom:
+                prev = psi
+            new_ctl = ()
+            if use_mom:
+                new_ctl += (prev,)
+            if use_adapt:
+                new_ctl += (act, eff)
             if obs is None:
-                return (new_psi, new_st, A), None
+                return (new_psi, new_st, A, *new_ctl), None
             # oracle-priced telemetry: the slab paths read these quantities
             # off state they already carry; the per-leaf oracle re-derives
             # the wire the step consumed (same keys => bit-identical wire)
@@ -618,22 +713,33 @@ def gather_consensus_rounds(
                 ef = obs_metrics.tree_mean_sq_norm(new_st)
             else:
                 ef = jnp.zeros((), jnp.float32)
+            if use_adapt:
+                # a gated-off round moves no bytes; the ratio keeps the
+                # codec's nominal value
+                eff_rounds = eff
+                send_w = jnp.where(act, send, 0.0)
+            else:
+                eff_rounds = (r + 1).astype(jnp.float32)
+                send_w = send
             m = ConsensusMetrics(
                 disagreement=obs_metrics.tree_disagreement(new_psi),
                 layer_d2_mean=d2m,
                 layer_d2_max=d2x,
                 mix_entropy=obs_metrics.mixing_entropy(A),
                 ef_residual=ef,
-                wire_send_bytes=send,
-                wire_recv_bytes=(K - 1.0) * send,
+                wire_send_bytes=send_w,
+                wire_recv_bytes=(K - 1.0) * send_w,
                 compression_ratio=idb / jnp.maximum(send, 1.0),
                 edges=obs_metrics.edge_count(C_r if C_r is not None else metro_r),
+                effective_rounds=eff_rounds,
+                momentum_norm=mom_sq,
             )
-            return (new_psi, new_st, A), m
+            return (new_psi, new_st, A, *new_ctl), m
 
-        (psi_K, state, A_last), metrics = _scan_rounds(
+        tree_ctl0 = ((psi_K,) if use_mom else ()) + ctl0
+        (psi_K, state, A_last, *_), metrics = _scan_rounds(
             tree_body,
-            (psi_K, state, A0),
+            (psi_K, state, A0, *tree_ctl0),
             (jnp.arange(rounds), C_stack, metro_stack),
             rounds,
             unroll,
@@ -684,8 +790,14 @@ def gather_consensus_rounds(
         bl = jnp.asarray(layout.block_layer)
 
         def edge_body(carry, xs):
-            regions, res, _ = carry
+            regions, res, A_prev, *ctl = carry
             r, src, dst, w = xs
+            if use_mom:
+                prev = ctl[0]
+            if use_adapt:
+                active, eff = ctl[-2], ctl[-1]
+                act = active & (packing.region_disagreement(regions) > round_tol)
+                eff = eff + act.astype(jnp.float32)
             if exact:
                 new_res, wire = res, None
                 with obs_profiling.scope(obs, "consensus.decode"):
@@ -782,8 +894,37 @@ def gather_consensus_rounds(
             # densified (L, K, K) mixing matrices: tiny K^2 algebra for the
             # A_last return / telemetry entropy, no D-sized work
             A = drt_mod.edge_mixing_dense(A_self, A_e, src, dst, w, K)
+            mom_sq = jnp.zeros((), jnp.float32)
+            if use_mom:
+                mom = jax.tree.map(
+                    lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                    regions, prev,
+                )
+                new_regions = jax.tree.map(
+                    lambda n, m_: (n.astype(jnp.float32) + beta * m_).astype(n.dtype),
+                    new_regions, mom,
+                )
+                if obs is not None:
+                    mom_sq = (beta * beta) * _tree_momentum_sq(mom) / float(K)
+            if use_adapt:
+                new_regions = jax.tree.map(
+                    lambda n, o: jnp.where(act, n, o), new_regions, regions
+                )
+                new_res = jax.tree.map(lambda n, o: jnp.where(act, n, o), new_res, res)
+                A = jnp.where(act, A, A_prev)
+                if use_mom:
+                    prev = jax.tree.map(lambda o, p: jnp.where(act, o, p), regions, prev)
+                if obs is not None:
+                    mom_sq = jnp.where(act, mom_sq, 0.0)
+            elif use_mom:
+                prev = regions
+            new_ctl = ()
+            if use_mom:
+                new_ctl += (prev,)
+            if use_adapt:
+                new_ctl += (act, eff)
             if obs is None:
-                return (new_regions, new_res, A), None
+                return (new_regions, new_res, A, *new_ctl), None
             mask = (w > 0.0).astype(jnp.float32)
             n_dir = jnp.sum(mask)  # realized DIRECTED edge count
             if d2e is not None:
@@ -806,6 +947,12 @@ def gather_consensus_rounds(
                 send = jnp.mean(
                     obs_metrics.slab_wire_send_bytes(wire_codec, layout, wire)
                 )
+            if use_adapt:
+                eff_rounds = eff
+                send_w = jnp.where(act, send, 0.0)
+            else:
+                eff_rounds = (r + 1).astype(jnp.float32)
+                send_w = send
             m = ConsensusMetrics(
                 disagreement=packing.region_disagreement(new_regions),
                 layer_d2_mean=d2m,
@@ -814,16 +961,19 @@ def gather_consensus_rounds(
                 ef_residual=ef,
                 # neighbour-only receive volume: mean in-degree x send — the
                 # sparse wire's honest number (dense paths bill (K-1) x send)
-                wire_recv_bytes=(n_dir / float(K)) * send,
-                wire_send_bytes=send,
+                wire_recv_bytes=(n_dir / float(K)) * send_w,
+                wire_send_bytes=send_w,
                 compression_ratio=idb / jnp.maximum(send, 1.0),
                 edges=n_dir / 2.0,
+                effective_rounds=eff_rounds,
+                momentum_norm=mom_sq,
             )
-            return (new_regions, new_res, A), m
+            return (new_regions, new_res, A, *new_ctl), m
 
-        (regions, res, A_last), metrics = _scan_rounds(
+        edge_ctl0 = ((regions,) if use_mom else ()) + ctl0
+        (regions, res, A_last, *_), metrics = _scan_rounds(
             edge_body,
-            (regions, res if stateful else (), A0),
+            (regions, res if stateful else (), A0, *edge_ctl0),
             (jnp.arange(rounds), edges.src, edges.dst, edges.w),
             rounds,
             unroll,
@@ -855,7 +1005,108 @@ def gather_consensus_rounds(
         metrics = None
         if algorithm not in ("classical", "drt"):
             raise ValueError(f"unknown algorithm {algorithm!r}")
-        if obs is not None:
+        if use_mom or use_adapt:
+            # Consensus control in COEFFICIENT space: with the round-set
+            # state written as x_t = M_t-combine of the initial regions, the
+            # heavy-ball recurrence x' = A-mix(x) + beta (x - x_prev)
+            # becomes M' = M A + beta (M - M_prev) with M_0 = M_{-1} = I,
+            # and every Gram-derived statistic (DRT distances, the adaptive
+            # gate's disagreement, telemetry) is gram_update(G0, M) from the
+            # CONSTANT initial Gram — the exact path keeps its two-D-pass
+            # property under control.  beta (M - M_prev) has zero column
+            # sums, so M stays column-stochastic and the consensus fixed
+            # point is untouched.
+            G0 = layout.gram(regions)
+            if obs is not None:
+                send = jnp.asarray(
+                    obs_metrics.slab_identity_bytes(layout), jnp.float32
+                )
+
+            def exact_body(carry, xs):
+                if use_mom:
+                    M, M_prev, A_prev, *ctl = carry
+                else:
+                    M, A_prev, *ctl = carry
+                r, C_r, metro_r = xs
+                need_G = use_adapt or algorithm == "drt" or obs is not None
+                Gt = packing.gram_update(G0, M) if need_G else None
+                if use_adapt:
+                    active, eff = ctl[-2], ctl[-1]
+                    act = active & (packing.gram_disagreement(Gt) > round_tol)
+                    eff = eff + act.astype(jnp.float32)
+                d2 = None
+                if algorithm == "drt" or obs is not None:
+                    d2, n2 = packing.gram_sq_dists(Gt)
+                if algorithm == "classical":
+                    A = jnp.broadcast_to(metro_r, (L, K, K))
+                else:
+                    A = drt_mod.drt_mixing_matrices(d2, n2, C_r, cfg)
+                M_new = jnp.einsum("pij,pjk->pik", M, A)
+                mom_sq = jnp.zeros((), jnp.float32)
+                if use_mom:
+                    dM = M - M_prev
+                    M_new = M_new + beta * dM
+                    if obs is not None:
+                        # ||beta * momentum term||^2 summed over agents and
+                        # layers: beta^2 tr(dM^T G0 dM), no D-sized work
+                        mom_sq = (
+                            (beta * beta)
+                            * jnp.sum(
+                                jnp.diagonal(
+                                    packing.gram_update(G0, dM), axis1=1, axis2=2
+                                )
+                            )
+                            / float(K)
+                        )
+                new_Mp = M if use_mom else None
+                if use_adapt:
+                    M_new = jnp.where(act, M_new, M)
+                    A = jnp.where(act, A, A_prev)
+                    if use_mom:
+                        new_Mp = jnp.where(act, M, M_prev)
+                    if obs is not None:
+                        mom_sq = jnp.where(act, mom_sq, 0.0)
+                new_carry = (M_new,) + ((new_Mp,) if use_mom else ()) + (A,)
+                if use_adapt:
+                    new_carry += (act, eff)
+                if obs is None:
+                    return new_carry, None
+                d2m, d2x = obs_metrics.d2_summaries(d2)
+                if use_adapt:
+                    eff_rounds = eff
+                    send_w = jnp.where(act, send, 0.0)
+                else:
+                    eff_rounds = (r + 1).astype(jnp.float32)
+                    send_w = send
+                m = ConsensusMetrics(
+                    disagreement=packing.gram_disagreement(
+                        packing.gram_update(G0, M_new)
+                    ),
+                    layer_d2_mean=d2m,
+                    layer_d2_max=d2x,
+                    mix_entropy=obs_metrics.mixing_entropy(A),
+                    ef_residual=jnp.zeros((), jnp.float32),
+                    wire_send_bytes=send_w,
+                    wire_recv_bytes=(K - 1.0) * send_w,
+                    compression_ratio=jnp.ones((), jnp.float32),
+                    edges=obs_metrics.edge_count(
+                        C_r if C_r is not None else metro_r
+                    ),
+                    effective_rounds=eff_rounds,
+                    momentum_norm=mom_sq,
+                )
+                return new_carry, m
+
+            carry0 = (eyeL,) + ((eyeL,) if use_mom else ()) + (A0,) + ctl0
+            (M, *rest), metrics = _scan_rounds(
+                exact_body,
+                carry0,
+                (jnp.arange(rounds), C_stack, metro_stack),
+                rounds,
+                unroll,
+            )
+            A_last = rest[1] if use_mom else rest[0]
+        elif obs is not None:
             # telemetry rides the Gram recurrence: the carried (L, K, K)
             # Gram delivers the disagreement (post-round diagonal trick) and
             # the pre-mix d2 summaries without touching the D parameters.
@@ -865,7 +1116,7 @@ def gather_consensus_rounds(
 
             def exact_body(carry, xs):
                 G, M, _ = carry
-                _, C_r, metro_r = xs
+                r, C_r, metro_r = xs
                 d2, n2 = packing.gram_sq_dists(G)
                 if algorithm == "classical":
                     A = jnp.broadcast_to(metro_r, (L, K, K))
@@ -885,6 +1136,8 @@ def gather_consensus_rounds(
                     edges=obs_metrics.edge_count(
                         C_r if C_r is not None else metro_r
                     ),
+                    effective_rounds=(r + 1).astype(jnp.float32),
+                    momentum_norm=jnp.zeros((), jnp.float32),
                 )
                 return (G2, jnp.einsum("pij,pjk->pik", M, A), A), m
 
@@ -954,47 +1207,87 @@ def gather_consensus_rounds(
         idb = obs_metrics.slab_identity_bytes(layout)
 
     def coded_body(carry, xs):
-        regions, res, _ = carry
+        regions, res, A_prev, *ctl = carry
         r, C_r, metro_r = xs
+        if use_mom:
+            prev = ctl[0]
+        if use_adapt:
+            active, eff = ctl[-2], ctl[-1]
+            act = active & (packing.region_disagreement(regions) > round_tol)
+            eff = eff + act.astype(jnp.float32)
         keys = _agent_keys(jax.random.fold_in(rng, r), K)
+        wire = None
+        d2 = None
         if fused_kernel:
             # ONE Pallas launch per coded round: encode + Gram + mixing +
-            # combine + self term, wire slabs never materialized in HBM
-            regions, res, A = _fused_coded_round(
+            # combine + self term, wire slabs never materialized in HBM;
+            # control (momentum / round gating) applies to its OUTPUTS, so
+            # the kernel composes with both knobs unchanged
+            new_regions, new_res, A = _fused_coded_round(
                 layout, regions, wire_codec, res, keys, C_r, metro_r, cfg,
                 algorithm,
             )
-            return (regions, res, A), None
-        # natively-batched encode over the agent axis (bit-identical wire to
-        # vmapping the per-agent two-phase oracle, without its transposes)
-        with obs_profiling.scope(obs, "consensus.encode"):
-            wire, res = packing.slab_encode_batched(
-                wire_codec, layout, regions, res, keys
-            )
-        with obs_profiling.scope(obs, "consensus.decode"):
-            decoded = packing.slab_decode(wire_codec, layout, wire)  # f32 regions
-        d2 = None
-        if obs is not None and algorithm == "drt":
-            # same stats _slab_mixing computes — held onto for the telemetry
-            d2, n2 = layout.pairwise_sq_dists(decoded)
-            A = drt_mod.drt_mixing_matrices(d2, n2, C_r, cfg)
         else:
-            A = _slab_mixing(layout, decoded, C_r, cfg, algorithm, metro_r, L)
-        eye = jnp.eye(K, dtype=A.dtype)
-        A_off = A * (1.0 - eye)[None]
-        with obs_profiling.scope(obs, "consensus.combine"):
-            if use_kernels:
-                # codec outside the fused slab_encode_combine family (e.g. a
-                # custom cast dtype): keep the PR-4 whole-slab combine kernel
-                # rather than silently ignoring use_kernels
-                off = _combine_slab_kernels(layout, A_off, decoded)
+            # natively-batched encode over the agent axis (bit-identical
+            # wire to vmapping the per-agent two-phase oracle, without its
+            # transposes)
+            with obs_profiling.scope(obs, "consensus.encode"):
+                wire, new_res = packing.slab_encode_batched(
+                    wire_codec, layout, regions, res, keys
+                )
+            with obs_profiling.scope(obs, "consensus.decode"):
+                decoded = packing.slab_decode(wire_codec, layout, wire)  # f32
+            if obs is not None and algorithm == "drt":
+                # same stats _slab_mixing computes — held for the telemetry
+                d2, n2 = layout.pairwise_sq_dists(decoded)
+                A = drt_mod.drt_mixing_matrices(d2, n2, C_r, cfg)
             else:
-                off = layout.combine(A_off, decoded)
-            diag = jnp.diagonal(A, axis1=1, axis2=2)  # (L, K)
-            selfed = layout.scale_by_layer(diag.T, regions)  # full-precision self
-            regions = jax.tree.map(jnp.add, off, selfed)
+                A = _slab_mixing(layout, decoded, C_r, cfg, algorithm, metro_r, L)
+            eye = jnp.eye(K, dtype=A.dtype)
+            A_off = A * (1.0 - eye)[None]
+            with obs_profiling.scope(obs, "consensus.combine"):
+                if use_kernels:
+                    # codec outside the fused slab_encode_combine family
+                    # (e.g. a custom cast dtype): keep the PR-4 whole-slab
+                    # combine kernel rather than silently ignoring
+                    # use_kernels
+                    off = _combine_slab_kernels(layout, A_off, decoded)
+                else:
+                    off = layout.combine(A_off, decoded)
+                diag = jnp.diagonal(A, axis1=1, axis2=2)  # (L, K)
+                selfed = layout.scale_by_layer(diag.T, regions)  # f32 self
+                new_regions = jax.tree.map(jnp.add, off, selfed)
+        mom_sq = jnp.zeros((), jnp.float32)
+        if use_mom:
+            mom = jax.tree.map(
+                lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                regions, prev,
+            )
+            new_regions = jax.tree.map(
+                lambda n, m_: (n.astype(jnp.float32) + beta * m_).astype(n.dtype),
+                new_regions, mom,
+            )
+            if obs is not None:
+                mom_sq = (beta * beta) * _tree_momentum_sq(mom) / float(K)
+        if use_adapt:
+            new_regions = jax.tree.map(
+                lambda n, o: jnp.where(act, n, o), new_regions, regions
+            )
+            new_res = jax.tree.map(lambda n, o: jnp.where(act, n, o), new_res, res)
+            A = jnp.where(act, A, A_prev)
+            if use_mom:
+                prev = jax.tree.map(lambda o, p: jnp.where(act, o, p), regions, prev)
+            if obs is not None:
+                mom_sq = jnp.where(act, mom_sq, 0.0)
+        elif use_mom:
+            prev = regions
+        new_ctl = ()
+        if use_mom:
+            new_ctl += (prev,)
+        if use_adapt:
+            new_ctl += (act, eff)
         if obs is None:
-            return (regions, res, A), None
+            return (new_regions, new_res, A, *new_ctl), None
         if d2 is not None:
             d2m, d2x = obs_metrics.d2_summaries(d2)
         else:
@@ -1003,28 +1296,37 @@ def gather_consensus_rounds(
             d2m = d2x = jnp.zeros((L,), jnp.float32)
         if stateful:
             ef = (
-                sum(jnp.sum(jnp.square(t.astype(jnp.float32))) for t in res)
+                sum(jnp.sum(jnp.square(t.astype(jnp.float32))) for t in new_res)
                 / float(K)
             )
         else:
             ef = jnp.zeros((), jnp.float32)
         send = jnp.mean(obs_metrics.slab_wire_send_bytes(wire_codec, layout, wire))
+        if use_adapt:
+            eff_rounds = eff
+            send_w = jnp.where(act, send, 0.0)
+        else:
+            eff_rounds = (r + 1).astype(jnp.float32)
+            send_w = send
         m = ConsensusMetrics(
-            disagreement=packing.region_disagreement(regions),
+            disagreement=packing.region_disagreement(new_regions),
             layer_d2_mean=d2m,
             layer_d2_max=d2x,
             mix_entropy=obs_metrics.mixing_entropy(A),
             ef_residual=ef,
-            wire_send_bytes=send,
-            wire_recv_bytes=(K - 1.0) * send,
+            wire_send_bytes=send_w,
+            wire_recv_bytes=(K - 1.0) * send_w,
             compression_ratio=idb / jnp.maximum(send, 1.0),
             edges=obs_metrics.edge_count(C_r if C_r is not None else metro_r),
+            effective_rounds=eff_rounds,
+            momentum_norm=mom_sq,
         )
-        return (regions, res, A), m
+        return (new_regions, new_res, A, *new_ctl), m
 
-    (regions, res, A_last), metrics = _scan_rounds(
+    coded_ctl0 = ((regions,) if use_mom else ()) + ctl0
+    (regions, res, A_last, *_), metrics = _scan_rounds(
         coded_body,
-        (regions, res if stateful else (), A0),
+        (regions, res if stateful else (), A0, *coded_ctl0),
         (jnp.arange(rounds), C_stack, metro_stack),
         rounds,
         unroll,
@@ -1182,6 +1484,13 @@ class PermuteConsensus:
     # optional repro.core.dynamic.TopologySchedule (duck-typed: needs
     # .topology_at(t) and .num_agents); None keeps the static topology
     schedule: object | None = None
+    # consensus control — same semantics (and zero-cost-disable contract) as
+    # gather_consensus_rounds: momentum=beta adds the heavy-ball term
+    # x' = A-mix(x) + beta (x - x_prev) per round; round_tol=tol turns
+    # rounds= into an adaptive budget gated on the global disagreement
+    # (one D-sized psum per round, the same price the obs disagreement pays)
+    momentum: float = 0.0
+    round_tol: float | None = None
 
     def _round_topology(self, start_round: int, r: int) -> Topology:
         if self.schedule is None:
@@ -1296,6 +1605,13 @@ class PermuteConsensus:
         Fully-churned rounds still emit a row (zero wire volume, zero
         entropy).  ``obs=None`` traces the exact pre-telemetry program.
         """
+        if rounds < 1:
+            raise ValueError(
+                f"PermuteConsensus needs rounds >= 1, got {rounds}; skip the "
+                "call entirely for a consensus-free step"
+            )
+        if self.round_tol is not None and not float(self.round_tol) > 0.0:
+            raise ValueError(f"round_tol must be > 0, got {self.round_tol}")
         if self.schedule is not None:
             if not isinstance(start_round, (int, np.integer)):
                 raise TypeError(
@@ -1353,6 +1669,29 @@ class PermuteConsensus:
                 res = layout.pack_regions(codec_state)
         if wire_codec is not None:
             base_rng = _require_rng(wire_codec, rng)
+        beta = float(self.momentum)
+        use_mom = beta != 0.0
+        use_adapt = self.round_tol is not None
+        tol = float(self.round_tol) if use_adapt else None
+        K_glob = self.topology.num_agents
+        if use_mom:
+            prev = regions
+        if use_adapt:
+            active = jnp.ones((), bool)
+            eff = jnp.zeros((), jnp.float32)
+
+        def _global_disagreement(regs):
+            # the engine never holds the full agent stack, so the global
+            # mean_k ||x_k - x_bar||^2 costs one D-sized psum — the price
+            # both the obs disagreement and the adaptive gate pay here
+            loc = jnp.zeros((), jnp.float32)
+            for t in regs:
+                x = t.astype(jnp.float32)
+                xbar = jax.lax.psum(x, ax) / K_glob
+                loc = loc + jnp.sum(jnp.square(x - xbar))
+            for a in self.norm_reduce_axes:
+                loc = jax.lax.psum(loc, a)
+            return jax.lax.psum(loc, ax) / K_glob
 
         def _norms(regs):
             n = layout.layer_sq_norms(regs)
@@ -1381,22 +1720,8 @@ class PermuteConsensus:
             obs_ms = []
             L_part = part.num_layers
             idb = obs_metrics.slab_identity_bytes(layout)
-            K_glob = self.topology.num_agents
 
-            def _global_disagreement(regs):
-                # the engine never holds the full agent stack, so the global
-                # mean_k ||x_k - x_bar||^2 costs one D-sized psum per round —
-                # the one telemetry term here that is not read off local state
-                loc = jnp.zeros((), jnp.float32)
-                for t in regs:
-                    x = t.astype(jnp.float32)
-                    xbar = jax.lax.psum(x, ax) / K_glob
-                    loc = loc + jnp.sum(jnp.square(x - xbar))
-                for a in self.norm_reduce_axes:
-                    loc = jax.lax.psum(loc, a)
-                return jax.lax.psum(loc, ax) / K_glob
-
-            def _round_metrics(regs, wire, res_now, topo, n_ex, stats):
+            def _round_metrics(regs, wire, res_now, topo, n_ex, stats, eff_rounds, mom_sq):
                 """stats: (d2s, cws, w_all) stacks, or None on a no-edge round."""
                 if wire_codec is not None:
                     per_wire = obs_metrics.slab_wire_send_bytes(
@@ -1434,12 +1759,21 @@ class PermuteConsensus:
                     edges=jnp.asarray(
                         float(np.sum(topo.adjacency)) / 2.0, jnp.float32
                     ),
+                    effective_rounds=jnp.asarray(eff_rounds, jnp.float32),
+                    momentum_norm=jnp.asarray(mom_sq, jnp.float32),
                 )
 
         static = self.schedule is None or getattr(self.schedule, "static", False)
         static_ctx = self._round_ctx(start_round, 0, None) if static else None
         for r in range(rounds):
             topo, perms, inv_srcs, Cmat = self._round_ctx(start_round, r, static_ctx)
+            regions0, res0 = regions, res
+            if use_adapt and perms:
+                # pre-round gate on the carried iterate: sticky off, charged
+                # only when the round would actually exchange
+                act = active & (_global_disagreement(regions) > tol)
+                active = act
+                eff = eff + act.astype(jnp.float32)
             if wire_codec is not None:
                 key = jax.random.fold_in(jax.random.fold_in(base_rng, r), my)
                 with obs_profiling.scope(obs, "consensus.encode"):
@@ -1466,10 +1800,15 @@ class PermuteConsensus:
                 self_hat = regions
             if not perms:
                 # fully-churned round (no edges anywhere): every agent keeps
-                # its iterate; a stateful codec's residual still advanced
+                # its iterate; a stateful codec's residual still advanced.
+                # Control treats it as skipped: no momentum step, no budget
+                # charge, prev untouched.
                 if obs is not None:
                     obs_ms.append(
-                        _round_metrics(regions, wire, res, topo, 0.0, None)
+                        _round_metrics(
+                            regions, wire, res, topo, 0.0, None,
+                            eff if use_adapt else float(r + 1), 0.0,
+                        )
                     )
                 continue
 
@@ -1527,11 +1866,38 @@ class PermuteConsensus:
                     )  # (1+n, n_slots)
                     out_regions.append(jnp.sum(w_g[..., None] * srcs_g, axis=0))
                 regions = tuple(out_regions)
+            mom_sq = jnp.zeros((), jnp.float32)
+            if use_mom:
+                mom = jax.tree.map(
+                    lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                    regions0, prev,
+                )
+                regions = jax.tree.map(
+                    lambda n, m_: (n.astype(jnp.float32) + beta * m_).astype(n.dtype),
+                    regions, mom,
+                )
+                if obs is not None:
+                    # local-shard view, like the other non-disagreement fields
+                    mom_sq = (beta * beta) * _tree_momentum_sq(mom)
+            if use_adapt:
+                regions = jax.tree.map(
+                    lambda n, o: jnp.where(act, n, o), regions, regions0
+                )
+                res = jax.tree.map(lambda n, o: jnp.where(act, n, o), res, res0)
+                if use_mom:
+                    prev = jax.tree.map(
+                        lambda o, p: jnp.where(act, o, p), regions0, prev
+                    )
+                if obs is not None:
+                    mom_sq = jnp.where(act, mom_sq, 0.0)
+            elif use_mom:
+                prev = regions0
             if obs is not None:
                 obs_ms.append(
                     _round_metrics(
                         regions, wire, res, topo, float(len(perms)),
                         (jnp.stack(d2s), jnp.stack(cws), w_all),
+                        eff if use_adapt else float(r + 1), mom_sq,
                     )
                 )
 
@@ -1580,26 +1946,36 @@ class PermuteConsensus:
                 n = jax.lax.psum(n, a)
             return n
 
+        beta = float(self.momentum)
+        use_mom = beta != 0.0
+        use_adapt = self.round_tol is not None
+        tol = float(self.round_tol) if use_adapt else None
+        K_glob = self.topology.num_agents
+        if use_mom:
+            prev = psi_local
+        if use_adapt:
+            active = jnp.ones((), bool)
+            eff = jnp.zeros((), jnp.float32)
+
+        def _global_disagreement(tree):
+            loc = jnp.zeros((), jnp.float32)
+            for t in jax.tree.leaves(tree):
+                x = t.astype(jnp.float32)
+                xbar = jax.lax.psum(x, ax) / K_glob
+                loc = loc + jnp.sum(jnp.square(x - xbar))
+            for a in self.norm_reduce_axes:
+                loc = jax.lax.psum(loc, a)
+            return jax.lax.psum(loc, ax) / K_glob
+
         if obs is not None:
             obs_ms = []
             L_part = part.num_layers
-            K_glob = self.topology.num_agents
             template = jax.tree.map(
                 lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), psi_local
             )
             idb = float(IdentityCodec().wire_bytes(template))
 
-            def _global_disagreement(tree):
-                loc = jnp.zeros((), jnp.float32)
-                for t in jax.tree.leaves(tree):
-                    x = t.astype(jnp.float32)
-                    xbar = jax.lax.psum(x, ax) / K_glob
-                    loc = loc + jnp.sum(jnp.square(x - xbar))
-                for a in self.norm_reduce_axes:
-                    loc = jax.lax.psum(loc, a)
-                return jax.lax.psum(loc, ax) / K_glob
-
-            def _round_metrics(tree, wire, state_now, topo, n_ex, stats):
+            def _round_metrics(tree, wire, state_now, topo, n_ex, stats, eff_rounds, mom_sq):
                 if wire_codec is not None:
                     per_wire = obs_metrics.tree_wire_send_bytes(
                         wire_codec, wire, template
@@ -1633,13 +2009,30 @@ class PermuteConsensus:
                     edges=jnp.asarray(
                         float(np.sum(topo.adjacency)) / 2.0, jnp.float32
                     ),
+                    effective_rounds=jnp.asarray(eff_rounds, jnp.float32),
+                    momentum_norm=jnp.asarray(mom_sq, jnp.float32),
                 )
 
         new_state = codec_state
+        if (
+            (use_mom or use_adapt)
+            and wire_codec is not None
+            and wire_codec.stateful
+            and (new_state is None or new_state == ())
+        ):
+            # materialize the EF state before the loop so the adaptive
+            # where-mask sees the same pytree structure on both sides of
+            # round 1 (control-off keeps the lazy in-loop init and its jaxpr)
+            new_state = wire_codec.init_state(psi_local)
         static = self.schedule is None or getattr(self.schedule, "static", False)
         static_ctx = self._round_ctx(start_round, 0, None) if static else None
         for r in range(rounds):
             topo, perms, inv_srcs, Cmat = self._round_ctx(start_round, r, static_ctx)
+            psi0, state0 = psi_local, new_state
+            if use_adapt and perms:
+                act = active & (_global_disagreement(psi_local) > tol)
+                active = act
+                eff = eff + act.astype(jnp.float32)
             if wire_codec is not None:
                 if wire_codec.stateful and (new_state is None or new_state == ()):
                     new_state = wire_codec.init_state(psi_local)
@@ -1655,10 +2048,14 @@ class PermuteConsensus:
                 wire = psi_local
                 psi_self_hat = psi_local
             if not perms:
-                # fully-churned round: keep the iterate
+                # fully-churned round: keep the iterate; control treats it as
+                # skipped (no momentum step, no budget charge)
                 if obs is not None:
                     obs_ms.append(
-                        _round_metrics(psi_local, wire, new_state, topo, 0.0, None)
+                        _round_metrics(
+                            psi_local, wire, new_state, topo, 0.0, None,
+                            eff if use_adapt else float(r + 1), 0.0,
+                        )
                     )
                 continue
 
@@ -1695,12 +2092,38 @@ class PermuteConsensus:
                 scaled = part.scale_by_layer(w, recv)
                 out = jax.tree.map(jnp.add, out, scaled)
             psi_local = out
+            mom_sq = jnp.zeros((), jnp.float32)
+            if use_mom:
+                mom = jax.tree.map(
+                    lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                    psi0, prev,
+                )
+                psi_local = jax.tree.map(
+                    lambda n, m_: (n.astype(jnp.float32) + beta * m_).astype(n.dtype),
+                    psi_local, mom,
+                )
+                if obs is not None:
+                    mom_sq = (beta * beta) * _tree_momentum_sq(mom)
+            if use_adapt:
+                psi_local = jax.tree.map(
+                    lambda n, o: jnp.where(act, n, o), psi_local, psi0
+                )
+                new_state = jax.tree.map(
+                    lambda n, o: jnp.where(act, n, o), new_state, state0
+                )
+                if use_mom:
+                    prev = jax.tree.map(lambda o, p: jnp.where(act, o, p), psi0, prev)
+                if obs is not None:
+                    mom_sq = jnp.where(act, mom_sq, 0.0)
+            elif use_mom:
+                prev = psi0
             if obs is not None:
                 w_all = jnp.concatenate([w_self[None], w_nbrs], axis=0)
                 obs_ms.append(
                     _round_metrics(
                         psi_local, wire, new_state, topo, float(len(perms)),
                         (jnp.stack(d2s), jnp.stack(cws), w_all),
+                        eff if use_adapt else float(r + 1), mom_sq,
                     )
                 )
         metrics = None

@@ -26,6 +26,7 @@ from repro.core.consensus import Algorithm, ConsensusPath, gather_consensus_roun
 from repro.core.drt import DRTConfig
 from repro.core.dynamic import (
     edge_stacks_from_topology,
+    make_round_policy,
     make_schedule,
     max_in_degree_from_topology,
 )
@@ -70,6 +71,15 @@ class TrainerConfig:
     # topology — bit-identical to pre-schedule behavior.  Consensus round t
     # of step s mixes over graph ``s * consensus_steps + t``.
     schedule: object | None = None
+    # heavy-ball momentum on the combination rounds:
+    # x_{t+1} = A_t-mix(x_t) + beta (x_t - x_{t-1}); 0.0 (default) traces the
+    # momentum-free program bit-identically
+    consensus_momentum: float = 0.0
+    # per-round-set budget: a repro.core.dynamic.RoundPolicy or spec string
+    # ("fixed:<n>" / "adaptive:<tol>:<max>").  None keeps ``consensus_steps``
+    # fixed rounds; an adaptive policy still traces max_rounds (compile O(1)
+    # in rounds) but gates each round on the carried disagreement
+    rounds_policy: object | None = None
 
 
 class DecentralizedTrainer:
@@ -97,6 +107,11 @@ class DecentralizedTrainer:
         self.schedule = (
             make_schedule(cfg.schedule, self.K) if cfg.schedule is not None else None
         )
+        policy = make_round_policy(cfg.rounds_policy)
+        # the policy (when set) owns the round budget; consensus_steps remains
+        # the legacy fixed-count spelling
+        self._rounds = policy.max_rounds if policy is not None else cfg.consensus_steps
+        self._round_tol = policy.tol if policy is not None else None
         mix_topo = topology
         if self.schedule is not None and self.schedule.static:
             # a static schedule IS a static topology: take the schedule-free
@@ -174,6 +189,12 @@ class DecentralizedTrainer:
     ):
         """``consensus_steps`` combination rounds (eq. 3b / second line of (11)).
 
+        ``cfg.rounds_policy`` (when set) overrides the count: ``fixed:<n>``
+        runs n rounds; ``adaptive:<tol>:<max>`` traces max rounds but gates
+        each on the carried disagreement.  ``cfg.consensus_momentum`` adds
+        heavy-ball momentum across rounds — both knobs default off and then
+        trace today's exact program.
+
         DRT recomputes the mixing matrices each round (they are time varying);
         classical diffusion reuses the static Metropolis matrix.  With a
         configured wire codec the exchange is compressed and any per-agent
@@ -196,9 +217,10 @@ class DecentralizedTrainer:
         if self.codec is not None and rng is None:
             rng = jax.random.fold_in(jax.random.key(0), state.step)
         C, metropolis = self._C, self._metropolis
+        rounds = self._rounds
         if self.schedule is not None:
             C, metropolis = self.schedule.mixing_stacks(
-                state.step * self.cfg.consensus_steps, self.cfg.consensus_steps
+                state.step * rounds, rounds
             )
         edges = None
         max_in_degree = None
@@ -208,21 +230,18 @@ class DecentralizedTrainer:
             # host Dmax bound keys the gather-only CSR combine
             if self.schedule is not None:
                 edges = self.schedule.edge_stacks(
-                    state.step * self.cfg.consensus_steps,
-                    self.cfg.consensus_steps,
+                    state.step * rounds, rounds
                 )
                 max_in_degree = self.schedule.max_in_degree
             else:
-                edges = edge_stacks_from_topology(
-                    self._mix_topo, self.cfg.consensus_steps
-                )
+                edges = edge_stacks_from_topology(self._mix_topo, rounds)
                 max_in_degree = max_in_degree_from_topology(self._mix_topo)
         out = gather_consensus_rounds(
             self.partition,
             state.params,
             C,
             self.cfg.drt,
-            rounds=self.cfg.consensus_steps,
+            rounds=rounds,
             algorithm=self.cfg.algorithm,
             metropolis=metropolis,
             codec=self.codec,
@@ -233,6 +252,8 @@ class DecentralizedTrainer:
             edges=edges,
             max_in_degree=max_in_degree,
             use_kernels=self.cfg.use_kernels,
+            momentum=self.cfg.consensus_momentum,
+            round_tol=self._round_tol,
             obs=obs,
         )
         if obs is None:
@@ -318,10 +339,18 @@ class DecentralizedTrainer:
             return st, metrics["loss"]
 
         state, losses = jax.lax.scan(body, state, (batches_K, keys))
-        if self.cfg.consensus_steps > 0:
+        if self._rounds > 0:
             state, _, cm = self.consensus(state, obs=ObsConfig())
             dis = cm.disagreement[-1]
+            eff = cm.effective_rounds[-1]
         else:
-            state, _ = self.consensus(state)
+            # zero consensus rounds: the engines (correctly) refuse a
+            # rounds=0 call, so skip the exchange entirely and report the
+            # same per-agent-mean disagreement the telemetry would
             dis = self.disagreement(state.params) / self.K
-        return state, {"loss": jnp.mean(losses), "disagreement": dis}
+            eff = jnp.zeros((), jnp.float32)
+        return state, {
+            "loss": jnp.mean(losses),
+            "disagreement": dis,
+            "effective_rounds": eff,
+        }

@@ -586,6 +586,73 @@ def make_schedule(
     return sched
 
 
+@dataclasses.dataclass(frozen=True)
+class RoundPolicy:
+    """Per-round-set budget policy for the consensus engines.
+
+    ``fixed`` (``tol is None``): always run ``max_rounds`` rounds — the
+    historical behaviour.  ``adaptive``: still *trace* ``max_rounds`` rounds
+    (compile stays O(1) in rounds), but inside the compiled scan each round
+    first checks the carried disagreement against ``tol`` and becomes an
+    identity no-op once it drops below — consensus control in the sense of
+    Kong et al. (arXiv 2102.04828), spending wire bytes only while measured
+    disagreement warrants them.  The gate is sticky: once a round-set goes
+    inactive it stays inactive for the remaining traced rounds.
+    """
+
+    max_rounds: int
+    tol: float | None = None
+
+    def __post_init__(self):
+        if self.max_rounds < 1:
+            raise ValueError(
+                f"RoundPolicy needs max_rounds >= 1, got {self.max_rounds}"
+            )
+        if self.tol is not None and not self.tol > 0.0:
+            raise ValueError(f"RoundPolicy needs tol > 0, got {self.tol}")
+
+    @property
+    def adaptive(self) -> bool:
+        return self.tol is not None
+
+
+def make_round_policy(spec: "str | int | RoundPolicy | None") -> "RoundPolicy | None":
+    """Build a :class:`RoundPolicy` from a spec (the ``--rounds-policy`` CLI
+    surface and the ``TrainerConfig.rounds_policy`` field).
+
+    Specs::
+
+        fixed:<n>               always run n rounds
+        adaptive:<tol>:<max>    run up to max rounds, stop once the measured
+                                per-round disagreement drops below tol
+        <n>                     bare int / digit string, same as fixed:<n>
+
+    ``None`` and an existing :class:`RoundPolicy` pass through.
+    """
+    if spec is None or isinstance(spec, RoundPolicy):
+        return spec
+    if isinstance(spec, int):
+        return RoundPolicy(max_rounds=spec)
+    if isinstance(spec, str):
+        head, _, rest = spec.partition(":")
+        if head == "fixed":
+            return RoundPolicy(max_rounds=int(rest))
+        if head == "adaptive":
+            tol_s, sep, max_s = rest.partition(":")
+            if not sep:
+                raise ValueError(
+                    f"adaptive policy spec {spec!r} needs 'adaptive:<tol>:<max>'"
+                )
+            return RoundPolicy(max_rounds=int(max_s), tol=float(tol_s))
+        if spec.lstrip("+-").isdigit():
+            return RoundPolicy(max_rounds=int(spec))
+        raise ValueError(
+            f"unknown rounds policy spec {spec!r}; expected 'fixed:<n>', "
+            "'adaptive:<tol>:<max>' or a bare round count"
+        )
+    raise TypeError(f"cannot build a round policy from {type(spec).__name__}")
+
+
 def edge_stacks_from_topology(topology: Topology, rounds: int) -> EdgeStacks:
     """Static-graph convenience: the topology's edge list broadcast over a
     round-set (what ``path="edge"`` consumes when no schedule is set)."""

@@ -29,6 +29,7 @@ from repro.core.consensus import gather_consensus_rounds
 from repro.core.decentralized import TrainerConfig
 from repro.core.dynamic import (
     edge_stacks_from_topology,
+    make_round_policy,
     make_schedule,
     max_in_degree_from_topology,
 )
@@ -127,6 +128,13 @@ def make_train_step(
     schedule from inside a jitted step — pass ``consensus_impl="gather"``
     (static schedules are folded into the topology and remain fine).
 
+    Consensus control: ``tcfg.consensus_momentum`` adds heavy-ball momentum
+    across the combination rounds of either engine, and ``tcfg.rounds_policy``
+    (``fixed:<n>`` / ``adaptive:<tol>:<max>``) overrides ``consensus_rounds``
+    — an adaptive policy still traces ``max`` rounds (compile O(1) in
+    rounds) but gates each on the carried disagreement.  Both default off
+    and then trace today's exact program.
+
     ``obs`` (an :class:`repro.obs.ObsConfig`) threads in-graph consensus
     telemetry through the step: ``metrics["consensus"]`` carries a
     per-round :class:`repro.obs.ConsensusMetrics` stack (gather: global
@@ -138,6 +146,17 @@ def make_train_step(
     K = cfg.num_agents
     if topology.num_agents != K:
         raise ValueError(f"topology K={topology.num_agents} != cfg K={K}")
+    policy = make_round_policy(tcfg.rounds_policy)
+    if policy is not None:
+        # the policy owns the round budget; consensus_rounds stays the legacy
+        # fixed-count spelling
+        consensus_rounds = policy.max_rounds
+    round_tol = policy.tol if policy is not None else None
+    if consensus_rounds < 1:
+        raise ValueError(
+            f"make_train_step needs consensus_rounds >= 1, got "
+            f"{consensus_rounds}"
+        )
     partition = build_partition(bundle)
     schedule = (
         make_schedule(tcfg.schedule, K) if tcfg.schedule is not None else None
@@ -191,6 +210,8 @@ def make_train_step(
             codec=wire_codec,
             path=tcfg.consensus_path,
             use_kernels=tcfg.use_kernels,
+            momentum=tcfg.consensus_momentum,
+            round_tol=round_tol,
         )
         # codec state mirrors the params leaf-for-leaf -> identical sharding
         comm_specs = (
@@ -324,6 +345,8 @@ def make_train_step(
                 edges=edges,
                 max_in_degree=max_in_degree,
                 use_kernels=tcfg.use_kernels,
+                momentum=tcfg.consensus_momentum,
+                round_tol=round_tol,
                 obs=obs,
             )
             if obs is None:
@@ -456,6 +479,19 @@ def main(argv=None) -> None:
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--consensus-rounds", type=int, default=1)
     ap.add_argument(
+        "--consensus-momentum", type=float, default=0.0,
+        help="heavy-ball momentum beta on the combination rounds: "
+             "x_{t+1} = mix(x_t) + beta (x_t - x_{t-1}); 0.0 (default) "
+             "traces the momentum-free program bit-identically",
+    )
+    ap.add_argument(
+        "--rounds-policy", default=None,
+        help="per-step round budget: 'fixed:<n>' or 'adaptive:<tol>:<max>' "
+             "(stop early once per-round disagreement drops below tol; extra "
+             "rounds become in-graph no-ops, compile stays O(1) in rounds); "
+             "overrides --consensus-rounds",
+    )
+    ap.add_argument(
         "--steps-per-call", type=int, default=1,
         help="train steps fused into ONE jitted, buffer-donated device "
              "program (make_train_many_steps); amortizes per-step host "
@@ -510,6 +546,12 @@ def main(argv=None) -> None:
     )
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args(argv)
+    if args.consensus_rounds < 1:
+        ap.error(
+            f"--consensus-rounds must be >= 1 (got {args.consensus_rounds}); "
+            "the consensus engines refuse a zero-round exchange rather than "
+            "silently no-op"
+        )
 
     bundle = get_bundle(args.arch, num_agents=args.agents)
     topo = make_topology(args.topology, args.agents)
@@ -526,6 +568,8 @@ def main(argv=None) -> None:
     tcfg = TrainerConfig(
         algorithm=args.algorithm, codec=args.codec, schedule=schedule,
         consensus_path=args.consensus_path,
+        consensus_momentum=args.consensus_momentum,
+        rounds_policy=args.rounds_policy,
     )
     state = init_train_state(bundle, opt, jax.random.key(0), codec=args.codec)
     stream = SyntheticTokenStream(
@@ -549,59 +593,64 @@ def main(argv=None) -> None:
             for rec in repro_obs.consensus_records(cm, step=step_idx):
                 sink.write(rec)
 
-    with repro_obs.trace(args.profile_dir):
-        if args.steps_per_call > 1:
-            many = make_train_many_steps(
-                bundle, topo, opt, tcfg,
-                consensus_rounds=args.consensus_rounds, obs=obs,
-            )
-            i = 0
-            while i < args.steps:
-                n = min(args.steps_per_call, args.steps - i)
-                tokens = jnp.stack([
-                    jnp.asarray(stream.agent_batches(args.batch, args.agents, step=j))
-                    for j in range(i, i + n)
-                ])  # (n, K, batch, seq)
-                keys = jnp.stack([jax.random.key(j) for j in range(i, i + n)])
-                with repro_obs.annotation(f"train.chunk[{i}:{i + n}]"):
-                    state, metrics = many(state, {"tokens": tokens}, keys)
-                    losses = jax.device_get(metrics["loss"])  # syncs the chunk
-                rate = thru.update(n, n * tokens_per_step)
-                last = i + n - 1
-                print(
-                    f"steps {i:4d}..{last:4d}  "
-                    f"loss mean {float(losses.mean()):.4f} "
-                    f"last {float(losses[-1]):.4f}  "
-                    f"{rate.steps_per_s:7.2f} steps/s  "
-                    f"{rate.tokens_per_s:9.0f} tok/s  ({n} steps/call)"
+    # close the sink even when the loop raises (keyboard interrupt, OOM):
+    # line-buffered JSONL means every completed round's record survives
+    try:
+        with repro_obs.trace(args.profile_dir):
+            if args.steps_per_call > 1:
+                many = make_train_many_steps(
+                    bundle, topo, opt, tcfg,
+                    consensus_rounds=args.consensus_rounds, obs=obs,
                 )
-                if obs is not None:
-                    cm = jax.device_get(metrics["consensus"])
-                    for j in range(n):
-                        emit(jax.tree.map(lambda x: x[j], cm), i + j)
-                i += n
-        else:
-            step = jax.jit(
-                make_train_step(bundle, topo, opt, tcfg,
-                                consensus_rounds=args.consensus_rounds, obs=obs)
-            )
-            for i in range(args.steps):
-                batch = {"tokens": jnp.asarray(
-                    stream.agent_batches(args.batch, args.agents, step=i))}
-                with repro_obs.annotation(f"train.step[{i}]"):
-                    state, metrics = step(state, batch, jax.random.key(i))
-                    loss = float(metrics["loss"])  # syncs the step
-                rate = thru.update(1, tokens_per_step)
-                emit(metrics.get("consensus"), i)
-                if i % 10 == 0 or i == args.steps - 1:
-                    print(f"step {i:4d}  loss {loss:.4f}  "
-                          f"{rate.steps_per_s:7.2f} steps/s  "
-                          f"{rate.tokens_per_s:9.0f} tok/s")
+                i = 0
+                while i < args.steps:
+                    n = min(args.steps_per_call, args.steps - i)
+                    tokens = jnp.stack([
+                        jnp.asarray(stream.agent_batches(args.batch, args.agents, step=j))
+                        for j in range(i, i + n)
+                    ])  # (n, K, batch, seq)
+                    keys = jnp.stack([jax.random.key(j) for j in range(i, i + n)])
+                    with repro_obs.annotation(f"train.chunk[{i}:{i + n}]"):
+                        state, metrics = many(state, {"tokens": tokens}, keys)
+                        losses = jax.device_get(metrics["loss"])  # syncs the chunk
+                    rate = thru.update(n, n * tokens_per_step)
+                    last = i + n - 1
+                    print(
+                        f"steps {i:4d}..{last:4d}  "
+                        f"loss mean {float(losses.mean()):.4f} "
+                        f"last {float(losses[-1]):.4f}  "
+                        f"{rate.steps_per_s:7.2f} steps/s  "
+                        f"{rate.tokens_per_s:9.0f} tok/s  ({n} steps/call)"
+                    )
+                    if obs is not None:
+                        cm = jax.device_get(metrics["consensus"])
+                        for j in range(n):
+                            emit(jax.tree.map(lambda x: x[j], cm), i + j)
+                    i += n
+            else:
+                step = jax.jit(
+                    make_train_step(bundle, topo, opt, tcfg,
+                                    consensus_rounds=args.consensus_rounds, obs=obs)
+                )
+                for i in range(args.steps):
+                    batch = {"tokens": jnp.asarray(
+                        stream.agent_batches(args.batch, args.agents, step=i))}
+                    with repro_obs.annotation(f"train.step[{i}]"):
+                        state, metrics = step(state, batch, jax.random.key(i))
+                        loss = float(metrics["loss"])  # syncs the step
+                    rate = thru.update(1, tokens_per_step)
+                    emit(metrics.get("consensus"), i)
+                    if i % 10 == 0 or i == args.steps - 1:
+                        print(f"step {i:4d}  loss {loss:.4f}  "
+                              f"{rate.steps_per_s:7.2f} steps/s  "
+                              f"{rate.tokens_per_s:9.0f} tok/s")
+    finally:
+        if sink is not None:
+            sink.close()
     life = thru.lifetime()
     print(f"total: {life.steps} steps in {life.seconds:.1f}s  "
           f"{life.steps_per_s:.2f} steps/s  {life.tokens_per_s:.0f} tok/s")
     if sink is not None:
-        sink.close()
         print(repro_obs.format_summary(
             repro_obs.summarize(repro_obs.read_jsonl(args.metrics_jsonl))))
     if args.ckpt_dir:

@@ -108,13 +108,20 @@ class ConsensusMetrics(NamedTuple):
     wire_recv_bytes: jax.Array
     compression_ratio: jax.Array
     edges: jax.Array
+    # consensus-control fields: cumulative count of rounds that actually ran
+    # (equals round_index + 1 under a fixed budget; plateaus once an adaptive
+    # budget gates the round-set off) and the mean per-agent squared norm of
+    # the applied heavy-ball term (0 when momentum is off or the round was
+    # gated off)
+    effective_rounds: jax.Array
+    momentum_norm: jax.Array
 
 
 def empty_metrics(num_layers: int) -> ConsensusMetrics:
-    """A zero-round metric stack (``rounds <= 0`` round-sets)."""
+    """A zero-round metric stack (degenerate engines with no rounds to log)."""
     z = jnp.zeros((0,), F32)
     zl = jnp.zeros((0, num_layers), F32)
-    return ConsensusMetrics(z, zl, zl, z, z, z, z, z, z)
+    return ConsensusMetrics(z, zl, zl, z, z, z, z, z, z, z, z)
 
 
 def stack_metrics(per_round: list) -> ConsensusMetrics:

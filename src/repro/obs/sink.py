@@ -55,6 +55,11 @@ class JsonlSink:
 
 def _jsonable(x):
     arr = np.asarray(x)
+    if not (arr.dtype.isbuiltin and arr.dtype.kind in "biufc"):
+        # ml_dtypes arrays (bf16/f16 metric leaves from low-precision params)
+        # survive .item()/.tolist() as ml_dtypes SCALARS, which json.dumps
+        # rejects — round-trip through a builtin dtype first
+        arr = arr.astype(np.int64 if arr.dtype.kind in "iu" else np.float64)
     if arr.ndim == 0:
         return arr.item()
     return arr.tolist()

@@ -39,14 +39,21 @@ class Throughput:
 
     def update(self, steps: int, tokens: int = 0) -> Rate:
         now = self._clock()
-        dt = max(now - self._t0, 1e-9)
+        dt = now - self._t0
         self._t0 = now
         self.total_steps += steps
         self.total_tokens += tokens
+        # a sub-resolution window (dt == 0 on a coarse clock) has no honest
+        # rate: report 0.0 rather than the absurd steps/1e-9 spike the old
+        # clamp produced in the first JSONL record
+        if dt <= 0.0:
+            return Rate(0.0, 0.0, steps, tokens, max(dt, 0.0))
         return Rate(steps / dt, tokens / dt, steps, tokens, dt)
 
     def lifetime(self) -> Rate:
-        dt = max(self._clock() - self._start, 1e-9)
+        dt = self._clock() - self._start
+        if dt <= 0.0:
+            return Rate(0.0, 0.0, self.total_steps, self.total_tokens, max(dt, 0.0))
         return Rate(
             self.total_steps / dt,
             self.total_tokens / dt,

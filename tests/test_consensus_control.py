@@ -1,0 +1,388 @@
+"""Consensus control: heavy-ball momentum + disagreement-adaptive budgets.
+
+Contract under test (mirrors the obs zero-cost-disable contract):
+
+* ``momentum=0.0, round_tol=None`` (the defaults) trace the EXACT program
+  the engines traced before control existed — jaxpr equality, not just
+  numerics.
+* momentum accelerates mixing (ring graphs mix slowly; heavy-ball provably
+  helps, cf. arXiv 2010.11166 / 2102.04828) without changing the
+  column-stochastic combine structure.
+* an adaptive policy still traces ``max_rounds`` rounds (compile O(1) in
+  rounds) but gates each on the carried disagreement: gated rounds are
+  in-graph identity no-ops that charge zero wire bytes, and
+  ``effective_rounds`` telemetry counts exactly the rounds that ran.
+* a zero/negative round budget is refused loudly on every surface.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DRTConfig
+from repro.core.consensus import gather_consensus_rounds
+from repro.core.dynamic import RoundPolicy, make_round_policy
+from repro.core.packing import build_slab_layout
+from repro.core.topology import ring
+from repro.obs.metrics import ObsConfig
+from repro.utils.pytree import LayerPartition
+
+
+def _tree_K(K, scale=1.0, seed=0):
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "embed": {"w": jax.random.normal(k1, (6, 8)) * scale},
+            "out": {"b": jax.random.normal(k2, (8,)) * scale},
+        }
+
+    return jax.vmap(one)(jax.random.split(jax.random.key(seed), K))
+
+
+def _setup(K=8):
+    pK = _tree_K(K)
+    template = jax.tree.map(lambda x: x[0], pK)
+    part = LayerPartition.build(template)
+    layout = build_slab_layout(part, template)
+    return pK, part, layout
+
+
+def _dis(tree_K) -> float:
+    total = 0.0
+    K = jax.tree.leaves(tree_K)[0].shape[0]
+    for leaf in jax.tree.leaves(tree_K):
+        x = np.asarray(leaf, np.float64)
+        total += np.sum(np.square(x - x.mean(axis=0, keepdims=True)))
+    return total / K
+
+
+# ---------------------------------------------------------------------------
+# zero-cost disable: control off must trace the pre-control program
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("path", ["slab", "tree", "edge"])
+@pytest.mark.parametrize("codec", [None, "int8"])
+@pytest.mark.parametrize("obs", [None, ObsConfig()])
+def test_control_off_traces_identical_jaxpr(path, codec, obs):
+    """Explicit momentum=0.0 / round_tol=None must produce the SAME jaxpr as
+    omitting the kwargs — control is structurally absent when disabled."""
+    from repro.core.dynamic import (
+        edge_stacks_from_topology,
+        max_in_degree_from_topology,
+    )
+
+    K = 8
+    pK, part, layout = _setup(K)
+    topo = ring(K)
+    C = jnp.asarray(topo.c_matrix(), jnp.float32)
+    metro = jnp.asarray(topo.metropolis(), jnp.float32)
+    kw = dict(
+        rounds=3, algorithm="drt", metropolis=metro, layout=layout,
+        path=path, codec=codec,
+        rng=jax.random.key(0) if codec is not None else None,
+        obs=obs,
+    )
+    if path == "edge":
+        kw["edges"] = edge_stacks_from_topology(topo, 3)
+        kw["max_in_degree"] = max_in_degree_from_topology(topo)
+
+    def base(p):
+        return gather_consensus_rounds(part, p, C, DRTConfig(), **kw)
+
+    def explicit(p):
+        return gather_consensus_rounds(
+            part, p, C, DRTConfig(), momentum=0.0, round_tol=None, **kw)
+
+    assert str(jax.make_jaxpr(base)(pK)) == str(jax.make_jaxpr(explicit)(pK))
+
+
+def test_control_off_traces_identical_jaxpr_with_schedule():
+    """The parity contract holds with per-round mixing stacks from a dynamic
+    schedule (the scanned xs change shape, the control carry must not)."""
+    from repro.core.dynamic import make_schedule
+
+    K = 8
+    pK, part, layout = _setup(K)
+    sched = make_schedule("periodic:ring,star", K)
+    C_stack, metro_stack = sched.mixing_stacks(0, 3)
+
+    def run(p, **ctl):
+        return gather_consensus_rounds(
+            part, p, C_stack, DRTConfig(), rounds=3, metropolis=metro_stack,
+            layout=layout, **ctl)
+
+    assert str(jax.make_jaxpr(run)(pK)) == str(
+        jax.make_jaxpr(lambda p: run(p, momentum=0.0, round_tol=None))(pK))
+
+
+def test_control_off_jaxpr_differs_from_control_on():
+    """Sanity check on the parity test's power: turning a knob ON must
+    actually change the traced program."""
+    pK, part, layout = _setup()
+    C = jnp.asarray(ring(8).c_matrix(), jnp.float32)
+
+    def run(**ctl):
+        return str(jax.make_jaxpr(lambda p: gather_consensus_rounds(
+            part, p, C, DRTConfig(), rounds=3, layout=layout, **ctl))(pK))
+
+    assert run() != run(momentum=0.4)
+    assert run() != run(round_tol=0.1)
+
+
+# ---------------------------------------------------------------------------
+# momentum: numerics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("path", ["slab", "tree"])
+def test_momentum_accelerates_ring_mixing(path):
+    """beta=0.4 on a K=8 ring reaches materially lower disagreement than the
+    momentum-free rounds at the same budget."""
+    pK, part, layout = _setup()
+    C = jnp.asarray(ring(8).c_matrix(), jnp.float32)
+
+    def run(beta):
+        out, _, _ = gather_consensus_rounds(
+            part, pK, C, DRTConfig(), rounds=6, layout=layout, path=path,
+            momentum=beta)
+        return _dis(out)
+
+    d0, dm = run(0.0), run(0.4)
+    assert dm < 0.5 * d0, (d0, dm)
+
+
+def test_momentum_scan_matches_unrolled_under_jit():
+    """The scanned round-set and the unrolled one are the same compiled
+    program with momentum on.  (Eager unrolled drifts ~1e-7 via op-by-op
+    dispatch vs whole-body FMA fusion — parity is a compiled-program
+    contract, hence jit on both sides.)"""
+    pK, part, layout = _setup()
+    C = jnp.asarray(ring(8).c_matrix(), jnp.float32)
+
+    def run(unroll):
+        out, _, _ = gather_consensus_rounds(
+            part, pK, C, DRTConfig(), rounds=4, layout=layout,
+            momentum=0.3, round_tol=0.05, unroll=unroll)
+        return out
+
+    a = jax.jit(lambda p: run(False))(pK)
+    b = jax.jit(lambda p: run(True))(pK)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_momentum_norm_telemetry_zero_iff_disabled():
+    pK, part, layout = _setup()
+    C = jnp.asarray(ring(8).c_matrix(), jnp.float32)
+
+    def run(beta):
+        *_, cm = gather_consensus_rounds(
+            part, pK, C, DRTConfig(), rounds=3, layout=layout,
+            momentum=beta, obs=ObsConfig())
+        return cm
+
+    np.testing.assert_array_equal(np.asarray(run(0.0).momentum_norm), 0.0)
+    # round 0 has x_{-1} = x_0 so the increment is zero; later rounds move
+    mn = np.asarray(run(0.4).momentum_norm)
+    assert mn[0] == 0.0 and (mn[1:] > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# adaptive budget: semantics + telemetry
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("path", ["slab", "tree"])
+def test_adaptive_stops_early_and_meets_tolerance(path):
+    """With a reachable tol the adaptive run stops before max_rounds, ends at
+    or below the fixed-budget disagreement for the rounds it ran, and gated
+    rounds leave the iterate untouched."""
+    pK, part, layout = _setup()
+    C = jnp.asarray(ring(8).c_matrix(), jnp.float32)
+    kw = dict(layout=layout, path=path, obs=ObsConfig())
+
+    # tol chosen between round-2 and round-6 fixed disagreement
+    *_, cm_fixed = gather_consensus_rounds(
+        part, pK, C, DRTConfig(), rounds=6, **kw)
+    fixed_dis = np.asarray(cm_fixed.disagreement)
+    tol = float((fixed_dis[1] + fixed_dis[-1]) / 2)
+
+    out, _, _, cm = gather_consensus_rounds(
+        part, pK, C, DRTConfig(), rounds=6, round_tol=tol, **kw)
+    eff = np.asarray(cm.effective_rounds)
+    n_eff = int(eff[-1])
+    assert 1 <= n_eff < 6
+    # the gate is sticky and the count matches the fixed trajectory: the
+    # adaptive run is the fixed run truncated at the first round whose
+    # PRE-round disagreement is already below tol
+    assert _dis(out) == pytest.approx(float(fixed_dis[n_eff - 1]), rel=1e-6)
+    # gated rounds charge zero wire traffic
+    send = np.asarray(cm.wire_send_bytes)
+    assert (send[:n_eff] > 0).all() and (send[n_eff:] == 0).all()
+    # effective_rounds is a cumulative count that plateaus once gated
+    np.testing.assert_array_equal(eff[:n_eff], np.arange(1, n_eff + 1))
+    np.testing.assert_array_equal(eff[n_eff:], n_eff)
+
+
+def test_adaptive_never_worse_than_fixed_at_equal_budget():
+    """tol below reach: the gate never fires and the result matches the
+    fixed run.  (Numerically, not bitwise: the control body recomputes the
+    Gram from the constant initial one — gram_update(G0, M) — where the
+    legacy body carries it incrementally; same math, different float path.)"""
+    pK, part, layout = _setup()
+    C = jnp.asarray(ring(8).c_matrix(), jnp.float32)
+    out_f, _, _ = gather_consensus_rounds(
+        part, pK, C, DRTConfig(), rounds=5, layout=layout)
+    out_a, _, _, cm = gather_consensus_rounds(
+        part, pK, C, DRTConfig(), rounds=5, layout=layout,
+        round_tol=1e-12, obs=ObsConfig())
+    for x, y in zip(jax.tree.leaves(out_f), jax.tree.leaves(out_a)):
+        np.testing.assert_allclose(
+            np.asarray(x), np.asarray(y), rtol=1e-4, atol=1e-6)
+    assert _dis(out_a) <= _dis(out_f) * (1 + 1e-4)
+    assert float(cm.effective_rounds[-1]) == 5.0
+
+
+def test_effective_rounds_matches_host_side_count():
+    """The in-graph effective_rounds telemetry equals the number of rounds a
+    host-side driver would run calling rounds=1 until dis < tol."""
+    pK, part, layout = _setup()
+    C = jnp.asarray(ring(8).c_matrix(), jnp.float32)
+    tol = 1.0
+
+    # host-side reference: one round at a time, stop when measured
+    # disagreement (the PRE-round gate quantity) drops below tol
+    p = pK
+    host_rounds = 0
+    for _ in range(6):
+        if _dis(p) <= tol:
+            break
+        p, _, _ = gather_consensus_rounds(
+            part, p, C, DRTConfig(), rounds=1, layout=layout)
+        host_rounds += 1
+
+    *_, cm = gather_consensus_rounds(
+        part, pK, C, DRTConfig(), rounds=6, round_tol=tol, layout=layout,
+        obs=ObsConfig())
+    assert float(cm.effective_rounds[-1]) == host_rounds
+
+
+def test_fixed_runs_report_effective_rounds_ladder():
+    """Without a tol every round runs: effective_rounds is 1..rounds."""
+    pK, part, layout = _setup()
+    C = jnp.asarray(ring(8).c_matrix(), jnp.float32)
+    *_, cm = gather_consensus_rounds(
+        part, pK, C, DRTConfig(), rounds=4, layout=layout, obs=ObsConfig())
+    np.testing.assert_array_equal(
+        np.asarray(cm.effective_rounds), np.arange(1.0, 5.0))
+
+
+# ---------------------------------------------------------------------------
+# validation: rounds >= 1 everywhere, policy parsing
+# ---------------------------------------------------------------------------
+
+
+def test_gather_rejects_bad_round_tol():
+    pK, part, layout = _setup()
+    C = jnp.asarray(ring(8).c_matrix(), jnp.float32)
+    for tol in (0.0, -1.0):
+        with pytest.raises(ValueError, match="round_tol"):
+            gather_consensus_rounds(
+                part, pK, C, DRTConfig(), rounds=2, layout=layout,
+                round_tol=tol)
+
+
+def test_permute_engine_rejects_zero_rounds():
+    from repro.core.consensus import PermuteConsensus
+    from repro.core.drt import DRTConfig as DC
+
+    pK, part, _ = _setup()
+    engine = PermuteConsensus(part, ring(8), DC(), axis_name="data")
+    local = jax.tree.map(lambda x: x[0], pK)
+    with pytest.raises(ValueError, match="rounds >= 1"):
+        engine(local, rounds=0)
+    with pytest.raises(ValueError, match="round_tol"):
+        PermuteConsensus(
+            part, ring(8), DC(), axis_name="data", round_tol=-0.5
+        )(local, rounds=2)
+
+
+def test_train_cli_rejects_zero_rounds():
+    from repro.launch.train import main
+
+    with pytest.raises(SystemExit):
+        main(["--consensus-rounds", "0", "--steps", "1"])
+
+
+def test_round_policy_validation_and_parsing():
+    assert make_round_policy(None) is None
+    p = make_round_policy("fixed:4")
+    assert p == RoundPolicy(4) and not p.adaptive
+    a = make_round_policy("adaptive:0.5:8")
+    assert a.max_rounds == 8 and a.tol == 0.5 and a.adaptive
+    assert make_round_policy(3).max_rounds == 3
+    assert make_round_policy("7").max_rounds == 7
+    assert make_round_policy(a) is a
+    with pytest.raises(ValueError, match="max_rounds >= 1"):
+        RoundPolicy(0)
+    with pytest.raises(ValueError, match="tol > 0"):
+        RoundPolicy(4, tol=0.0)
+    with pytest.raises(ValueError, match="adaptive:<tol>:<max>"):
+        make_round_policy("adaptive:0.5")
+    with pytest.raises(ValueError, match="unknown rounds policy"):
+        make_round_policy("sometimes:3")
+    with pytest.raises(TypeError):
+        make_round_policy(2.5)
+
+
+# ---------------------------------------------------------------------------
+# trainer plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_trainer_policy_and_momentum_plumbing():
+    """TrainerConfig.rounds_policy / consensus_momentum reach the engine: the
+    adaptive trainer reports fewer effective rounds at matched disagreement,
+    and consensus_steps=0 skips the exchange instead of raising."""
+    from repro.core import DecentralizedTrainer, TrainerConfig
+    from repro.optim import sgd
+
+    K = 8
+
+    def init_fn(key):
+        k1, k2 = jax.random.split(key)
+        return {"w": jax.random.normal(k1, (6, 4)),
+                "b": jax.random.normal(k2, (4,))}
+
+    def loss_fn(params, batch, rng):
+        x, y = batch
+        return jnp.mean((x @ params["w"] + params["b"] - y) ** 2)
+
+    topo = ring(K)
+    xb = jax.random.normal(jax.random.key(1), (2, K, 8, 6))
+    yb = jax.random.normal(jax.random.key(2), (2, K, 8, 4))
+
+    def run(cfg):
+        tr = DecentralizedTrainer(
+            loss_fn, init_fn, sgd(0.05), topo, cfg)
+        st = tr.init(jax.random.key(0))
+        _, m = tr.epoch(st, (xb, yb), jax.random.key(3))
+        return m
+
+    cfg0 = TrainerConfig(same_init=False, consensus_steps=6)
+    m_fixed = run(cfg0)
+    assert float(m_fixed["effective_rounds"]) == 6.0
+
+    tol = float(m_fixed["disagreement"]) * 2
+    m_adapt = run(TrainerConfig(
+        same_init=False, consensus_momentum=0.4,
+        rounds_policy=f"adaptive:{tol}:6"))
+    assert float(m_adapt["effective_rounds"]) < 6.0
+    assert float(m_adapt["disagreement"]) <= tol
+
+    m_zero = run(TrainerConfig(same_init=False, consensus_steps=0))
+    assert float(m_zero["effective_rounds"]) == 0.0
+    assert float(m_zero["disagreement"]) > 0.0

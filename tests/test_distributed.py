@@ -479,6 +479,78 @@ def test_permute_train_step_threads_codec_state():
     assert "PERMUTE-CODEC-STATE-OK" in out
 
 
+def test_permute_consensus_control():
+    """Consensus control on the ppermute engine, real 8-device mesh:
+    momentum=0 / round_tol=None match the control-free engine bitwise,
+    momentum accelerates ring mixing, and the adaptive gate freezes the
+    iterate with a correct effective_rounds count."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.core import ring, DRTConfig
+        from repro.core.consensus import PermuteConsensus
+        from repro.obs.metrics import ObsConfig
+        from repro.utils.pytree import LayerPartition
+
+        K = 8
+        mesh = jax.make_mesh((K,), ("data",))
+
+        def tree_init(k):
+            k1, k2 = jax.random.split(k)
+            return {"embed": {"w": jax.random.normal(k1, (4, 8))},
+                    "blocks": {"w": jax.random.normal(k2, (3, 8, 8))}}
+
+        pK = jax.vmap(tree_init)(jax.random.split(jax.random.key(0), K))
+        part = LayerPartition.build(jax.tree.map(lambda x: x[0], pK))
+        topo = ring(K)
+        spec = jax.tree.map(lambda _: P("data"), pK)
+
+        def dis(tree_K):
+            return sum(
+                float(np.sum(np.square(
+                    np.asarray(l, np.float64)
+                    - np.asarray(l, np.float64).mean(0, keepdims=True))))
+                for l in jax.tree.leaves(tree_K)) / K
+
+        def apply(eng, rounds, obs=None):
+            def body(local):
+                sq = jax.tree.map(lambda x: x[0], local)
+                if obs is None:
+                    out = eng(sq, rounds=rounds)
+                    return jax.tree.map(lambda x: x[None], out)
+                out, cm = eng(sq, rounds=rounds, obs=obs)
+                return (jax.tree.map(lambda x: x[None], out),
+                        jax.tree.map(lambda x: x[None], cm))
+            out_specs = spec if obs is None else (spec, P("data"))
+            return shard_map(body, mesh=mesh, in_specs=(spec,),
+                             out_specs=out_specs, check_rep=False)(pK)
+
+        base = PermuteConsensus(part, topo, DRTConfig(), axis_name="data")
+        zero = PermuteConsensus(part, topo, DRTConfig(), axis_name="data",
+                                momentum=0.0, round_tol=None)
+        w_base = apply(base, 6)
+        w_zero = apply(zero, 6)
+        for a, b in zip(jax.tree.leaves(w_base), jax.tree.leaves(w_zero)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        mom = PermuteConsensus(part, topo, DRTConfig(), axis_name="data",
+                               momentum=0.4)
+        w_mom = apply(mom, 6)
+        assert dis(w_mom) < 0.5 * dis(w_base), (dis(w_mom), dis(w_base))
+
+        tol = dis(w_base) * 4
+        adapt = PermuteConsensus(part, topo, DRTConfig(), axis_name="data",
+                                 round_tol=tol)
+        w_ad, cm = apply(adapt, 6, obs=ObsConfig())
+        eff = np.asarray(cm.effective_rounds)[0]  # agent 0's view
+        assert 1 <= eff[-1] < 6, eff
+        assert dis(w_ad) <= tol
+        print("PERMUTE-CONTROL-OK")
+    """)
+    assert "PERMUTE-CONTROL-OK" in out
+
+
 @pytest.mark.slow
 def test_dryrun_entrypoint_smoke():
     """The real dry-run entry point lowers+compiles one (arch x shape) on the

@@ -310,16 +310,20 @@ def test_ef_residual_nonzero_for_topk_zero_for_exact():
     np.testing.assert_array_equal(np.asarray(cm2.ef_residual), 0.0)
 
 
-def test_zero_rounds_yield_empty_metrics():
+def test_zero_rounds_rejected_with_obs():
+    """rounds=0 is refused on the telemetry path too (the old silent no-op
+    produced confusing empty metric stacks); empty_metrics stays available
+    for degenerate engines with no rounds to log."""
     pK, template, part, layout = _setup()
     topo = ring(8)
     C = jnp.asarray(topo.c_matrix(), jnp.float32)
-    out, _, _, cm = gather_consensus_rounds(
-        part, pK, C, DRTConfig(), rounds=0, layout=layout, obs=ObsConfig())
-    assert cm.disagreement.shape == (0,)
-    assert cm.layer_d2_mean.shape == (0, part.num_layers)
+    with pytest.raises(ValueError, match="rounds >= 1"):
+        gather_consensus_rounds(
+            part, pK, C, DRTConfig(), rounds=0, layout=layout, obs=ObsConfig())
     em = empty_metrics(part.num_layers)
     assert em.wire_send_bytes.shape == (0,)
+    assert em.effective_rounds.shape == (0,)
+    assert em.momentum_norm.shape == (0,)
 
 
 # ---------------------------------------------------------------------------
@@ -382,6 +386,55 @@ def test_throughput_tracker():
     life = thru.lifetime()
     assert life.steps == 5 and life.tokens == 500
     assert life.steps_per_s == pytest.approx(5 / 4.0)
+
+
+def test_throughput_zero_duration_window_reports_zero():
+    """A sub-resolution window (dt == 0 on a coarse clock) must report 0.0,
+    not the absurd steps/1e-9 spike the old clamp produced."""
+    t = iter([5.0, 5.0, 5.0, 7.0]).__next__
+    thru = Throughput(clock=t)
+    r = thru.update(3, 300)
+    assert r.steps_per_s == 0.0 and r.tokens_per_s == 0.0
+    assert r.steps == 3 and r.tokens == 300 and r.seconds == 0.0
+    life = thru.lifetime()  # t=5.0 again: zero lifetime so far
+    assert life.steps_per_s == 0.0 and life.seconds == 0.0
+    r2 = thru.update(4, 400)  # the clock moves: honest rates resume
+    assert r2.steps_per_s == pytest.approx(2.0)
+    assert r2.tokens_per_s == pytest.approx(200.0)
+
+
+def test_jsonl_sink_serializes_bf16_metrics(tmp_path):
+    """ml_dtypes leaves (bf16/f16 params feeding metric reductions) survive
+    .item()/.tolist() as ml_dtypes scalars json.dumps rejects — the sink must
+    coerce them through builtin dtypes."""
+    L = 2
+    z16 = jnp.zeros((3,), jnp.bfloat16)
+    cm = ConsensusMetrics(
+        disagreement=z16 + 0.5,
+        layer_d2_mean=jnp.zeros((3, L), jnp.float16) + 0.25,
+        layer_d2_max=jnp.zeros((3, L), jnp.bfloat16) + 1.5,
+        mix_entropy=z16,
+        ef_residual=z16,
+        wire_send_bytes=z16,
+        wire_recv_bytes=z16,
+        compression_ratio=z16 + 1.0,
+        edges=z16 + 8.0,
+        effective_rounds=z16 + 3.0,
+        momentum_norm=z16,
+    )
+    path = tmp_path / "bf16.jsonl"
+    with obs_sink.JsonlSink(path) as sink:
+        for rec in obs_sink.consensus_records(cm, step=0):
+            sink.write(rec)
+        # scalars and arrays hitting _jsonable directly, not via records
+        sink.write({"kind": "raw", "v": jnp.bfloat16(0.5),
+                    "a": np.zeros((2,), "float16")})
+    records = obs_sink.read_jsonl(path)
+    assert len(records) == 4
+    assert records[0]["disagreement"] == 0.5
+    assert records[0]["layer_d2_max"] == [1.5, 1.5]
+    assert records[0]["effective_rounds"] == 3.0
+    assert records[-1] == {"kind": "raw", "v": 0.5, "a": [0.0, 0.0]}
 
 
 # ---------------------------------------------------------------------------

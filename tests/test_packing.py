@@ -393,20 +393,21 @@ def test_non_float_templates_fall_back_to_tree_path():
     np.testing.assert_array_equal(np.asarray(A_s), np.asarray(A_t))
 
 
-def test_zero_rounds_is_a_no_op_on_both_paths():
+def test_zero_rounds_rejected_on_both_paths():
+    """A zero/negative round budget is a caller bug (the old silent no-op hid
+    misconfigured round counts); the engine refuses loudly on every path."""
     K = 4
     pK = _tree_K(K)
     part, layout = _layout_for(pK)
     C = jnp.asarray(ring(K).c_matrix(), jnp.float32)
     for path in ("slab", "tree"):
-        for algo in ("drt", "classical"):
-            got, A, st = gather_consensus_rounds(
-                part, pK, C, DRTConfig(), rounds=0, algorithm=algo,
-                metropolis=jnp.asarray(ring(K).metropolis(), jnp.float32),
-                path=path, layout=layout,
-            )
-            assert A is None and st == ()
-            assert _max_err(got, pK) == 0.0
+        for rounds in (0, -1):
+            with pytest.raises(ValueError, match="rounds >= 1"):
+                gather_consensus_rounds(
+                    part, pK, C, DRTConfig(), rounds=rounds,
+                    metropolis=jnp.asarray(ring(K).metropolis(), jnp.float32),
+                    path=path, layout=layout,
+                )
 
 
 def test_topk_residual_stays_f32_for_bf16_params():
