@@ -53,6 +53,17 @@ reviewed act), and FAILS (exit 1) when any tracked metric regresses:
                       wall win tracks the host's matmul:bandwidth ratio
                       (see combine_micro.run_sparse_paths), so a hard wall
                       gate would pin a hardware property, not a code one.
+  sparse_byte_ratio[K=..]
+                      HBM bytes of ONE wire-resident edge round over one
+                      dense fused round (int8 rows; the repro.kernels.traffic
+                      grid-walk model — machine-independent, like the FLOP
+                      gate, because a Pallas launch's traffic is fully
+                      determined by its grid/BlockSpec structure).  HARD
+                      ceiling < 1.0 at K=64: a sparse round must stream
+                      strictly fewer bytes than a dense one, or the edge
+                      path's FLOP win stays byte-bound on bandwidth-limited
+                      hosts.  The sparse table also lands in
+                      GITHUB_STEP_SUMMARY next to the gate table.
 
   momentum_rounds_ratio
                       rounds the best heavy-ball beta needs to reach the
@@ -125,12 +136,25 @@ def collect_metrics(doc) -> list[tuple[str, float, str]]:
     out.append(("momentum_rounds_ratio", ctl.get("momentum_rounds_ratio"), "down"))
     out.append(("round_savings", ctl.get("round_savings"), "up"))
     for r in (doc.get("sparse") or {}).get("rows") or []:
+        codec = r.get("codec", "none")
+        if codec == "int8":
+            # the wire-resident kernel's byte gate: machine-independent
+            # (priced from the Pallas grid structure by
+            # repro.kernels.traffic), so it's emitted even for untimed rows
+            out.append((f"sparse_byte_ratio[K={r['K']}]",
+                        r.get("sparse_byte_ratio"), "down"))
         if r.get("dense_untimed"):
             continue  # analytic-only row (CI edge smoke / huge K)
-        out.append((f"sparse_flop_speedup[K={r['K']}]",
+        # legacy (PR 7) trajectory names stay pinned to the bf16 rows; other
+        # codecs' rows are tagged so their wall/FLOP history is tracked too
+        tag = "" if codec == "bf16" else f"{codec}, "
+        out.append((f"sparse_flop_speedup[{tag}K={r['K']}]",
                     r.get("sparse_flop_speedup"), "up"))
-        out.append((f"sparse_speedup[K={r['K']}]",
-                    r.get("sparse_speedup"), "up"))
+        if "sparse_speedup" in r:
+            # dense_wall_untimed rows (K=256: ~280 MB slab, wall ratio
+            # swings 4x with page-cache state) carry no wall metric
+            out.append((f"sparse_speedup[{tag}K={r['K']}]",
+                        r.get("sparse_speedup"), "up"))
     return out
 
 
@@ -214,6 +238,12 @@ def main(argv=None) -> int:
         if name == "sparse_flop_speedup[K=64]":
             bound = max(bound, 1.5)
             ok = fresh_v >= bound
+        # ... and so is the byte floor break: the int8 wire-resident edge
+        # round must stream strictly FEWER HBM bytes than the dense fused
+        # round (repro.kernels.traffic grid model — machine-independent)
+        if name == "sparse_byte_ratio[K=64]":
+            bound = min(bound, 1.0)
+            ok = fresh_v < bound
         # consensus-control claims are hard, machine-independent round
         # counts (no wall clock involved): momentum must never need MORE
         # rounds than plain mixing to reach the same disagreement, and the
@@ -249,6 +279,30 @@ def main(argv=None) -> int:
                     f"| {fmt(b).strip()} | {status}{flag} |\n"
                 )
             fh.write("\n")
+            sparse_rows = (fresh_doc.get("sparse") or {}).get("rows") or []
+            if sparse_rows:
+                # the sparse trajectory at a glance: FLOP and BYTE ratios
+                # per (K, codec), with the wall standing where timed
+                fh.write("### Sparse edge path (fresh rows, ring)\n\n")
+                fh.write("| K | codec | dense/edge FLOPs | edge/dense "
+                         "kernel bytes | dense/edge wall |\n")
+                fh.write("|---:|---|---:|---:|---:|\n")
+                for r in sparse_rows:
+                    fl = (
+                        f"{r['sparse_flop_speedup']:.2f}x"
+                        if "sparse_flop_speedup" in r else "—"
+                    )
+                    by = (
+                        f"{r['sparse_byte_ratio']:.3f}"
+                        if "sparse_byte_ratio" in r else "—"
+                    )
+                    wa = (
+                        f"{r['sparse_speedup']:.2f}x"
+                        if "sparse_speedup" in r else "—"
+                    )
+                    fh.write(f"| {r['K']} | {r.get('codec', 'none')} | {fl} "
+                             f"| {by} | {wa} |\n")
+                fh.write("\n")
     if failed:
         print("\nconsensus hot path regressed; investigate before merging "
               "(or re-baseline BENCH_consensus.json if the change is intended)")

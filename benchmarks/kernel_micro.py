@@ -1,6 +1,11 @@
 """Pallas-kernel microbenchmarks (interpret mode on CPU — correctness-scale
 timings; the BlockSpec schedules are the TPU deliverable) vs jnp references,
-plus the analytic HBM-traffic advantage each kernel's fusion buys."""
+plus the analytic HBM-traffic advantage each kernel's fusion buys.
+
+``run(D=..., iters=...)`` is parameterized so the tier-1 smoke test
+(tests/test_kernels.py) can execute the full row schema at a reduced size;
+``benchmarks/run.py`` calls it at the default 1M-element config.
+"""
 from __future__ import annotations
 
 import time
@@ -20,25 +25,23 @@ def _time(fn, *args, iters=3):
     return (time.perf_counter() - t0) / iters
 
 
-def run():
+def run(D: int = 1 << 20, N: int = 4, iters: int = 3):
     rows = []
-    D = 1 << 20
     x = jax.random.normal(jax.random.key(0), (D,))
     y = jax.random.normal(jax.random.key(1), (D,))
-    t_ref = _time(jax.jit(drt_dist_ref), x, y)
-    t_k = _time(lambda a, b: ops.drt_dist(a, b), x, y)
+    t_ref = _time(jax.jit(drt_dist_ref), x, y, iters=iters)
+    t_k = _time(lambda a, b: ops.drt_dist(a, b), x, y, iters=iters)
     # jnp ref: reads x, y for the diff; re-reads y for the norm; writes diff
     rows.append(dict(
-        name="drt_dist_1M", us_ref=t_ref * 1e6, us_kernel_interp=t_k * 1e6,
+        name=f"drt_dist_{D}", us_ref=t_ref * 1e6, us_kernel_interp=t_k * 1e6,
         hbm_ref_bytes=4 * D * 4, hbm_kernel_bytes=2 * D * 4 + 8,
     ))
-    N = 4
-    a = jnp.full((N,), 0.25)
+    a = jnp.full((N,), 1.0 / N)
     xs = jax.random.normal(jax.random.key(2), (N, D))
-    t_ref = _time(jax.jit(combine_ref), a, xs)
-    t_k = _time(lambda a_, x_: ops.weighted_combine(a_, x_), a, xs)
+    t_ref = _time(jax.jit(combine_ref), a, xs, iters=iters)
+    t_k = _time(lambda a_, x_: ops.weighted_combine(a_, x_), a, xs, iters=iters)
     rows.append(dict(
-        name=f"combine_{N}x1M", us_ref=t_ref * 1e6, us_kernel_interp=t_k * 1e6,
+        name=f"combine_{N}x{D}", us_ref=t_ref * 1e6, us_kernel_interp=t_k * 1e6,
         hbm_ref_bytes=(2 * N) * D * 4, hbm_kernel_bytes=(N + 1) * D * 4,
     ))
     return rows

@@ -819,14 +819,12 @@ def gather_consensus_rounds(
                     decoded = packing.slab_decode(wire_codec, layout, wire)
             d2e = None
             if edge_kernel:
-                # ONE slab_edge_combine launch: gather-by-edge stats +
-                # eq. 12-14 edge factors + scatter-combine (self term rides
-                # along); coded rounds feed it the jnp-decoded slab
-                from repro.kernels import slab_edge_combine
+                from repro.kernels import (
+                    slab_edge_combine,
+                    slab_edge_encode_combine,
+                )
 
-                out, A_self, A_e = slab_edge_combine(
-                    bl, layout.join(regions), layout.join(decoded),
-                    src, dst, w,
+                kcommon = dict(
                     algorithm=algorithm,
                     num_layers=L,
                     kappa=cfg.kappa,
@@ -834,6 +832,48 @@ def gather_consensus_rounds(
                     weight_mode=cfg.weight_mode,
                     lane=layout.lane,
                 )
+                # wire-resident fused round: which compact wire operands the
+                # kernel can decode in-VMEM (None -> decoded-slab fallback)
+                mode = wire_ops = None
+                if max_in_degree is not None:
+                    if exact:
+                        mode, wire_ops = "exact", (layout.join(regions),)
+                    elif isinstance(wire_codec, packing.Int8StochasticCodec):
+                        col_seg, _, _ = _layout_col_maps(layout)
+                        mode = "int8"
+                        wire_ops = (layout.join(wire.q), wire.s, col_seg)
+                    elif isinstance(wire_codec, packing.TopKCodec):
+                        # EF threshold/residual stay in the jnp encode; the
+                        # kernel re-reads the compact 'sent' wire
+                        mode, wire_ops = "sent", (layout.join(wire),)
+                    elif isinstance(wire_codec, CastCodec):
+                        mode = {"bfloat16": "bf16", "float16": "f16"}.get(
+                            jnp.dtype(wire_codec.dtype).name
+                        )
+                        if mode is not None:
+                            wire_ops = (layout.join(wire),)
+                if mode is not None:
+                    # ONE slab_edge_encode_combine launch: in-kernel wire
+                    # decode in both phases + eq. 12-14 edge factors +
+                    # sort-free CSR segment combine — the decoded (K, D)
+                    # slab never exists in HBM (int8 streams 2.5 slab
+                    # passes/round vs the dense round's 3; see
+                    # repro.kernels.traffic)
+                    nbr, pos, valid, _ = csr_from_edges(
+                        src, dst, w, K, max_in_degree
+                    )
+                    out, A_self, A_e = slab_edge_encode_combine(
+                        bl, layout.join(regions), wire_ops, src, dst, w,
+                        nbr, pos, valid, mode=mode, **kcommon,
+                    )
+                else:
+                    # ONE slab_edge_combine launch: gather-by-edge stats +
+                    # eq. 12-14 edge factors + scatter-combine (self term
+                    # rides along) over the jnp-decoded slab
+                    out, A_self, A_e = slab_edge_combine(
+                        bl, layout.join(regions), layout.join(decoded),
+                        src, dst, w, **kcommon,
+                    )
                 new_regions = layout.split(out)
             else:
                 csr = None

@@ -666,16 +666,29 @@ def max_in_degree_from_topology(topology: Topology) -> int:
 
 
 def schedule_graph_stats(
-    schedule: TopologySchedule, *, rounds: "int | None" = None
+    schedule: TopologySchedule, *, rounds: "int | None" = None,
+    wire_itemsize: int = 1,
 ) -> dict:
     """Realized graph statistics over one host period (dryrun surface).
 
     Returns a plain dict: ``K``, ``E_max`` (padded directed width),
     per-round undirected edge counts (min/mean/max over the sampled rounds),
-    degree min/mean/max (self loop excluded), and
-    ``dense_vs_edge_flop_ratio`` — the per-round FLOP headroom of the sparse
-    consensus path, ``K^2 / mean directed |E|`` (dense stats + combine are
-    each O(K^2 D); the edge path's are each O(|E_directed| D)).
+    degree min/mean/max (self loop excluded), and two dense-vs-edge cost
+    ratios for one coded consensus round (> 1 means the edge path is
+    cheaper):
+
+    * ``dense_vs_edge_flop_ratio`` — ``K^2 / mean directed |E|`` (dense
+      stats + combine are each O(K^2 D); the edge path's are each
+      O(|E_directed| D)).  Scales with graph sparsity.
+    * ``dense_vs_edge_byte_ratio`` — per-slab-element HBM bytes, dense fused
+      round over wire-resident edge round (``repro.kernels.traffic`` model,
+      leading order in D): dense streams 3 f32 passes (self x2 + out) =
+      12 B; the edge round streams self + out in f32 and the compact wire
+      once per phase = ``8 + 2 * wire_itemsize`` B.  ``wire_itemsize`` is
+      the codec's wire bytes/element (default 1, the int8 codec).  Unlike
+      FLOPs this is graph-INDEPENDENT: the replicated wire is streamed
+      whole per phase whatever |E| is — sparsity buys FLOPs, the in-kernel
+      decode buys the bytes.
     """
     K = schedule.num_agents
     src, dst, w = schedule._edge_table
@@ -706,4 +719,5 @@ def schedule_graph_stats(
         "dense_vs_edge_flop_ratio": (
             float(K * K) / mean_directed if mean_directed else float("inf")
         ),
+        "dense_vs_edge_byte_ratio": 12.0 / (8.0 + 2.0 * wire_itemsize),
     }

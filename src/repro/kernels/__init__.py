@@ -14,6 +14,9 @@ mode on CPU; see EXPERIMENTS.md §Perf for the HBM-traffic math per kernel).
   slab_edge_combine     a sparse consensus round over a padded edge list
                         (per-edge stats + eq. 12-14 edge factors +
                         gather/scatter combine), one O(|E| D) launch
+  slab_edge_encode_combine  the wire-resident sparse round: in-kernel wire
+                        decode in both phases + sort-free CSR segment
+                        combine — the decoded (K, D) slab never hits HBM
   slab_quant_encode     fused int8 encode: in-kernel counter RNG + scale
                         reconstruction + stochastic round, one launch
   slab_cast_combine     bf16/f16 cast-combine round, wire never in HBM
@@ -23,6 +26,7 @@ mode on CPU; see EXPERIMENTS.md §Perf for the HBM-traffic math per kernel).
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ops import (
+    default_interpret,
     dequant_combine,
     drt_dist,
     int8_dequantize,
@@ -32,6 +36,7 @@ from repro.kernels.ops import (
     slab_combine,
     slab_dequant_combine,
     slab_edge_combine,
+    slab_edge_encode_combine,
     slab_encode_combine,
     slab_quant_encode,
     slab_source_combine,
@@ -41,6 +46,7 @@ from repro.kernels.ops import (
 __all__ = [
     "ops",
     "ref",
+    "default_interpret",
     "drt_dist",
     "weighted_combine",
     "int8_quantize",
@@ -50,6 +56,7 @@ __all__ = [
     "slab_dequant_combine",
     "slab_source_combine",
     "slab_edge_combine",
+    "slab_edge_encode_combine",
     "slab_encode_combine",
     "slab_quant_encode",
     "slab_cast_combine",

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 F32 = jnp.float32
 
 BLOCK_R = 256
@@ -34,7 +36,7 @@ def _kernel(a_ref, x_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_r"))
 def weighted_combine(
-    a: jax.Array, xs: jax.Array, *, interpret: bool = True, block_r: int = BLOCK_R
+    a: jax.Array, xs: jax.Array, *, interpret: bool | None = None, block_r: int = BLOCK_R
 ) -> jax.Array:
     """out = sum_n a[n] * xs[n].  a: (N,) f32; xs: (N, ...) float.
 
@@ -58,6 +60,6 @@ def weighted_combine(
         ],
         out_specs=pl.BlockSpec((block_r, LANES), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, LANES), xs.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(a.astype(F32).reshape(N, 1), flat.reshape(N, rows, LANES))
     return out.reshape(-1)[:D].reshape(orig_shape)

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 F32 = jnp.float32
 
 BLOCK_R = 256  # rows per grid step: 256 x 128 x 4B x 2 operands = 256 KiB VMEM
@@ -46,7 +48,7 @@ def _kernel(x_ref, y_ref, out_ref, acc_ref):
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_r"))
 def drt_dist(
-    x: jax.Array, y: jax.Array, *, interpret: bool = True, block_r: int = BLOCK_R
+    x: jax.Array, y: jax.Array, *, interpret: bool | None = None, block_r: int = BLOCK_R
 ) -> jax.Array:
     """[sum((x-y)^2), sum(y^2)] as (2,) f32.  Any shape / float dtype.
 
@@ -72,6 +74,6 @@ def drt_dist(
         out_specs=pl.BlockSpec((1, 2), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, 2), F32),
         scratch_shapes=[pltpu.VMEM((1, 2), F32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(xf.reshape(rows, LANES), yf.reshape(rows, LANES))
     return out[0]

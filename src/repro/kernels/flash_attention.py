@@ -23,6 +23,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 F32 = jnp.float32
 
 BLK_Q = 128
@@ -75,7 +77,7 @@ def flash_attention(
     v: jax.Array,  # (B, H, Skv, hd)
     *,
     causal: bool = True,
-    interpret: bool = True,
+    interpret: bool | None = None,
     blk_q: int = BLK_Q,
     blk_k: int = BLK_K,
 ) -> jax.Array:
@@ -122,6 +124,6 @@ def flash_attention(
             pltpu.VMEM((blk_q, 1), F32),
             pltpu.VMEM((blk_q, hd), F32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(qf, kf, vf)
     return out.reshape(B, H, Sq_p, hd)[:, :, :Sq]

@@ -37,6 +37,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 F32 = jnp.float32
 
 BLOCK_R = 256
@@ -68,7 +70,7 @@ def int8_quantize(
     x: jax.Array,
     key: jax.Array,
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
     block_r: int = BLOCK_R,
 ) -> tuple[jax.Array, jax.Array]:
     """Stochastic-rounding int8 quantization.  Returns ``(q, scale)`` with
@@ -91,7 +93,7 @@ def int8_quantize(
         ],
         out_specs=pl.BlockSpec((block_r, LANES), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int8),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(scale.reshape(1, 1), flat, uf)
     return q.reshape(-1)[: x.size].reshape(x.shape), scale
 
@@ -110,7 +112,7 @@ def int8_dequantize(
     q: jax.Array,
     scale: jax.Array,
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
     block_r: int = BLOCK_R,
 ) -> jax.Array:
     """f32 reconstruction ``q * scale``."""
@@ -126,7 +128,7 @@ def int8_dequantize(
         ],
         out_specs=pl.BlockSpec((block_r, LANES), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, LANES), F32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(jnp.asarray(scale, F32).reshape(1, 1), flat)
     return out.reshape(-1)[: q.size].reshape(q.shape)
 
@@ -150,7 +152,7 @@ def dequant_combine(
     scales: jax.Array,
     qs: jax.Array,
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
     block_r: int = BLOCK_R,
 ) -> jax.Array:
     """``out = sum_n a[n] * scales[n] * qs[n]`` over the leading neighbour
@@ -176,6 +178,6 @@ def dequant_combine(
         ],
         out_specs=pl.BlockSpec((block_r, LANES), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, LANES), F32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(w, flat.reshape(N, rows, LANES))
     return out.reshape(-1)[:D].reshape(orig_shape)

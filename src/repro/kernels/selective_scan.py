@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 F32 = jnp.float32
 
 CHUNK = 64
@@ -61,7 +63,7 @@ def selective_scan(
     Cm: jax.Array,  # (B, S, ds) f32
     x: jax.Array,  # (B, S, di)
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
     chunk: int = CHUNK,
 ) -> jax.Array:
     """Returns y (B, S, di) f32.  Pads S up to a chunk multiple internally."""
@@ -87,6 +89,6 @@ def selective_scan(
         out_specs=pl.BlockSpec((1, chunk, di), lambda b, c: (b, c, 0)),
         out_shape=jax.ShapeDtypeStruct((B, n * chunk, di), F32),
         scratch_shapes=[pltpu.VMEM((di, ds), F32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(dt.astype(F32), Bm.astype(F32), Cm.astype(F32), x, A.astype(F32))
     return y[:, :S]

@@ -78,6 +78,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.comm.rng import bits_to_uniform, counter_bits
 from repro.core import drt as drt_mod
+from repro.kernels.runtime import resolve_interpret
 
 F32 = jnp.float32
 
@@ -225,7 +226,7 @@ def slab_encode_combine(
     N_clip: float = 32.0,
     weight_mode: str = "paper",
     lane: int = LANES,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """ONE coded consensus round's slab work in ONE launch (see module doc).
 
@@ -320,7 +321,7 @@ def slab_encode_combine(
                 jax.ShapeDtypeStruct((num_layers, K, K), F32),
             ),
             scratch_shapes=[pltpu.VMEM((num_layers, K, K), F32)],  # Gram acc
-            interpret=interpret,
+            interpret=resolve_interpret(interpret),
         )(*operands)
         return out, A
     out = pl.pallas_call(
@@ -329,7 +330,7 @@ def slab_encode_combine(
         in_specs=in_specs,
         out_specs=pl.BlockSpec((K, lane), lambda ph, i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((K, D), F32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(*operands)
     return out, jnp.broadcast_to(mix.astype(F32), (num_layers, K, K))
 
@@ -364,7 +365,7 @@ def slab_quant_encode(
     w1: jax.Array,
     slab: jax.Array,
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Fused int8 stochastic-rounding encode of a packed (K, D) slab in ONE
     launch: per-column scale reconstruction AND the counter-RNG uniforms are
@@ -397,7 +398,7 @@ def slab_quant_encode(
         ],
         out_specs=pl.BlockSpec((K, lane), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((K, D), jnp.int8),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(
         slab.astype(F32),
         scales.astype(F32),

@@ -43,6 +43,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 F32 = jnp.float32
 
 LANES = 128  # column-block width; SlabLayout pads every layer segment to it
@@ -58,7 +60,7 @@ def _combine_kernel(a_ref, x_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def slab_combine(A_blocks: jax.Array, slab: jax.Array, *, interpret: bool = True):
+def slab_combine(A_blocks: jax.Array, slab: jax.Array, *, interpret: bool | None = None):
     """Whole-slab per-layer agent mixing in ONE launch.
 
     ``A_blocks``: (n_blocks, K, K) f32 — the mixing matrix of each column
@@ -79,7 +81,7 @@ def slab_combine(A_blocks: jax.Array, slab: jax.Array, *, interpret: bool = True
         ],
         out_specs=pl.BlockSpec((K, LANES), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((K, D), slab.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(A_blocks.astype(F32), slab)
 
 
@@ -105,7 +107,7 @@ def slab_dequant_combine(
     col_seg: jax.Array,
     q_slab: jax.Array,
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Fused int8 dequantize + whole-slab combine in ONE launch.
 
@@ -132,7 +134,7 @@ def slab_dequant_combine(
         ],
         out_specs=pl.BlockSpec((K, LANES), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((K, D), F32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(A_blocks.astype(F32), scales.astype(F32), col_seg.astype(jnp.int32), q_slab)
 
 
@@ -147,7 +149,7 @@ def _source_combine_kernel(w_ref, x_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def slab_source_combine(
-    w_blocks: jax.Array, srcs: jax.Array, *, interpret: bool = True
+    w_blocks: jax.Array, srcs: jax.Array, *, interpret: bool | None = None
 ):
     """Per-layer weighted combine over N stacked source slabs in ONE launch
     (the permute engine's {self} + received-neighbour combine).
@@ -169,6 +171,6 @@ def slab_source_combine(
         ],
         out_specs=pl.BlockSpec((1, LANES), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nb, LANES), srcs.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(w_blocks.astype(F32), srcs)
     return out.reshape(D)

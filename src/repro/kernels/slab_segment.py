@@ -36,9 +36,37 @@ TPU caveat: the per-edge gather/scatter (``x[src]``, ``.at[dst].add``) does
 not vectorize on the TPU VPU the way the dense one-hot matmuls do; this
 kernel is the *interpret-mode-validated* structural template for the sparse
 path (tier-1 pins it against the jnp edge path bit-for-bit in interpret
-mode).  On real TPUs the expected lowering is a sort-free segment matmul
+mode).  On real TPUs the expected lowering is a sort-free segment combine
 over the dst-contiguous edge order — the edge lists arrive (dst, src)-sorted
 precisely so that rewrite stays local to this file.
+
+``slab_edge_encode_combine`` is that rewrite, plus wire residency: instead
+of taking a decoded (K, D) f32 slab that a jnp decode pass materialized in
+HBM (~2 extra full-slab passes per coded round — one write, re-read by both
+phases), it takes the COMPACT WIRE itself (int8 quantized values + scales,
+the bf16/f16 cast slab, or the top-k sent slab) and re-derives each lane
+block's decoded view inside the kernel in both phases
+(recompute-over-rematerialize, the ``slab_codec`` decode machinery: exact
+one-hot scale reconstruction from ``SlabLayout.col_scale_seg`` for int8, the
+cast round-trip for bf16/f16).  The ``.at[dst].add`` scatter is replaced by
+a per-destination segment combine over the ``csr_from_edges`` tables (the
+(dst, src)-sorted edge order makes each destination's edges contiguous, so
+the combine is Dmax gather-accumulate steps — no scatter, no sort):
+
+    out[k] = A_self[p, base + k] * x_self[k]
+           + sum_j valid[k, j] * A_e[p, pos[k, j]] * dec[nbr[k, j]]
+
+HBM traffic per coded round (f32-slab units S = K x D x 4B; wire fraction
+rho = wire bytes / 4): self read (phase-parked, 1 S) + wire read x2 phases
+(2 rho S) + combined write (1 S) — int8 2.5 S vs the dense fused kernel's
+3 S and the decoded-slab edge round's ~6 S (priced by
+``repro.kernels.traffic``, gated in ``benchmarks/check_regression.py``).
+
+The ``dst_base`` scalar + (K_local, Dmax) CSR tables make the kernel
+destination-shardable: under ``shard_map`` each data-mesh shard passes its
+destination-contiguous slab rows and CSR shard with the full wire + edge
+list (stats and the eq. 12-14 factors are global; the combine is local) —
+see ``repro.launch.sharding.edge_round_shard_specs``.
 """
 from __future__ import annotations
 
@@ -51,6 +79,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import drt as drt_mod
 from repro.core.dynamic import metropolis_edge_weights
+from repro.kernels.runtime import resolve_interpret
+from repro.kernels.slab_codec import _CAST, _scale_cols
 
 F32 = jnp.float32
 
@@ -153,7 +183,7 @@ def slab_edge_combine(
     N_clip: float = 32.0,
     weight_mode: str = "paper",
     lane: int = LANES,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """ONE sparse consensus round's slab work in ONE launch (see module doc).
 
@@ -217,7 +247,7 @@ def slab_edge_combine(
             if drt
             else []
         ),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(
         jnp.asarray(block_layer, jnp.int32),
         self_slab.astype(F32),
@@ -226,3 +256,260 @@ def slab_edge_combine(
         jnp.asarray(dst, jnp.int32)[None, :],
         jnp.asarray(w, F32)[None, :],
     )
+
+
+# ---------------------------------------------------------------------------
+# wire-resident CSR round: in-kernel decode + sort-free segment combine
+# ---------------------------------------------------------------------------
+
+
+def _decode_block(mode, wire_refs):
+    """This lane block's decoded (K, lane) f32 view, derived from the compact
+    wire refs — the ``slab_codec`` decode machinery run in-VMEM (the decoded
+    slab never exists in HBM)."""
+    if mode in ("exact", "sent"):
+        return wire_refs[0][...].astype(F32)
+    if mode in _CAST:
+        return wire_refs[0][...].astype(F32)
+    if mode == "int8":
+        q_ref, s_ref, seg_ref = wire_refs
+        # int8 round-trips f32 exactly and the one-hot segment matmul places
+        # exactly one unit product per column, so q * s_cols matches the jnp
+        # slab_decode bit for bit
+        return q_ref[...].astype(F32) * _scale_cols(s_ref, seg_ref[0])
+    raise ValueError(f"unknown wire mode {mode!r}")
+
+
+def _csr_combine_block(x_self, dec, nbr, a_self, a_csr):
+    """Sort-free per-destination segment combine: the CSR tables are derived
+    from the (dst, src)-sorted edge list, so destination k's edges sit at its
+    own CSR row and the combine is Dmax gather-accumulate steps — no
+    ``.at[dst].add`` scatter, no serialization hazard.  Padding slots carry
+    ``a_csr == 0`` (masked on ``valid``), an exact zero contribution."""
+    out = x_self * a_self[:, None]
+    for j in range(nbr.shape[1]):
+        out = out + a_csr[:, j][:, None] * jnp.take(dec, nbr[:, j], axis=0)
+    return out
+
+
+def _edge_encode_kernel(
+    mode, algorithm, kappa, N_clip, weight_mode, num_layers, dmax, *refs
+):
+    if algorithm == "drt":
+        *head, out_ref, As_ref, Ae_ref, n2_scr, d2e_scr = refs
+    else:
+        *head, out_ref, As_ref, Ae_ref = refs
+        n2_scr = d2e_scr = None
+    bl_ref, base_ref, self_ref, *rest = head
+    wire_refs = rest[:-6]
+    src_ref, dst_ref, w_ref, nbr_ref, pos_ref, valid_ref = rest[-6:]
+
+    src = src_ref[0]
+    dst = dst_ref[0]
+    w = w_ref[0]
+    K = wire_refs[0].shape[0]  # TOTAL agents (the wire is everyone's rows)
+    Kl = self_ref.shape[0]  # this shard's destination rows
+    p = bl_ref[0]  # this block's DRT layer
+    base = base_ref[0]  # first local destination's global index
+
+    def _combine():
+        dec = _decode_block(mode, wire_refs)
+        a_self = jax.lax.dynamic_slice_in_dim(As_ref[pl.ds(p, 1)][0], base, Kl)
+        a_e = Ae_ref[pl.ds(p, 1)][0]
+        a_csr = jnp.where(
+            valid_ref[...] != 0, jnp.take(a_e, pos_ref[...], axis=0), 0.0
+        )
+        out_ref[...] = _csr_combine_block(
+            self_ref[...].astype(F32), dec, nbr_ref[...], a_self, a_csr
+        )
+
+    if algorithm == "classical":
+        # single phase: the Metropolis factors are D-free edge algebra —
+        # derive them once at block 0 (the same jnp code as the unkerneled
+        # path, bit-for-bit factors), combine every block
+        @pl.when(pl.program_id(1) == 0)
+        def _weights():
+            m_self, m_e = metropolis_edge_weights(src, dst, w, K)
+            As_ref[...] = jnp.broadcast_to(m_self[None, :], As_ref.shape)
+            Ae_ref[...] = jnp.broadcast_to(m_e[None, :], Ae_ref.shape)
+
+        _combine()
+        return
+
+    ph = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(ph == 0)
+    def _stats_phase():
+        @pl.when(i == 0)
+        def _init():
+            n2_scr[...] = jnp.zeros_like(n2_scr)
+            d2e_scr[...] = jnp.zeros_like(d2e_scr)
+
+        dec = _decode_block(mode, wire_refs)
+        n2_scr[pl.ds(p, 1)] = n2_scr[pl.ds(p, 1)] + jnp.sum(
+            jnp.square(dec), axis=1
+        )[None]
+        diff = jnp.take(dec, src, axis=0) - jnp.take(dec, dst, axis=0)
+        d2e_scr[pl.ds(p, 1)] = d2e_scr[pl.ds(p, 1)] + jnp.sum(
+            jnp.square(diff), axis=1
+        )[None]
+
+    @pl.when(jnp.logical_and(ph == 1, i == 0))
+    def _mixing():
+        cfg = drt_mod.DRTConfig(N=N_clip, kappa=kappa, weight_mode=weight_mode)
+        A_self, A_e = drt_mod.drt_edge_mixing(
+            d2e_scr[...], n2_scr[...], src, dst, w, cfg, K
+        )
+        As_ref[...] = A_self
+        Ae_ref[...] = A_e
+
+    @pl.when(ph == 1)
+    def _combine_phase():
+        _combine()
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "mode", "algorithm", "num_layers", "kappa", "N_clip", "weight_mode",
+        "lane", "interpret",
+    ),
+)
+def slab_edge_encode_combine(
+    block_layer: jax.Array,
+    self_slab: jax.Array,
+    wire_operands: tuple,
+    src: jax.Array,
+    dst: jax.Array,
+    w: jax.Array,
+    nbr: jax.Array,
+    pos: jax.Array,
+    valid: jax.Array,
+    dst_base: "jax.Array | int" = 0,
+    *,
+    mode: str,
+    algorithm: str = "drt",
+    num_layers: int,
+    kappa: float = 1e-6,
+    N_clip: float = 32.0,
+    weight_mode: str = "paper",
+    lane: int = LANES,
+    interpret: "bool | None" = None,
+):
+    """ONE wire-resident sparse consensus round in ONE launch (module doc).
+
+    ``block_layer``: (n_blocks,) int32 — ``SlabLayout.block_layer``.
+    ``self_slab``: (K_local, D) f32 — this shard's destination rows, the
+    full-precision self term (K_local == K off the mesh).
+    ``wire_operands``: the compact wire of ALL K agents, mode-dependent —
+      * ``mode='int8'``: ``(q (K, D) int8, scales (K, n_segs) f32,
+        col_seg (nb, lane) i32)`` — the ``SlabQuant`` wire plus the static
+        column->scale-segment map; dequant runs in-kernel;
+      * ``mode='bf16' | 'f16'``: ``(wire (K, D) bf16/f16,)`` — the cast wire;
+      * ``mode='sent'``: ``(sent (K, D) f32,)`` — the top-k sent slab;
+      * ``mode='exact'``: ``(slab (K, D) f32,)`` — an exact round (the wire
+        IS the slab; pass ``self_slab`` again off the mesh).
+    ``src``/``dst``/``w``: (E,) padded directed edge list (w == 0 padding).
+    ``nbr``/``pos``/``valid``: (K_local, Dmax) CSR tables from
+    ``csr_from_edges`` (``valid`` any integer/bool dtype), rows matching
+    ``self_slab``'s destinations.  ``dst_base``: global index of local
+    destination row 0 (traced scalar; ``shard_index * K_local`` on a mesh).
+
+    Returns ``(combined (K_local, D) f32, A_self (L, K), A_e (L, E))``.
+    """
+    Kl, D = self_slab.shape
+    nb = block_layer.shape[0]
+    if nb * lane != D:
+        raise ValueError(f"slab width {D} != {nb} blocks x {lane} lanes")
+    E = src.shape[0]
+    dmax = nbr.shape[1]
+    drt = algorithm == "drt"
+    if not drt and algorithm != "classical":
+        raise ValueError(f"unknown algorithm {algorithm!r}")
+    grid = (2, nb) if drt else (1, nb)
+
+    in_specs = [
+        pl.BlockSpec((1,), lambda ph, i: (i,), memory_space=pltpu.SMEM),
+        pl.BlockSpec((1,), lambda ph, i: (0,), memory_space=pltpu.SMEM),
+        # the self slab is only read by the combine phase: park its window on
+        # block 0 through DRT's stats phase (same trick as the output spec)
+        # so the round reads the f32 slab ONCE, not once per phase
+        pl.BlockSpec(
+            (Kl, lane),
+            (lambda ph, i: (0, ph * i)) if drt else (lambda ph, i: (0, i)),
+        ),
+    ]
+    operands = [
+        jnp.asarray(block_layer, jnp.int32),
+        jnp.asarray(dst_base, jnp.int32)[None],
+        self_slab.astype(F32),
+    ]
+    if mode == "int8":
+        q, scales, col_seg = wire_operands
+        K = q.shape[0]
+        n_segs = scales.shape[-1]
+        in_specs += [
+            pl.BlockSpec((K, lane), lambda ph, i: (0, i)),
+            pl.BlockSpec((K, n_segs), lambda ph, i: (0, 0)),
+            pl.BlockSpec((1, lane), lambda ph, i: (i, 0)),
+        ]
+        operands += [
+            jnp.asarray(q, jnp.int8),
+            scales.astype(F32),
+            jnp.asarray(col_seg, jnp.int32),
+        ]
+    elif mode in ("exact", "sent") or mode in _CAST:
+        (wire,) = wire_operands
+        K = wire.shape[0]
+        wire = wire.astype(F32) if mode in ("exact", "sent") else wire
+        in_specs += [pl.BlockSpec((K, lane), lambda ph, i: (0, i))]
+        operands += [wire]
+    else:
+        raise ValueError(f"unknown wire mode {mode!r}")
+    in_specs += [
+        pl.BlockSpec((1, E), lambda ph, i: (0, 0)),
+        pl.BlockSpec((1, E), lambda ph, i: (0, 0)),
+        pl.BlockSpec((1, E), lambda ph, i: (0, 0)),
+        pl.BlockSpec((Kl, dmax), lambda ph, i: (0, 0)),
+        pl.BlockSpec((Kl, dmax), lambda ph, i: (0, 0)),
+        pl.BlockSpec((Kl, dmax), lambda ph, i: (0, 0)),
+    ]
+    operands += [
+        jnp.asarray(src, jnp.int32)[None, :],
+        jnp.asarray(dst, jnp.int32)[None, :],
+        jnp.asarray(w, F32)[None, :],
+        jnp.asarray(nbr, jnp.int32),
+        jnp.asarray(pos, jnp.int32),
+        jnp.asarray(valid, jnp.int32),
+    ]
+    out_specs = (
+        pl.BlockSpec(
+            (Kl, lane),
+            (lambda ph, i: (0, ph * i)) if drt else (lambda ph, i: (0, i)),
+        ),
+        pl.BlockSpec((num_layers, K), lambda ph, i: (0, 0)),
+        pl.BlockSpec((num_layers, E), lambda ph, i: (0, 0)),
+    )
+    out_shape = (
+        jax.ShapeDtypeStruct((Kl, D), F32),
+        jax.ShapeDtypeStruct((num_layers, K), F32),
+        jax.ShapeDtypeStruct((num_layers, E), F32),
+    )
+    kernel = functools.partial(
+        _edge_encode_kernel, mode, algorithm, float(kappa), float(N_clip),
+        weight_mode, num_layers, dmax,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=(
+            [pltpu.VMEM((num_layers, K), F32), pltpu.VMEM((num_layers, E), F32)]
+            if drt
+            else []
+        ),
+        interpret=resolve_interpret(interpret),
+    )(*operands)

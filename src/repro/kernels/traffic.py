@@ -1,0 +1,234 @@
+"""Machine-independent HBM byte-traffic model for the slab round kernels.
+
+XLA's cost analysis prices the *jnp* consensus programs, but it cannot price
+the fused Pallas rounds: interpret mode lowers to a while loop that copies
+whole operands per step (nonsense bytes), and on CPU there is no Mosaic
+compile at all.  What a Pallas grid actually streams through HBM is fully
+determined by its static structure — grid shape, BlockSpec block shapes and
+index maps, operand dtypes — so this module prices it directly:
+
+  walk the grid in Pallas order (last axis fastest) and charge each operand
+  one block transfer every time its window MOVES.  A window whose block
+  index is unchanged between consecutive steps stays VMEM-resident and is
+  neither re-fetched (inputs) nor re-flushed (outputs) — exactly the
+  revisit-elision the pipelined TPU lowering performs, and the property the
+  phase-parking index maps (``(0, ph * i)``) are designed around.
+
+The per-kernel builders below mirror the ``pallas_call`` structure of their
+kernels LITERALLY (same blocks, same index maps); a drift test in
+``tests/test_kernels.py`` pins the headline ratios.  ``benchmarks/
+combine_micro.py`` uses them for the sparse-section byte columns and
+``benchmarks/check_regression.py`` hard-gates ``edge int8 / dense < 1`` —
+all machine-independent, like the FLOP gates.
+
+Model, in slab passes (S = K * D * 4 bytes; rho = wire bytes / 4):
+
+  dense fused  ``slab_encode_combine``     slab x2 + out        = 3 S
+  old edge     gather + ``slab_edge_combine``  wire + dec write
+                                           + (self + dec) x2 + out
+                                                                = (5 + rho) S
+  wire-resident ``slab_edge_encode_combine``  self + wire x2 + out
+                                                                = (2 + 2 rho) S
+
+so int8 (rho = 1/4) goes 6.25 S -> 2.5 S and lands UNDER the dense round's
+3 S — the edge path's FLOP win finally stops paying a byte premium.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass
+from typing import Callable
+
+__all__ = [
+    "OperandSpec",
+    "grid_traffic",
+    "slab_bytes",
+    "dense_round_traffic",
+    "edge_round_traffic",
+    "decoded_edge_round_traffic",
+    "WIRE_ITEMSIZE",
+]
+
+I32 = 4
+F32 = 4
+
+# bytes per wire element by codec mode (mode names as the kernels spell them)
+WIRE_ITEMSIZE = {"exact": 4, "sent": 4, "bf16": 2, "f16": 2, "int8": 1}
+
+
+@dataclass(frozen=True)
+class OperandSpec:
+    """One pallas_call operand: its block shape/dtype and BlockSpec index
+    map, exactly as passed to the kernel."""
+
+    name: str
+    block_shape: tuple
+    itemsize: int
+    index_map: Callable
+
+    @property
+    def block_bytes(self) -> int:
+        return math.prod(self.block_shape) * self.itemsize
+
+
+def grid_traffic(grid: tuple, specs: list) -> dict:
+    """Per-operand HBM bytes for one launch of ``grid`` over ``specs``.
+
+    Inputs and outputs are charged identically — one ``block_bytes``
+    transfer per window move (first touch included).  Returns
+    ``{name: bytes, ..., "total": bytes}``.
+    """
+    total = {s.name: 0 for s in specs}
+    last = {s.name: None for s in specs}
+    for step in itertools.product(*(range(g) for g in grid)):
+        for s in specs:
+            idx = s.index_map(*step)
+            if idx != last[s.name]:
+                total[s.name] += s.block_bytes
+                last[s.name] = idx
+    total["total"] = sum(total[s.name] for s in specs)
+    return total
+
+
+def slab_bytes(K: int, nb: int, lane: int = 128) -> int:
+    """One full (K, D) f32 slab pass in bytes (the unit ``S`` above)."""
+    return K * nb * lane * F32
+
+
+def _parked(drt: bool):
+    # the phase-parking index map: DRT's stats phase keeps the window on
+    # block 0 (one transfer), the combine phase strides the blocks
+    return (lambda ph, i: (0, ph * i)) if drt else (lambda ph, i: (0, i))
+
+
+def dense_round_traffic(
+    K: int,
+    nb: int,
+    mode: str,
+    num_layers: int,
+    *,
+    n_segs: int = 1,
+    n_leaves: int = 1,
+    lane: int = 128,
+    algorithm: str = "drt",
+) -> dict:
+    """Traffic of one ``slab_codec.slab_encode_combine`` launch (the dense
+    fused coded round).  Mirrors its in/out specs literally; note the int8
+    and cast wires are RECOMPUTED in-kernel from the slab, so the only
+    D-sized reads are the slab itself (once per phase)."""
+    drt = algorithm == "drt"
+    grid = (2, nb) if drt else (1, nb)
+    specs = [
+        OperandSpec("block_layer", (1,), I32, lambda ph, i: (i,)),
+        OperandSpec("slab", (K, lane), F32, lambda ph, i: (0, i)),
+    ]
+    if mode == "int8":
+        specs += [
+            OperandSpec("scales", (K, n_segs), F32, lambda ph, i: (0, 0)),
+            OperandSpec("col_seg", (1, lane), I32, lambda ph, i: (i, 0)),
+            OperandSpec("col_leaf", (1, lane), I32, lambda ph, i: (i, 0)),
+            OperandSpec("col_idx", (1, lane), I32, lambda ph, i: (i, 0)),
+            OperandSpec("w0", (K, n_leaves), I32, lambda ph, i: (0, 0)),
+            OperandSpec("w1", (K, n_leaves), I32, lambda ph, i: (0, 0)),
+        ]
+    elif mode == "sent":
+        specs += [OperandSpec("sent", (K, lane), F32, lambda ph, i: (0, i))]
+    elif mode not in ("bf16", "f16"):
+        raise ValueError(f"unknown dense wire mode {mode!r}")
+    specs += [OperandSpec("mix", (K, K), F32, lambda ph, i: (0, 0))]
+    specs += [OperandSpec("out", (K, lane), F32, _parked(drt))]
+    if drt:
+        specs += [
+            OperandSpec("A", (num_layers, K, K), F32, lambda ph, i: (0, 0, 0))
+        ]
+    return grid_traffic(grid, specs)
+
+
+def edge_round_traffic(
+    K: int,
+    nb: int,
+    E: int,
+    dmax: int,
+    mode: str,
+    num_layers: int,
+    *,
+    Kl: "int | None" = None,
+    n_segs: int = 1,
+    lane: int = 128,
+    algorithm: str = "drt",
+) -> dict:
+    """Traffic of one wire-resident ``slab_edge_encode_combine`` launch.
+    The self slab's window is phase-parked like the output, so the f32 self
+    term streams ONCE; the compact wire streams once per phase."""
+    Kl = K if Kl is None else Kl
+    drt = algorithm == "drt"
+    grid = (2, nb) if drt else (1, nb)
+    specs = [
+        OperandSpec("block_layer", (1,), I32, lambda ph, i: (i,)),
+        OperandSpec("dst_base", (1,), I32, lambda ph, i: (0,)),
+        OperandSpec("self", (Kl, lane), F32, _parked(drt)),
+    ]
+    if mode == "int8":
+        specs += [
+            OperandSpec("q", (K, lane), 1, lambda ph, i: (0, i)),
+            OperandSpec("scales", (K, n_segs), F32, lambda ph, i: (0, 0)),
+            OperandSpec("col_seg", (1, lane), I32, lambda ph, i: (i, 0)),
+        ]
+    elif mode in WIRE_ITEMSIZE:
+        specs += [
+            OperandSpec(
+                "wire", (K, lane), WIRE_ITEMSIZE[mode], lambda ph, i: (0, i)
+            )
+        ]
+    else:
+        raise ValueError(f"unknown wire mode {mode!r}")
+    specs += [
+        OperandSpec("src", (1, E), I32, lambda ph, i: (0, 0)),
+        OperandSpec("dst", (1, E), I32, lambda ph, i: (0, 0)),
+        OperandSpec("w", (1, E), F32, lambda ph, i: (0, 0)),
+        OperandSpec("nbr", (Kl, dmax), I32, lambda ph, i: (0, 0)),
+        OperandSpec("pos", (Kl, dmax), I32, lambda ph, i: (0, 0)),
+        OperandSpec("valid", (Kl, dmax), I32, lambda ph, i: (0, 0)),
+        OperandSpec("out", (Kl, lane), F32, _parked(drt)),
+        OperandSpec("A_self", (num_layers, K), F32, lambda ph, i: (0, 0)),
+        OperandSpec("A_e", (num_layers, E), F32, lambda ph, i: (0, 0)),
+    ]
+    return grid_traffic(grid, specs)
+
+
+def decoded_edge_round_traffic(
+    K: int,
+    nb: int,
+    E: int,
+    mode: str,
+    num_layers: int,
+    *,
+    lane: int = 128,
+    algorithm: str = "drt",
+) -> dict:
+    """Traffic of the PRE-tentpole edge round: the host gathers the wire
+    rows and materializes the decoded (K, D) f32 slab in HBM (wire read +
+    slab write), then ``slab_edge_combine`` streams self AND decoded slabs
+    once per phase.  Kept as the before/after baseline for the README."""
+    drt = algorithm == "drt"
+    grid = (2, nb) if drt else (1, nb)
+    specs = [
+        OperandSpec("block_layer", (1,), I32, lambda ph, i: (i,)),
+        OperandSpec("self", (K, lane), F32, lambda ph, i: (0, i)),
+        OperandSpec("dec", (K, lane), F32, lambda ph, i: (0, i)),
+        OperandSpec("src", (1, E), I32, lambda ph, i: (0, 0)),
+        OperandSpec("dst", (1, E), I32, lambda ph, i: (0, 0)),
+        OperandSpec("w", (1, E), F32, lambda ph, i: (0, 0)),
+        OperandSpec("out", (K, lane), F32, _parked(drt)),
+        OperandSpec("A_self", (num_layers, K), F32, lambda ph, i: (0, 0)),
+        OperandSpec("A_e", (num_layers, E), F32, lambda ph, i: (0, 0)),
+    ]
+    traffic = grid_traffic(grid, specs)
+    D = nb * lane
+    if mode != "exact":
+        # the decode round trip the kernel launch itself never sees
+        traffic["wire_read"] = K * D * WIRE_ITEMSIZE[mode]
+        traffic["dec_write"] = K * D * F32
+        traffic["total"] += traffic["wire_read"] + traffic["dec_write"]
+    return traffic

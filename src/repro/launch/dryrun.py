@@ -252,7 +252,8 @@ def main(argv=None):
         "--graph-stats", action="store_true",
         help="print realized |E| / degree stats for --topology/--schedule "
              "over --agents (incl. the dense-vs-edge FLOP ratio the sparse "
-             "consensus path exploits) and exit",
+             "consensus path exploits and the dense-vs-edge BYTE ratio of "
+             "the wire-resident round under --codec's wire width) and exit",
     )
     ap.add_argument("--topology", default="ring",
                     help="graph for --graph-stats (e.g. ring, erdos_renyi)")
@@ -286,8 +287,15 @@ def main(argv=None):
             edge_drop=args.edge_dropout,
             seed=args.schedule_seed,
         )
+        # wire width of --codec (bytes/element) for the byte-ratio column;
+        # int8 (the gated codec) when no codec is named
+        wire_w = {"bf16": 2, "f16": 2, "identity": 4, "topk": 4}.get(
+            (args.codec or "int8").split(":")[0], 1
+        )
         stats = {"topology": args.topology, "schedule": args.schedule,
-                 **schedule_graph_stats(sched, rounds=args.stats_rounds)}
+                 **schedule_graph_stats(
+                     sched, rounds=args.stats_rounds, wire_itemsize=wire_w
+                 )}
         print(json.dumps(stats, indent=1, default=float))
         if args.out:
             with open(args.out, "w") as f:

@@ -251,6 +251,95 @@ def shard_consensus_inputs(mesh, psi_K, edges: "EdgeStacks | None" = None):
     return slab, placed
 
 
+def edge_round_shard_specs(mesh, num_agents: int) -> dict:
+    """shard_map PartitionSpecs for ONE wire-resident edge round
+    (``repro.kernels.slab_edge_encode_combine``) on the data mesh.
+
+    The kernel is destination-sharded: each shard owns a contiguous run of
+    destination agents — its rows of the f32 self slab, the combined output,
+    and the CSR tables (``csr_from_edges`` rows are per-destination).  The
+    compact WIRE is replicated: a destination's in-neighbours can live on
+    any shard, but the wire is the codec-compressed form, so replicating it
+    moves rho = wire/f32 of a slab instead of all-gathering f32 rows.  The
+    edge list is replicated too — the per-edge stats/mixing factors are
+    D-free global algebra every shard recomputes redundantly (cheaper than
+    a cross-shard reduce at these sizes), so ``A_self``/``A_e`` come back
+    replicated.  Agent axis falls back to replication when K doesn't divide
+    the data axis.
+    """
+    axes = mesh_axis_sizes(mesh)
+    dsize = axes.get("data", 1)
+    k_ax = "data" if num_agents % dsize == 0 else None
+    return {
+        "self_slab": P(k_ax, None),  # (K, D) f32 — local destination rows
+        "csr": P(k_ax, None),  # nbr/pos/valid (K, Dmax) — rows follow dst
+        "wire": P(None, None),  # compact wire (K, ...) — replicated
+        "edges": P(None),  # (E,) src/dst/w — replicated (global stats)
+        "out": P(k_ax, None),  # combined (K, D)
+        "A": P(None, None),  # A_self (L, K) / A_e (L, E) — replicated
+    }
+
+
+def shard_edge_round(
+    mesh,
+    block_layer,
+    self_slab,
+    wire_operands: tuple,
+    src,
+    dst,
+    w,
+    nbr,
+    pos,
+    valid,
+    **kernel_kw,
+):
+    """Run ONE ``slab_edge_encode_combine`` launch per data shard over the
+    destination-sharded slab (specs from :func:`edge_round_shard_specs`).
+
+    Each shard passes its ``shard_index * K_local`` as ``dst_base`` so the
+    kernel selects its own columns of the (replicated) ``A_self``.  Returns
+    ``(combined (K, D), A_self (L, K), A_e (L, E))`` exactly like the
+    unsharded kernel; when K doesn't divide the data axis (or the mesh has
+    no data axis) the kernel simply runs replicated.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    from repro.kernels import slab_edge_encode_combine
+
+    K = self_slab.shape[0]
+    specs = edge_round_shard_specs(mesh, K)
+    k_ax = specs["self_slab"][0]
+    if k_ax is None:
+        return slab_edge_encode_combine(
+            block_layer, self_slab, wire_operands, src, dst, w,
+            nbr, pos, valid, **kernel_kw,
+        )
+    dsize = mesh_axis_sizes(mesh)[k_ax]
+    Kl = K // dsize
+
+    def body(bl, self_l, wires, src, dst, w, nbr_l, pos_l, valid_l):
+        base = jax.lax.axis_index(k_ax) * Kl
+        return slab_edge_encode_combine(
+            bl, self_l, wires, src, dst, w,
+            nbr_l, pos_l, valid_l, base, **kernel_kw,
+        )
+
+    wire_specs = tuple(P(*([None] * x.ndim)) for x in wire_operands)
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(None), specs["self_slab"], wire_specs,
+            specs["edges"], specs["edges"], specs["edges"],
+            specs["csr"], specs["csr"], specs["csr"],
+        ),
+        out_specs=(specs["out"], specs["A"], specs["A"]),
+        # the A outputs are recomputed identically on every shard; shard_map
+        # can't prove that, so replication checking is off
+        check_rep=False,
+    )(block_layer, self_slab, wire_operands, src, dst, w, nbr, pos, valid)
+
+
 def to_named(mesh, pspec_tree):
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s),

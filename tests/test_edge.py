@@ -290,3 +290,104 @@ def test_edge_kernel_one_launch_per_round():
             pK,
         )
         assert n == ROUNDS, (codec, n)
+
+
+# ---------------------------------------------------------------------------
+# wire-resident fused round (PR 9): in-kernel decode + CSR segment combine
+# ---------------------------------------------------------------------------
+
+
+def _run_kernels(pK, part, layout, sched, *, codec, algorithm,
+                 use_kernels, rounds=ROUNDS):
+    C, metro = sched.mixing_stacks(0, rounds)
+    return gather_consensus_rounds(
+        part, pK, C, DRTConfig(), rounds=rounds, algorithm=algorithm,
+        metropolis=metro, codec=codec,
+        rng=jax.random.key(7) if codec is not None else None,
+        layout=layout, path="edge", edges=sched.edge_stacks(0, rounds),
+        max_in_degree=sched.max_in_degree, use_kernels=use_kernels,
+    )
+
+
+@pytest.mark.parametrize("name", ["static_ring", "churn"])
+@pytest.mark.parametrize("algorithm", ["drt", "classical"])
+@pytest.mark.parametrize("codec", [None, "bf16", "int8", "topk:0.25"])
+def test_wire_resident_kernel_matches_jnp_edge_path(name, algorithm, codec):
+    """``slab_edge_encode_combine`` (in-kernel wire decode + sort-free CSR
+    combine, interpret mode) vs the jnp CSR edge path, same rng: exact and
+    top-k wires are bit-identical; bf16/int8 sit at 1-2 ulp (the decode
+    values match bit for bit — separately compiled programs contract
+    different FMA chains).  EF residual and mixing matrices ride along."""
+    pK, part, layout = _stack()
+    sched = _schedules()[name]
+    ref = _run_kernels(pK, part, layout, sched, codec=codec,
+                       algorithm=algorithm, use_kernels=False)
+    ker = _run_kernels(pK, part, layout, sched, codec=codec,
+                       algorithm=algorithm, use_kernels=True)
+    assert _max_err(ref[0], ker[0]) < 1e-5, (name, algorithm, codec)
+    assert float(jnp.max(jnp.abs(ref[1] - ker[1]))) < 1e-6
+    if codec == "topk:0.25":
+        assert _max_err(ref[2], ker[2]) == 0.0  # EF residual: jnp encode
+    if codec in (None, "topk:0.25"):
+        # f32 wire: the kernel reads the very same values the jnp path does
+        assert _max_err(ref[0], ker[0]) == 0.0
+
+
+def test_wire_resident_kernel_one_launch_per_round():
+    """With CSR tables available every CODED round is one Pallas launch —
+    the wire-resident kernel subsumes gather, decode, stats, mixing and
+    combine (no decoded-slab round trip to re-read)."""
+    from repro.utils.dispatch import count_pallas_launches
+
+    pK, part, layout = _stack(K=4)
+    topo = ring(4)
+    C = jnp.asarray(topo.c_matrix(), jnp.float32)
+    metro = jnp.asarray(topo.metropolis(), jnp.float32)
+    edges = edge_stacks_from_topology(topo, ROUNDS)
+    dmax = max_in_degree_from_topology(topo)
+    for codec in (None, "bf16", "int8", "topk:0.25"):
+        n = count_pallas_launches(
+            lambda pK, codec=codec: gather_consensus_rounds(
+                part, pK, C, DRTConfig(), rounds=ROUNDS, algorithm="drt",
+                metropolis=metro,
+                codec=codec, rng=jax.random.key(0) if codec else None,
+                layout=layout, path="edge", edges=edges, use_kernels=True,
+                max_in_degree=dmax,
+            )[0],
+            pK,
+        )
+        assert n == ROUNDS, (codec, n)
+
+
+# ---------------------------------------------------------------------------
+# dryrun --graph-stats cost ratios: hand-computed ring / ER values
+# ---------------------------------------------------------------------------
+
+
+def test_graph_stats_flop_and_byte_ratios_hand_computed():
+    from repro.core.dynamic import StaticSchedule, schedule_graph_stats
+
+    K64 = 64
+    # ring: 2K directed edges -> FLOP ratio K^2 / 2K = K/2
+    s = schedule_graph_stats(StaticSchedule(ring(K64)))
+    assert s["dense_vs_edge_flop_ratio"] == pytest.approx(K64 / 2.0)
+    # int8 wire (1 B/elem): dense 3 f32 passes = 12 B/elem vs edge
+    # self + out f32 (8 B) + wire x2 phases (2 B) -> 12/10
+    assert s["dense_vs_edge_byte_ratio"] == pytest.approx(1.2)
+
+    er = make_topology("erdos_renyi", K64, p=0.1, seed=0)
+    adj = np.asarray(er.adjacency, dtype=bool).copy()
+    np.fill_diagonal(adj, False)
+    e_directed = int(adj.sum())
+    s_er = schedule_graph_stats(StaticSchedule(er))
+    assert s_er["dense_vs_edge_flop_ratio"] == pytest.approx(
+        K64 * K64 / e_directed
+    )
+    # bytes are graph-INDEPENDENT (the replicated wire streams whole per
+    # phase whatever |E| is): ER and ring agree exactly, and the ratio
+    # moves only with the wire width
+    assert s_er["dense_vs_edge_byte_ratio"] == s["dense_vs_edge_byte_ratio"]
+    s_bf16 = schedule_graph_stats(StaticSchedule(er), wire_itemsize=2)
+    assert s_bf16["dense_vs_edge_byte_ratio"] == pytest.approx(1.0)
+    s_f32 = schedule_graph_stats(StaticSchedule(er), wire_itemsize=4)
+    assert s_f32["dense_vs_edge_byte_ratio"] == pytest.approx(0.75)

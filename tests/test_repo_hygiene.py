@@ -1,0 +1,38 @@
+"""Repo hygiene guards.
+
+PR 6 accidentally committed a batch of ``__pycache__`` directories and they
+regrew after PR 7; this tier-1 guard makes any tracked bytecode a test
+failure so they cannot come back through a hasty ``git add -A``.
+"""
+import os
+import subprocess
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _git_ls_files():
+    out = subprocess.run(
+        ["git", "ls-files"], cwd=ROOT, capture_output=True, text=True
+    )
+    if out.returncode != 0:
+        pytest.skip("not a git checkout")
+    return out.stdout.splitlines()
+
+
+def test_no_bytecode_tracked_by_git():
+    bad = [
+        f for f in _git_ls_files()
+        if "__pycache__" in f.split("/") or f.endswith(".pyc")
+    ]
+    assert not bad, (
+        f"bytecode caches tracked by git (run `git rm -r --cached` on them): "
+        f"{bad}"
+    )
+
+
+def test_gitignore_covers_bytecode():
+    with open(os.path.join(ROOT, ".gitignore")) as f:
+        lines = {ln.strip() for ln in f}
+    assert "__pycache__/" in lines and "*.pyc" in lines
