@@ -76,6 +76,18 @@ reviewed act), and FAILS (exit 1) when any tracked metric regresses:
                       noise-regrown round-sets.  HARD floor 0.25: the
                       disagreement gate must save at least a quarter of
                       the fixed budget.
+  byzantine_gap       undefended-Metropolis honest drift over DRT+clip
+                      honest drift under the 25% sign-flip ring scenario
+                      (combine_micro.run_byzantine).  HARD floor 1.0,
+                      strict: the trust mechanism plus clipping must beat
+                      weight-oblivious averaging outright — a
+                      machine-independent drift ratio.
+  byzantine_weight_mass
+                      fraction of honest agents' total trust mass landing
+                      on the Byzantine cohort in the DRT+clip cell.  HARD
+                      ceiling at the Byzantine fraction (0.25), strict:
+                      attackers must capture measurably less than their
+                      uniform-attention share.
 
 Untimed rows (permute-engine wire-volume rows, tagged ``"untimed": true``)
 are excluded from every computation.  On failure the gate prints the full
@@ -135,6 +147,9 @@ def collect_metrics(doc) -> list[tuple[str, float, str]]:
     ctl = doc.get("control") or {}
     out.append(("momentum_rounds_ratio", ctl.get("momentum_rounds_ratio"), "down"))
     out.append(("round_savings", ctl.get("round_savings"), "up"))
+    byz = doc.get("byzantine") or {}
+    out.append(("byzantine_gap", byz.get("gap_vs_metropolis"), "up"))
+    out.append(("byzantine_weight_mass", byz.get("byzantine_weight_mass"), "down"))
     for r in (doc.get("sparse") or {}).get("rows") or []:
         codec = r.get("codec", "none")
         if codec == "int8":
@@ -255,6 +270,18 @@ def main(argv=None) -> int:
         if name == "round_savings":
             bound = max(bound, 0.25)
             ok = fresh_v >= bound
+        # Byzantine-robustness claims are hard and machine-independent
+        # (drift and trust-mass ratios, no wall clock): under the 25%
+        # sign-flip scenario DRT + trust clipping must STRICTLY beat
+        # undefended Metropolis on honest drift, and the trust mass the
+        # attackers capture must sit below their uniform-attention share
+        if name == "byzantine_gap":
+            bound = max(bound, 1.0)
+            ok = fresh_v > bound
+        if name == "byzantine_weight_mass":
+            frac = (tracked_doc.get("byzantine") or {}).get("fraction", 0.25)
+            bound = min(bound, frac)
+            ok = fresh_v < bound
         table.append((name, tracked_v, fresh_v, bound, "OK" if ok else "REGRESSION"))
         failed = failed or not ok
 

@@ -107,6 +107,20 @@ ROUNDS = 3  # the paper's consensus cadence; the slab packs ONCE per round-set
 SCAN_ROUNDS = 8  # "heavy traffic" round count for the trace/compile contrast
 
 
+def _atomic_json_dump(doc: dict, path: str) -> None:
+    """Crash-safe bench-doc write: mkdir -p, dump to a same-directory temp
+    file, fsync, then ``os.replace`` — a benchmark run killed mid-write can
+    never leave CI a truncated JSON artifact."""
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    tmp = os.path.join(d, f".{os.path.basename(path)}.tmp")
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
 def _model_stack(key, K: int, n_layers: int = 8, width: int = 64):
     """10-group benchmark model: one stacked scan-over-layers group with six
     leaves per slot plus nine plain multi-leaf groups — a leaf-heavy shape
@@ -526,8 +540,7 @@ def update_sparse_section(path: str, Ks, time_dense: bool = True) -> dict:
         if (r["K"], r.get("codec", "none")) not in new_keys
     ]
     sec["rows"] = sorted(keep + rows, key=lambda r: (r["K"], r["codec"]))
-    with open(path, "w") as f:
-        json.dump(doc, f, indent=2)
+    _atomic_json_dump(doc, path)
     return doc
 
 
@@ -705,6 +718,123 @@ def run_consensus_control(
     )
 
 
+def run_byzantine(
+    K: int = 16,
+    rounds: int = 8,
+    fraction: float = 0.25,
+    fault: str = "sign_flip",
+    clip: float = 0.15,
+):
+    """Byzantine-robustness trajectory on the K=16 ring: floor(fraction * K)
+    seeded agents publish through ``fault`` every round while honest agents
+    try to reach consensus.
+
+    The model is a compact TWO-layer stack, deliberately much shallower
+    than the 26-leaf ``_model_stack`` used elsewhere in this file.  Eq. 14's
+    numerator is a product over layers of ``(1 + d2_q / n2_q)``; an
+    every-layer attack like a sign flip contributes ``~(1 + 4) = 5`` per
+    layer, so with L layers the Byzantine/honest weight ratio scales as
+    ``5**L * d_honest**2 / (4 n**2)``.  For small L the honest term wins and
+    DRT down-weights the attacker; by L ~ 26 the product saturates the
+    Lemma-1 clamp and the normalized weights go uniform — DRT's
+    discriminative regime is few-layer (or per-layer-group) trust, which is
+    what this benchmark measures.
+
+    Agents start CLUSTERED (same base point + 5% per-agent spread — the
+    ``same_init`` training regime where honest iterates are mutually close
+    and a sign-flipped publication is a geometric outlier).  Each cell
+    reports the final mean squared distance of the HONEST cohort to the
+    INITIAL honest mean — the point attack-free consensus would reach, so
+    the number penalizes both residual disagreement and attacker-induced
+    drift — plus the mean per-round ``byzantine_weight_mass`` telemetry.
+
+    Two hard gates ride this section (checked by check_regression.py):
+
+    - ``gap_vs_metropolis`` = undefended-Metropolis honest drift over
+      DRT+clip honest drift, gated > 1.0 — the paper's trust mechanism plus
+      clipping must strictly beat weight-oblivious averaging under a 25%
+      sign-flip attack;
+    - ``byzantine_weight_mass`` (DRT+clip cell), gated < ``fraction`` — the
+      trust mass Byzantine publications capture must sit measurably below
+      the uniform-attention baseline.
+    """
+    import numpy as np
+
+    from repro.faults import make_fault_plan
+    from repro.obs.metrics import ObsConfig
+
+    k0, k1, kn0, kn1 = jax.random.split(jax.random.key(0), 4)
+    base = {
+        "w": jax.random.normal(k0, (32, 32), jnp.float32),
+        "b": jax.random.normal(k1, (128,), jnp.float32),
+    }
+    noise = {
+        "w": jax.random.normal(kn0, (K, 32, 32), jnp.float32),
+        "b": jax.random.normal(kn1, (K, 128), jnp.float32),
+    }
+    pK = jax.tree.map(lambda x, n: x[None] + 0.05 * n, base, noise)
+    template = jax.tree.map(lambda x: x[0], pK)
+    part = LayerPartition.build(template)
+    layout = build_slab_layout(part, template)
+    topo = make_topology("ring", K)
+    C = jnp.asarray(topo.c_matrix(), jnp.float32)
+    metro = jnp.asarray(topo.metropolis(), jnp.float32)
+    plan = make_fault_plan(K, byzantine=fraction, fault_model=fault, seed=0)
+    honest = ~plan.mask.mask_at(0)  # static membership (cycle=1)
+
+    idx = np.nonzero(np.asarray(honest))[0]
+    ref = jax.tree.map(
+        lambda x: np.asarray(x, np.float64)[idx].mean(axis=0), pK
+    )  # initial honest mean: the attack-free consensus target
+
+    def honest_drift(out) -> float:
+        tot = 0.0
+        for leaf, r in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+            x = np.asarray(leaf, np.float64)[idx]
+            tot += ((x - r[None]) ** 2).sum()
+        return tot / len(idx)
+
+    def cell(name: str, algorithm: str = "drt", **kw) -> dict:
+        out, _, _, cm = gather_consensus_rounds(
+            part, pK, C, DRTConfig(), rounds=rounds, algorithm=algorithm,
+            metropolis=metro, layout=layout, faults=plan.realize(0, rounds),
+            obs=ObsConfig(), **kw,
+        )
+        return dict(
+            cell=name,
+            algorithm=algorithm,
+            disagreement_to_honest_mean=honest_drift(out),
+            byzantine_weight_mass=float(
+                np.mean(np.asarray(cm.byzantine_weight_mass))
+            ),
+            **{k: v for k, v in kw.items()},
+        )
+
+    rows = [
+        cell("metropolis", algorithm="classical"),
+        cell("drt"),
+        cell("drt_clip", trust_clip=clip),
+        cell("trimmed", combine="trimmed:0.25"),
+        cell("median", combine="median"),
+    ]
+    by = {r["cell"]: r for r in rows}
+    return dict(
+        K=K,
+        rounds=rounds,
+        topology="ring",
+        fraction=fraction,
+        fault_model=fault,
+        trust_clip=clip,
+        n_byzantine=int(K * fraction),
+        rows=rows,
+        gap_vs_metropolis=(
+            by["metropolis"]["disagreement_to_honest_mean"]
+            / by["drt_clip"]["disagreement_to_honest_mean"]
+        ),
+        byzantine_weight_mass=by["drt_clip"]["byzantine_weight_mass"],
+    )
+
+
 def run_dispatch_counts(K: int = 16, rounds: int = ROUNDS):
     """Static Pallas-launch counts of one ``use_kernels=True`` round-set:
     the whole-slab batched kernels issue ONE launch per coded round (and one
@@ -862,9 +992,9 @@ def write_bench_json(
         "train_many_steps": run_train_chunking(),
         "telemetry": run_telemetry_overhead(K=K),
         "control": run_consensus_control(K=K),
+        "byzantine": run_byzantine(K=K),
     }
-    with open(path, "w") as f:
-        json.dump(doc, f, indent=2)
+    _atomic_json_dump(doc, path)
     return doc
 
 

@@ -21,6 +21,11 @@ SAME number from the same code path — no ad-hoc recomputation here.  The
 ``disagreement_ratio`` gap rows are invariant to the mean-vs-sum convention
 (both cells divide by the same K).
 
+A Byzantine sweep (``run_byzantine_sweep``) rides along: fault model x
+Byzantine fraction x defense (undefended Metropolis, plain DRT, DRT + trust
+clipping, trimmed mean), trained end-to-end with honest-agent test accuracy
+as the headline column; skip it with ``--no-byzantine``.
+
 Run:  PYTHONPATH=src python benchmarks/scenario_matrix.py [--fast]
 Writes ``results/scenario_matrix.json``.
 """
@@ -251,19 +256,146 @@ def run(cfg: dict | None = None, codecs=(None, "int8"), verbose: bool = False):
     return rows
 
 
+def run_byzantine_sweep(cfg: dict | None = None, verbose: bool = False):
+    """Byzantine sweep: fault model x fraction x defense, trained end-to-end.
+
+    Every cell trains the same label-skewed MLP on a static ring while
+    ``floor(byzantine * K)`` seeded agents publish through the fault model
+    each consensus round.  Defenses: undefended Metropolis (classical),
+    plain DRT, DRT + trust clipping, and the coordinate-wise trimmed mean.
+    Reported ``test_acc`` is the FIRST HONEST agent's — a Byzantine agent's
+    own row of the parameter slab is never corrupted (it lies on the wire,
+    not to itself), so honest-agent accuracy is the quantity an attack
+    actually degrades.  Per (fault, fraction) a ``byz-gap`` row compares
+    undefended Metropolis to DRT+clip.
+    """
+    from repro.faults import ByzantineMask
+    from repro.optim import momentum
+
+    cfg = {**DEFAULTS, **(cfg or {})}
+    K = cfg["agents"]
+    clip = cfg.get("trust_clip", 0.15)
+    data = CifarLike(CifarLikeConfig(image_size=cfg["image_size"], max_shift=0))
+    rng = np.random.default_rng(cfg["seed"])
+    pool_x, pool_y = data.sample(K * cfg["samples_per_agent"], rng)
+    shards = dirichlet_shards(
+        pool_x, pool_y, K, alpha=cfg["alpha"], seed=cfg["seed"],
+        min_per_agent=cfg["batch"],
+    )
+    tx, ty = data.test_set(256)
+    test = {"images": jnp.asarray(tx), "labels": jnp.asarray(ty)}
+    d_in = cfg["image_size"] ** 2 * 3
+    init_fn = _mlp_init(cfg["hidden"], d_in, data.cfg.num_classes)
+
+    defenses = {
+        "metropolis": dict(algorithm="classical"),
+        "drt": dict(algorithm="drt"),
+        "drt_clip": dict(algorithm="drt", trust_clip=clip),
+        "trimmed": dict(algorithm="drt", combine="trimmed:0.25"),
+    }
+    scenarios = [
+        ("sign_flip", 0.125),
+        ("sign_flip", 0.25),
+        ("gauss:2.0", 0.25),
+    ]
+
+    rows = []
+    for fault, fraction in scenarios:
+        mask = np.asarray(ByzantineMask(K, fraction, seed=cfg["seed"]).mask_at(0))
+        honest0 = int(np.nonzero(~mask)[0][0])
+        cell = {}
+        for name, knobs in defenses.items():
+            t0 = time.time()
+            tr = DecentralizedTrainer(
+                _mlp_loss,
+                init_fn,
+                momentum(cfg["lr"], 0.9),
+                ring(K),
+                TrainerConfig(
+                    consensus_steps=cfg["consensus_steps"],
+                    byzantine=fraction,
+                    fault_model=fault,
+                    fault_seed=cfg["seed"],
+                    **knobs,
+                ),
+            )
+            st = tr.init(jax.random.key(cfg["seed"]))
+            epoch_fn = jax.jit(tr.epoch)
+            m = {}
+            for e in range(cfg["epochs"]):
+                b = agent_minibatches(shards, cfg["batch"], epoch_seed=e)
+                st, m = epoch_fn(
+                    st,
+                    {"images": jnp.asarray(b["images"]),
+                     "labels": jnp.asarray(b["labels"])},
+                    jax.random.key(e),
+                )
+            ph = jax.tree.map(lambda x: x[honest0], st.params)
+            acc = float(jnp.mean(
+                jnp.argmax(_mlp_logits(ph, test["images"]), -1) == test["labels"]
+            ))
+            row = dict(
+                fault_model=fault,
+                byzantine=fraction,
+                defense=name,
+                algorithm="byzantine",
+                loss=float(m["loss"]),
+                disagreement=float(m["disagreement"]),
+                test_acc=acc,
+                seconds=time.time() - t0,
+                **{k: v for k, v in knobs.items() if k != "algorithm"},
+            )
+            rows.append(row)
+            cell[name] = row
+            if verbose:
+                print(
+                    f"  byz {fault:10s} f={fraction:.3f} {name:10s} "
+                    f"loss={row['loss']:.4f} acc={acc:.3f} "
+                    f"dis={row['disagreement']:.4f} ({row['seconds']:.0f}s)",
+                    flush=True,
+                )
+        rows.append(dict(
+            fault_model=fault,
+            byzantine=fraction,
+            algorithm="byz-gap",
+            disagreement_metropolis=cell["metropolis"]["disagreement"],
+            disagreement_drt_clip=cell["drt_clip"]["disagreement"],
+            disagreement_ratio=(
+                cell["metropolis"]["disagreement"]
+                / max(cell["drt_clip"]["disagreement"], 1e-12)
+            ),
+            acc_gap_drt_clip_minus_metropolis=(
+                cell["drt_clip"]["test_acc"] - cell["metropolis"]["test_acc"]
+            ),
+        ))
+    return rows
+
+
 def write_json(rows, path: str = RESULTS) -> None:
-    os.makedirs(os.path.dirname(path), exist_ok=True)
-    with open(path, "w") as f:
-        json.dump({"generated_by": "benchmarks/scenario_matrix.py", "rows": rows}, f,
-                  indent=2)
+    """Crash-safe write: same-directory temp file + atomic ``os.replace`` so
+    a reader (or an interrupted run) never observes a torn JSON document."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    doc = {"generated_by": "benchmarks/scenario_matrix.py", "rows": rows}
+    tmp = os.path.join(
+        os.path.dirname(path) or ".", f".{os.path.basename(path)}.tmp"
+    )
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="tiny sweep (CI smoke)")
+    ap.add_argument("--no-byzantine", action="store_true",
+                    help="skip the Byzantine fault x defense sweep")
     args = ap.parse_args(argv)
     cfg = dict(epochs=2, samples_per_agent=64, batch=16, agents=4) if args.fast else None
     rows = run(cfg, verbose=True)
+    if not args.no_byzantine:
+        rows += run_byzantine_sweep(cfg, verbose=True)
     write_json(rows)
     print(f"\n{'schedule':26s} {'codec':6s} {'dis classical':>13s} {'dis drt':>9s} "
           f"{'ratio':>7s} {'acc gap':>8s}")
@@ -280,6 +412,16 @@ def main(argv=None):
             print(f"{r['schedule']:26s} {r['disagreement']:15.4f} "
                   f"{r['effective_rounds']:8.0f}/{r['max_rounds']:d} "
                   f"{r['test_acc']:6.3f}")
+    byz_gaps = [r for r in rows if r["algorithm"] == "byz-gap"]
+    if byz_gaps:
+        print(f"\n{'fault':10s} {'frac':>5s} {'dis metro':>10s} "
+              f"{'dis drt+clip':>13s} {'ratio':>7s} {'acc gap':>8s}")
+        for r in byz_gaps:
+            print(f"{r['fault_model']:10s} {r['byzantine']:5.3f} "
+                  f"{r['disagreement_metropolis']:10.4f} "
+                  f"{r['disagreement_drt_clip']:13.4f} "
+                  f"{r['disagreement_ratio']:7.2f} "
+                  f"{r['acc_gap_drt_clip_minus_metropolis']:+8.3f}")
     print(f"\nwrote {os.path.abspath(RESULTS)}")
     return rows
 

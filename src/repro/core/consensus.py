@@ -87,6 +87,10 @@ from repro.core import packing
 from repro.core.drt import DRTConfig
 from repro.core.dynamic import EdgeStacks, csr_from_edges, metropolis_edge_weights
 from repro.core.topology import Topology
+# submodule imports (not the repro.faults package root): models/robust have no
+# repro.core dependencies, so the consensus <-> faults import graph stays acyclic
+from repro.faults import models as faults_models
+from repro.faults import robust as faults_robust
 from repro.obs import metrics as obs_metrics
 from repro.obs import profiling as obs_profiling
 from repro.obs.metrics import ConsensusMetrics, ObsConfig
@@ -224,6 +228,8 @@ def gather_consensus_step(
     codec: "WireCodec | str | None" = None,
     codec_state=None,
     rng: jax.Array | None = None,
+    publish=None,
+    a_transform=None,
 ):
     """One consensus step on the agent-stacked tree (per-leaf reference path).
 
@@ -235,6 +241,13 @@ def gather_consensus_step(
     ``codec`` compresses the cross-agent exchange (distance statistics + the
     off-diagonal combine); each agent's own contribution stays full precision.
     ``exchange_dtype`` is the deprecated spelling of ``codec='bf16'``.
+
+    ``publish`` (fault injection) substitutes the PUBLISHED view of the
+    agent-stacked tree: distance statistics and the off-diagonal combine
+    read ``publish`` (through the codec, like honest traffic) while every
+    agent's own self term keeps its true ``psi_K`` row.  ``a_transform``
+    post-processes the mixing matrices (trust clipping/temperature).  Both
+    default to None and then trace the exact pre-fault program.
 
     This is the reference oracle the slab hot path
     (:func:`gather_consensus_rounds`) is parity-tested against.
@@ -253,9 +266,31 @@ def gather_consensus_step(
         raise ValueError(f"unknown algorithm {algorithm!r}")
 
     if wire_codec is None or isinstance(wire_codec, IdentityCodec):
-        # exact exchange: stats and combine on the raw tree
-        A = mixing(psi_K)
-        new = partition.combine(A, psi_K)
+        if publish is None:
+            # exact exchange: stats and combine on the raw tree
+            A = mixing(psi_K)
+            if a_transform is not None:
+                A = a_transform(A)
+            new = partition.combine(A, psi_K)
+            if legacy_return:
+                return new, A
+            return new, A, codec_state if codec_state is not None else ()
+        # exact exchange under fault injection: neighbours see the published
+        # (poisoned) tree, each agent's self term keeps its true row
+        A = mixing(publish)
+        if a_transform is not None:
+            A = a_transform(A)
+        eye = jnp.eye(A.shape[1], dtype=A.dtype)
+        off = partition.combine(A * (1.0 - eye)[None], publish)
+        diag = jnp.diagonal(A, axis1=1, axis2=2)
+        selfed = jax.vmap(
+            lambda w_l, tree: partition.scale_by_layer(w_l, tree), in_axes=(1, 0)
+        )(diag, psi_K)
+        new = jax.tree.map(
+            lambda o, s: (o.astype(jnp.float32) + s.astype(jnp.float32)).astype(s.dtype),
+            off,
+            selfed,
+        )
         if legacy_return:
             return new, A
         return new, A, codec_state if codec_state is not None else ()
@@ -267,9 +302,13 @@ def gather_consensus_step(
         codec_state = ()
 
     keys = _agent_keys(_require_rng(wire_codec, rng), K)
-    wire_K, new_state = jax.vmap(wire_codec.encode)(psi_K, codec_state, keys)
+    wire_K, new_state = jax.vmap(wire_codec.encode)(
+        psi_K if publish is None else publish, codec_state, keys
+    )
     psi_hat_K = jax.vmap(wire_codec.decode)(wire_K)
     A = mixing(psi_hat_K)
+    if a_transform is not None:
+        A = a_transform(A)
 
     eye = jnp.eye(A.shape[1], dtype=A.dtype)
     off = partition.combine(A * (1.0 - eye)[None], psi_hat_K)  # decoded neighbours
@@ -505,6 +544,10 @@ def gather_consensus_rounds(
     obs: "ObsConfig | None" = None,
     momentum: float = 0.0,
     round_tol: float | None = None,
+    faults=None,
+    trust_clip: float | None = None,
+    trust_temp: float | None = None,
+    combine: str = "drt",
 ):
     """``rounds`` consensus steps with ONE pack/unpack around the whole set.
 
@@ -578,6 +621,31 @@ def gather_consensus_rounds(
       ``tol`` and becomes an identity no-op (sticky, via ``jnp.where`` on
       the carry) once it drops below.  Telemetry's ``effective_rounds``
       reports the realized budget.
+
+    Robustness (all knobs default off with the same jaxpr-bit-identity
+    contract; see :mod:`repro.faults`):
+
+    * ``faults=`` a :class:`repro.faults.FaultRealization` (from
+      :meth:`FaultPlan.realize`) injects Byzantine attacks and wire faults:
+      masked agents PUBLISH a faulted view of their iterate (applied before
+      encode, so poison flows through every codec and both DRT phases like
+      honest traffic) while their own self term keeps the true iterate;
+      per-agent stale masks re-publish the previous round's iterate (slab /
+      edge paths; the tree oracle supports attacks but not staleness).
+      Drop faults need no engine support — wrap the schedule in
+      :class:`repro.faults.DropSchedule` and the realized graphs
+      renormalize like churn.
+    * ``trust_clip`` / ``trust_temp`` reweight the realized mixing columns
+      (cap any neighbour's mass / sharpen by d2 rank; excess clip mass moves
+      to the diagonal) on every path including the exact Gram recurrence —
+      the reweight is linear in the iterates, so the two-D-pass property
+      survives.
+    * ``combine='trimmed:<f>' | 'median'`` replaces the weighted combine
+      with a coordinate-wise robust baseline over each agent's closed
+      neighbourhood (dense slab path only; ``A_last``/telemetry report the
+      support-uniform stand-in weights).  Fault injection and non-DRT
+      combines route exact round-sets through the per-round slab body (the
+      Gram recurrence is linear algebra and cannot express them).
     """
     wire_codec = _resolve_codec(codec, None)
     if path not in ("slab", "tree", "edge"):
@@ -600,6 +668,11 @@ def gather_consensus_rounds(
             "skip the call entirely for a consensus-free step"
         )
     beta = float(momentum)
+    if not 0.0 <= beta < 1.0:
+        raise ValueError(
+            f"consensus momentum must be in [0, 1), got {beta}; the heavy-ball "
+            "recurrence diverges at beta >= 1"
+        )
     use_mom = beta != 0.0
     use_adapt = round_tol is not None
     if use_adapt:
@@ -608,13 +681,51 @@ def gather_consensus_rounds(
             raise ValueError(f"round_tol must be > 0, got {round_tol}")
     K = jax.tree.leaves(psi_K)[0].shape[0]
     L = partition.num_layers
+    # -- robustness knobs (defaults trace the exact pre-fault jaxpr) --------
+    faults_robust.validate_trust_knobs(trust_clip, trust_temp)
+    robust_on = trust_clip is not None or trust_temp is not None
+    combine_kind, combine_frac = faults_robust.parse_combine(combine)
+    if combine_kind != "drt" and path != "slab":
+        raise ValueError(
+            f"combine={combine!r} needs the dense slab path (robust combines "
+            f"sort each agent's full neighbourhood), got path={path!r}"
+        )
+    f_model = f_mask = f_stale = f_key = None
+    if faults is not None:
+        f_model = faults.model
+        f_mask = faults.mask
+        f_stale = faults.stale
+        f_key = faults.key
+        for name, arr in (("mask", f_mask), ("stale", f_stale)):
+            if arr is not None and tuple(arr.shape) != (rounds, K):
+                raise ValueError(
+                    f"faults.{name} must be (rounds, K) = ({rounds}, {K}), "
+                    f"got {tuple(arr.shape)} — realize the plan with the "
+                    "round-set's own start/rounds"
+                )
+        if f_mask is not None and f_model is None:
+            raise ValueError("faults with a Byzantine mask need a fault model")
+    use_atk = f_mask is not None
+    use_stale = f_stale is not None
+    use_faults = use_atk or use_stale
+    if use_stale and path == "tree":
+        raise ValueError(
+            "stale-iterate delivery is not supported on the tree oracle path "
+            '(use path="slab" or path="edge")'
+        )
+    if robust_on:
+        def _rw_dense(A):
+            return faults_robust.reweight_dense(A, trust_clip, trust_temp)
+    else:
+        _rw_dense = None
     C_stack = _round_stack(C, rounds, "C")
     metro_stack = _round_stack(metropolis, rounds, "metropolis")
     A0 = jnp.zeros((L, K, K), jnp.float32)  # overwritten by round 1
-    # control extras ride the END of every scan carry: the previous iterate
-    # for momentum, then (active, effective-round counter) for the adaptive
-    # budget.  Disabled knobs append NOTHING — the default carry (and jaxpr)
-    # is bit-identical to the uncontrolled program.
+    # control extras ride the END of every scan carry: the stale-publish
+    # iterate (slab/edge fault paths), the previous iterate for momentum,
+    # then (active, effective-round counter) for the adaptive budget.
+    # Disabled knobs append NOTHING — the default carry (and jaxpr) is
+    # bit-identical to the uncontrolled program.
     ctl0 = ()
     if use_adapt:
         ctl0 = (jnp.ones((), bool), jnp.zeros((), jnp.float32))
@@ -641,10 +752,16 @@ def gather_consensus_rounds(
                 act = active & (_tree_net_disagreement(psi) > round_tol)
                 eff = eff + act.astype(jnp.float32)
             round_rng = None
+            pub = None
+            if use_atk:
+                pub = faults_models.apply_fault_tree(
+                    f_model, psi, f_mask[r], jax.random.fold_in(f_key, r)
+                )
             if wire_codec is None:
                 new_psi, A = gather_consensus_step(
                     partition, psi, C_r, cfg,
                     algorithm=algorithm, metropolis=metro_r,
+                    publish=pub, a_transform=_rw_dense,
                 )
                 new_st = st
             else:
@@ -654,6 +771,7 @@ def gather_consensus_rounds(
                     algorithm=algorithm, metropolis=metro_r,
                     codec=wire_codec, codec_state=st,
                     rng=round_rng,
+                    publish=pub, a_transform=_rw_dense,
                 )
             mom_sq = jnp.zeros((), jnp.float32)
             if use_mom:
@@ -694,12 +812,13 @@ def gather_consensus_rounds(
             # oracle-priced telemetry: the slab paths read these quantities
             # off state they already carry; the per-leaf oracle re-derives
             # the wire the step consumed (same keys => bit-identical wire)
+            psi_pub = pub if use_atk else psi
             if wire_codec is None:
                 send = jnp.asarray(idb, jnp.float32)
-                psi_hat = psi
+                psi_hat = psi_pub
             else:
                 keys = _agent_keys(_require_rng(wire_codec, round_rng), K)
-                wire_K, _ = jax.vmap(wire_codec.encode)(psi, st, keys)
+                wire_K, _ = jax.vmap(wire_codec.encode)(psi_pub, st, keys)
                 send = jnp.mean(
                     obs_metrics.tree_wire_send_bytes(wire_codec, wire_K, template)
                 )
@@ -733,6 +852,14 @@ def gather_consensus_rounds(
                 edges=obs_metrics.edge_count(C_r if C_r is not None else metro_r),
                 effective_rounds=eff_rounds,
                 momentum_norm=mom_sq,
+                suspicion=obs_metrics.suspicion_from_A(
+                    A, C_r if C_r is not None else metro_r
+                ),
+                byzantine_weight_mass=(
+                    obs_metrics.byzantine_weight_mass(A, f_mask[r])
+                    if use_atk
+                    else jnp.zeros((), jnp.float32)
+                ),
             )
             return (new_psi, new_st, A, *new_ctl), m
 
@@ -781,7 +908,15 @@ def gather_consensus_rounds(
                 f"rounds, round-set runs {rounds}"
             )
         E = edges.src.shape[-1]
-        edge_kernel = use_kernels and obs is None and algorithm in ("drt", "classical")
+        # faults / trust reweighting run the jnp edge round: the fused edge
+        # kernels neither apply publish transforms nor re-weight in-kernel
+        edge_kernel = (
+            use_kernels
+            and obs is None
+            and algorithm in ("drt", "classical")
+            and not use_faults
+            and not robust_on
+        )
         if obs is not None:
             idb = obs_metrics.slab_identity_bytes(layout)
             send_exact = jnp.asarray(
@@ -792,21 +927,37 @@ def gather_consensus_rounds(
         def edge_body(carry, xs):
             regions, res, A_prev, *ctl = carry
             r, src, dst, w = xs
+            if use_stale:
+                pubprev = ctl[0]
             if use_mom:
-                prev = ctl[0]
+                prev = ctl[1] if use_stale else ctl[0]
             if use_adapt:
                 active, eff = ctl[-2], ctl[-1]
                 act = active & (packing.region_disagreement(regions) > round_tol)
                 eff = eff + act.astype(jnp.float32)
+            # published view: stale senders re-publish their previous-round
+            # iterate, then masked agents' attack rewrites what goes on the
+            # wire; the self term below always reads the true `regions`
+            pub_src = regions
+            if use_stale:
+                srow = f_stale[r]
+                pub_src = tuple(
+                    jnp.where(srow[None, :, None], p, n)
+                    for p, n in zip(pubprev, pub_src)
+                )
+            if use_atk:
+                pub_src = faults_models.apply_fault_regions(
+                    f_model, pub_src, f_mask[r], jax.random.fold_in(f_key, r)
+                )
             if exact:
                 new_res, wire = res, None
                 with obs_profiling.scope(obs, "consensus.decode"):
-                    decoded = regions
+                    decoded = pub_src
             else:
                 keys = _agent_keys(jax.random.fold_in(rng, r), K)
                 with obs_profiling.scope(obs, "consensus.encode"):
                     wire, new_res = packing.slab_encode_batched(
-                        wire_codec, layout, regions, res, keys
+                        wire_codec, layout, pub_src, res, keys
                     )
                 # materialize the WIRE, not the decoded slab: the sparse
                 # round's gather/stat consumers then re-read compact wire
@@ -920,6 +1071,10 @@ def gather_consensus_rounds(
                     A_e = jnp.broadcast_to(m_e[None], (L, E))
                 else:
                     raise ValueError(f"unknown algorithm {algorithm!r}")
+                if robust_on:
+                    A_self, A_e = faults_robust.reweight_edge(
+                        A_self, A_e, dst, K, trust_clip, trust_temp
+                    )
                 with obs_profiling.scope(obs, "consensus.combine"):
                     if csr is not None:
                         pos, valid, nbr_rows = csr
@@ -954,11 +1109,20 @@ def gather_consensus_rounds(
                 A = jnp.where(act, A, A_prev)
                 if use_mom:
                     prev = jax.tree.map(lambda o, p: jnp.where(act, o, p), regions, prev)
+                if use_stale:
+                    pubprev = jax.tree.map(
+                        lambda o, p: jnp.where(act, o, p), regions, pubprev
+                    )
                 if obs is not None:
                     mom_sq = jnp.where(act, mom_sq, 0.0)
-            elif use_mom:
-                prev = regions
+            else:
+                if use_mom:
+                    prev = regions
+                if use_stale:
+                    pubprev = regions
             new_ctl = ()
+            if use_stale:
+                new_ctl += (pubprev,)
             if use_mom:
                 new_ctl += (prev,)
             if use_adapt:
@@ -1007,10 +1171,23 @@ def gather_consensus_rounds(
                 edges=n_dir / 2.0,
                 effective_rounds=eff_rounds,
                 momentum_norm=mom_sq,
+                suspicion=obs_metrics.suspicion_from_A(
+                    A,
+                    jnp.zeros((K, K), jnp.float32).at[src, dst].add(mask),
+                ),
+                byzantine_weight_mass=(
+                    obs_metrics.byzantine_weight_mass(A, f_mask[r])
+                    if use_atk
+                    else jnp.zeros((), jnp.float32)
+                ),
             )
             return (new_regions, new_res, A, *new_ctl), m
 
-        edge_ctl0 = ((regions,) if use_mom else ()) + ctl0
+        edge_ctl0 = (
+            ((regions,) if use_stale else ())
+            + ((regions,) if use_mom else ())
+            + ctl0
+        )
         (regions, res, A_last, *_), metrics = _scan_rounds(
             edge_body,
             (regions, res if stateful else (), A0, *edge_ctl0),
@@ -1031,7 +1208,7 @@ def gather_consensus_rounds(
             return new_K, A_last, state0
         return new_K, A_last, state0, metrics
 
-    if exact:
+    if exact and not use_faults and combine_kind == "drt":
         # Exact exchange: the combine is linear, so the whole round-set runs
         # on the (L, K, K) Gram matrices — ONE Gram pass over the slab before
         # the loop (psi' = A_t^T psi per layer implies G' = A_t^T G A_t, which
@@ -1041,6 +1218,9 @@ def gather_consensus_rounds(
         # independent of the round count, vs two per round on the tree path.
         # The accumulated product starts from the exact identity: I @ A is
         # bit-identical to A, so seeding the scan carry costs nothing.
+        # (Trust reweighting is linear — clip A, then M' = M A — so it stays
+        # on this path; faults and robust combines are NONLINEAR in the
+        # iterates and route through the per-round slab body below instead.)
         eyeL = jnp.broadcast_to(jnp.eye(K, dtype=jnp.float32), (L, K, K))
         metrics = None
         if algorithm not in ("classical", "drt"):
@@ -1081,6 +1261,8 @@ def gather_consensus_rounds(
                     A = jnp.broadcast_to(metro_r, (L, K, K))
                 else:
                     A = drt_mod.drt_mixing_matrices(d2, n2, C_r, cfg)
+                if robust_on:
+                    A = _rw_dense(A)
                 M_new = jnp.einsum("pij,pjk->pik", M, A)
                 mom_sq = jnp.zeros((), jnp.float32)
                 if use_mom:
@@ -1134,6 +1316,10 @@ def gather_consensus_rounds(
                     ),
                     effective_rounds=eff_rounds,
                     momentum_norm=mom_sq,
+                    suspicion=obs_metrics.suspicion_from_A(
+                        A, C_r if C_r is not None else metro_r
+                    ),
+                    byzantine_weight_mass=jnp.zeros((), jnp.float32),
                 )
                 return new_carry, m
 
@@ -1162,6 +1348,8 @@ def gather_consensus_rounds(
                     A = jnp.broadcast_to(metro_r, (L, K, K))
                 else:
                     A = drt_mod.drt_mixing_matrices(d2, n2, C_r, cfg)
+                if robust_on:
+                    A = _rw_dense(A)
                 G2 = packing.gram_update(G, A)
                 d2m, d2x = obs_metrics.d2_summaries(d2)
                 m = ConsensusMetrics(
@@ -1178,6 +1366,10 @@ def gather_consensus_rounds(
                     ),
                     effective_rounds=(r + 1).astype(jnp.float32),
                     momentum_norm=jnp.zeros((), jnp.float32),
+                    suspicion=obs_metrics.suspicion_from_A(
+                        A, C_r if C_r is not None else metro_r
+                    ),
+                    byzantine_weight_mass=jnp.zeros((), jnp.float32),
                 )
                 return (G2, jnp.einsum("pij,pjk->pik", M, A), A), m
 
@@ -1194,6 +1386,8 @@ def gather_consensus_rounds(
                 M, _ = carry
                 _, _, metro_r = xs
                 A = jnp.broadcast_to(metro_r, (L, K, K))
+                if robust_on:
+                    A = _rw_dense(A)
                 return (jnp.einsum("pij,pjk->pik", M, A), A), None
 
             (M, A_last), _ = _scan_rounds(
@@ -1210,6 +1404,8 @@ def gather_consensus_rounds(
                 _, C_r, _ = xs
                 d2, n2 = packing.gram_sq_dists(G)
                 A = drt_mod.drt_mixing_matrices(d2, n2, C_r, cfg)
+                if robust_on:
+                    A = _rw_dense(A)
                 return (
                     packing.gram_update(G, A),
                     jnp.einsum("pij,pjk->pik", M, A),
@@ -1237,11 +1433,17 @@ def gather_consensus_rounds(
 
     # the fully-fused kernel round keeps the wire / decoded slabs / Gram in
     # VMEM — nothing observable — so telemetry routes coded rounds through
-    # the partially-fused path (everything still one combine launch)
+    # the partially-fused path (everything still one combine launch); fault
+    # injection, trust reweighting and robust combines likewise need the
+    # published/decoded slab and the mixing matrices in HBM
     fused_kernel = (
         use_kernels
+        and not exact
         and _fused_kernel_supported(wire_codec, algorithm)
         and obs is None
+        and not use_faults
+        and not robust_on
+        and combine_kind == "drt"
     )
     if obs is not None:
         idb = obs_metrics.slab_identity_bytes(layout)
@@ -1249,15 +1451,37 @@ def gather_consensus_rounds(
     def coded_body(carry, xs):
         regions, res, A_prev, *ctl = carry
         r, C_r, metro_r = xs
+        if use_stale:
+            pubprev = ctl[0]
         if use_mom:
-            prev = ctl[0]
+            prev = ctl[1] if use_stale else ctl[0]
         if use_adapt:
             active, eff = ctl[-2], ctl[-1]
             act = active & (packing.region_disagreement(regions) > round_tol)
             eff = eff + act.astype(jnp.float32)
-        keys = _agent_keys(jax.random.fold_in(rng, r), K)
+        # published view (see edge_body): stale re-publish, then the attack
+        pub_src = regions
+        if use_stale:
+            srow = f_stale[r]
+            pub_src = tuple(
+                jnp.where(srow[None, :, None], p, n)
+                for p, n in zip(pubprev, pub_src)
+            )
+        if use_atk:
+            pub_src = faults_models.apply_fault_regions(
+                f_model, pub_src, f_mask[r], jax.random.fold_in(f_key, r)
+            )
         wire = None
         d2 = None
+        if exact:
+            # reachable only under faults / non-DRT combine: exact exchange
+            # per round on the slab (the linear Gram recurrence cannot
+            # express a nonlinear publish or combine)
+            new_res = res
+            decoded = pub_src
+            keys = None
+        else:
+            keys = _agent_keys(jax.random.fold_in(rng, r), K)
         if fused_kernel:
             # ONE Pallas launch per coded round: encode + Gram + mixing +
             # combine + self term, wire slabs never materialized in HBM;
@@ -1268,35 +1492,50 @@ def gather_consensus_rounds(
                 algorithm,
             )
         else:
-            # natively-batched encode over the agent axis (bit-identical
-            # wire to vmapping the per-agent two-phase oracle, without its
-            # transposes)
-            with obs_profiling.scope(obs, "consensus.encode"):
-                wire, new_res = packing.slab_encode_batched(
-                    wire_codec, layout, regions, res, keys
-                )
-            with obs_profiling.scope(obs, "consensus.decode"):
-                decoded = packing.slab_decode(wire_codec, layout, wire)  # f32
-            if obs is not None and algorithm == "drt":
-                # same stats _slab_mixing computes — held for the telemetry
-                d2, n2 = layout.pairwise_sq_dists(decoded)
-                A = drt_mod.drt_mixing_matrices(d2, n2, C_r, cfg)
+            if not exact:
+                # natively-batched encode over the agent axis (bit-identical
+                # wire to vmapping the per-agent two-phase oracle, without
+                # its transposes)
+                with obs_profiling.scope(obs, "consensus.encode"):
+                    wire, new_res = packing.slab_encode_batched(
+                        wire_codec, layout, pub_src, res, keys
+                    )
+                with obs_profiling.scope(obs, "consensus.decode"):
+                    decoded = packing.slab_decode(wire_codec, layout, wire)  # f32
+            if combine_kind != "drt":
+                # coordinate-wise robust combine over the decoded published
+                # values (own decoded value included); the support-uniform A
+                # is the A_last / telemetry stand-in
+                A = faults_robust.support_uniform(C_r, L)
+                with obs_profiling.scope(obs, "consensus.combine"):
+                    new_regions = faults_robust.robust_combine(
+                        C_r, decoded, combine_kind, combine_frac
+                    )
             else:
-                A = _slab_mixing(layout, decoded, C_r, cfg, algorithm, metro_r, L)
-            eye = jnp.eye(K, dtype=A.dtype)
-            A_off = A * (1.0 - eye)[None]
-            with obs_profiling.scope(obs, "consensus.combine"):
-                if use_kernels:
-                    # codec outside the fused slab_encode_combine family
-                    # (e.g. a custom cast dtype): keep the PR-4 whole-slab
-                    # combine kernel rather than silently ignoring
-                    # use_kernels
-                    off = _combine_slab_kernels(layout, A_off, decoded)
+                if obs is not None and algorithm == "drt":
+                    # same stats _slab_mixing computes — held for telemetry
+                    d2, n2 = layout.pairwise_sq_dists(decoded)
+                    A = drt_mod.drt_mixing_matrices(d2, n2, C_r, cfg)
                 else:
-                    off = layout.combine(A_off, decoded)
-                diag = jnp.diagonal(A, axis1=1, axis2=2)  # (L, K)
-                selfed = layout.scale_by_layer(diag.T, regions)  # f32 self
-                new_regions = jax.tree.map(jnp.add, off, selfed)
+                    A = _slab_mixing(
+                        layout, decoded, C_r, cfg, algorithm, metro_r, L
+                    )
+                if robust_on:
+                    A = _rw_dense(A)
+                eye = jnp.eye(K, dtype=A.dtype)
+                A_off = A * (1.0 - eye)[None]
+                with obs_profiling.scope(obs, "consensus.combine"):
+                    if use_kernels:
+                        # codec outside the fused slab_encode_combine family
+                        # (e.g. a custom cast dtype): keep the PR-4
+                        # whole-slab combine kernel rather than silently
+                        # ignoring use_kernels
+                        off = _combine_slab_kernels(layout, A_off, decoded)
+                    else:
+                        off = layout.combine(A_off, decoded)
+                    diag = jnp.diagonal(A, axis1=1, axis2=2)  # (L, K)
+                    selfed = layout.scale_by_layer(diag.T, regions)  # f32 self
+                    new_regions = jax.tree.map(jnp.add, off, selfed)
         mom_sq = jnp.zeros((), jnp.float32)
         if use_mom:
             mom = jax.tree.map(
@@ -1317,11 +1556,20 @@ def gather_consensus_rounds(
             A = jnp.where(act, A, A_prev)
             if use_mom:
                 prev = jax.tree.map(lambda o, p: jnp.where(act, o, p), regions, prev)
+            if use_stale:
+                pubprev = jax.tree.map(
+                    lambda o, p: jnp.where(act, o, p), regions, pubprev
+                )
             if obs is not None:
                 mom_sq = jnp.where(act, mom_sq, 0.0)
-        elif use_mom:
-            prev = regions
+        else:
+            if use_mom:
+                prev = regions
+            if use_stale:
+                pubprev = regions
         new_ctl = ()
+        if use_stale:
+            new_ctl += (pubprev,)
         if use_mom:
             new_ctl += (prev,)
         if use_adapt:
@@ -1341,7 +1589,12 @@ def gather_consensus_rounds(
             )
         else:
             ef = jnp.zeros((), jnp.float32)
-        send = jnp.mean(obs_metrics.slab_wire_send_bytes(wire_codec, layout, wire))
+        if exact:
+            send = jnp.asarray(idb, jnp.float32)
+        else:
+            send = jnp.mean(
+                obs_metrics.slab_wire_send_bytes(wire_codec, layout, wire)
+            )
         if use_adapt:
             eff_rounds = eff
             send_w = jnp.where(act, send, 0.0)
@@ -1360,10 +1613,22 @@ def gather_consensus_rounds(
             edges=obs_metrics.edge_count(C_r if C_r is not None else metro_r),
             effective_rounds=eff_rounds,
             momentum_norm=mom_sq,
+            suspicion=obs_metrics.suspicion_from_A(
+                A, C_r if C_r is not None else metro_r
+            ),
+            byzantine_weight_mass=(
+                obs_metrics.byzantine_weight_mass(A, f_mask[r])
+                if use_atk
+                else jnp.zeros((), jnp.float32)
+            ),
         )
         return (new_regions, new_res, A, *new_ctl), m
 
-    coded_ctl0 = ((regions,) if use_mom else ()) + ctl0
+    coded_ctl0 = (
+        ((regions,) if use_stale else ())
+        + ((regions,) if use_mom else ())
+        + ctl0
+    )
     (regions, res, A_last, *_), metrics = _scan_rounds(
         coded_body,
         (regions, res if stateful else (), A0, *coded_ctl0),
@@ -1531,6 +1796,13 @@ class PermuteConsensus:
     # (one D-sized psum per round, the same price the obs disagreement pays)
     momentum: float = 0.0
     round_tol: float | None = None
+    # robust aggregation — trust clipping/temperature applied to the local
+    # mixing column (same semantics as gather_consensus_rounds: clip excess
+    # moves to the self weight, columns stay stochastic).  Fault INJECTION
+    # is gather-only: the permute engine never holds the (K, D) stack, so
+    # Byzantine publication faults belong on consensus_impl='gather'.
+    trust_clip: float | None = None
+    trust_temp: float | None = None
 
     def _round_topology(self, start_round: int, r: int) -> Topology:
         if self.schedule is None:
@@ -1582,7 +1854,7 @@ class PermuteConsensus:
             w_nbrs = jnp.where(mask[:, None], M[srcs, my][:, None], 0.0)
             w_nbrs = jnp.broadcast_to(w_nbrs, (n_nbrs, L))
             w_self = jnp.broadcast_to(M[my, my][None], (L,))
-            return w_self, w_nbrs
+            return self._reweight(w_self, w_nbrs)
         kappa = self.cfg.kappa
         N = self.cfg.resolve_N(topo.num_agents)
         log_prod = jnp.sum(jnp.log1p(d2 / (n2 + kappa)), axis=1, keepdims=True) + (
@@ -1614,7 +1886,16 @@ class PermuteConsensus:
         m = jnp.max(log_all, axis=0, keepdims=True)
         ex = jnp.exp(log_all - m)
         a_all = ex / jnp.sum(ex, axis=0, keepdims=True)  # (1+n_nbrs, L)
-        return a_all[0], a_all[1:]
+        return self._reweight(a_all[0], a_all[1:])
+
+    def _reweight(self, w_self, w_nbrs):
+        """Trust clipping/temperature on the local mixing column; identity
+        (no extra ops in the trace) when both knobs are off."""
+        if self.trust_clip is None and self.trust_temp is None:
+            return w_self, w_nbrs
+        return faults_robust.reweight_local(
+            w_self, w_nbrs, self.trust_clip, self.trust_temp
+        )
 
     def __call__(
         self,
@@ -1650,8 +1931,14 @@ class PermuteConsensus:
                 f"PermuteConsensus needs rounds >= 1, got {rounds}; skip the "
                 "call entirely for a consensus-free step"
             )
+        if not 0.0 <= float(self.momentum) < 1.0:
+            raise ValueError(
+                f"consensus momentum must be in [0, 1), got {self.momentum}; "
+                "the heavy-ball recurrence diverges at beta >= 1"
+            )
         if self.round_tol is not None and not float(self.round_tol) > 0.0:
             raise ValueError(f"round_tol must be > 0, got {self.round_tol}")
+        faults_robust.validate_trust_knobs(self.trust_clip, self.trust_temp)
         if self.schedule is not None:
             if not isinstance(start_round, (int, np.integer)):
                 raise TypeError(
@@ -1801,6 +2088,11 @@ class PermuteConsensus:
                     ),
                     effective_rounds=jnp.asarray(eff_rounds, jnp.float32),
                     momentum_norm=jnp.asarray(mom_sq, jnp.float32),
+                    # gather-engine fields: the permute engine only sees its
+                    # own column of A, so the received-weight audit is not
+                    # computable from a single shard
+                    suspicion=jnp.zeros((K_glob,), jnp.float32),
+                    byzantine_weight_mass=jnp.zeros((), jnp.float32),
                 )
 
         static = self.schedule is None or getattr(self.schedule, "static", False)
@@ -1948,7 +2240,7 @@ class PermuteConsensus:
             metrics = (
                 obs_metrics.stack_metrics(obs_ms)
                 if obs_ms
-                else obs_metrics.empty_metrics(part.num_layers)
+                else obs_metrics.empty_metrics(part.num_layers, K_glob)
             )
         if has_codec:
             if stateful:
@@ -2051,6 +2343,9 @@ class PermuteConsensus:
                     ),
                     effective_rounds=jnp.asarray(eff_rounds, jnp.float32),
                     momentum_norm=jnp.asarray(mom_sq, jnp.float32),
+                    # gather-engine fields (see the slab-path comment)
+                    suspicion=jnp.zeros((K_glob,), jnp.float32),
+                    byzantine_weight_mass=jnp.zeros((), jnp.float32),
                 )
 
         new_state = codec_state
@@ -2171,7 +2466,7 @@ class PermuteConsensus:
             metrics = (
                 obs_metrics.stack_metrics(obs_ms)
                 if obs_ms
-                else obs_metrics.empty_metrics(part.num_layers)
+                else obs_metrics.empty_metrics(part.num_layers, K_glob)
             )
         if has_codec:
             state0 = new_state if new_state is not None else ()

@@ -25,6 +25,7 @@ from repro.comm import WireCodec, init_comm_state, make_codec
 from repro.core.consensus import Algorithm, ConsensusPath, gather_consensus_rounds
 from repro.core.drt import DRTConfig
 from repro.core.dynamic import (
+    StaticSchedule,
     edge_stacks_from_topology,
     make_round_policy,
     make_schedule,
@@ -80,6 +81,36 @@ class TrainerConfig:
     # fixed rounds; an adaptive policy still traces max_rounds (compile O(1)
     # in rounds) but gates each round on the carried disagreement
     rounds_policy: object | None = None
+    # -- robustness (repro.faults) -----------------------------------------
+    # Byzantine agent fraction (floor(byzantine * K) seeded victims publish
+    # through fault_model every round) and the attack spec ("sign_flip",
+    # "gauss:<sigma>", "cgauss:<sigma>", "scale:<c>", "constant[:<v>]").
+    # Both default off; byzantine > 0 requires a fault_model and vice versa.
+    byzantine: float = 0.0
+    fault_model: str | None = None
+    # seed for fault membership / stochastic attacks / wire-fault tables
+    # (independent of the codec rng)
+    fault_seed: int = 0
+    # wire faults: per-agent stale-iterate delivery probability and per-edge
+    # symmetric message-drop probability (drop wraps the schedule in a
+    # repro.faults.DropSchedule; dropped edges renormalize like churn)
+    stale: float = 0.0
+    drop: float = 0.0
+    # trust reweighting of the mixing weights (clip caps any neighbour's
+    # column entry, excess to self; temp < 1 sharpens) and the combine rule
+    # ("drt" | "trimmed:<f>" | "median") — all default off / "drt" and then
+    # trace today's exact program
+    trust_clip: float | None = None
+    trust_temp: float | None = None
+    combine: str = "drt"
+
+    def __post_init__(self):
+        if not 0.0 <= float(self.consensus_momentum) < 1.0:
+            raise ValueError(
+                "consensus_momentum must be in [0, 1), got "
+                f"{self.consensus_momentum}; the heavy-ball recurrence "
+                "diverges at beta >= 1"
+            )
 
 
 class DecentralizedTrainer:
@@ -118,6 +149,28 @@ class DecentralizedTrainer:
             # fast path (bit-identical) on the schedule's graph
             mix_topo = self.schedule.topology_at(0)
             self.schedule = None
+        # deferred import: repro.faults.wire subclasses TopologySchedule, so
+        # a module-level import here would close a cycle through
+        # repro.core.__init__
+        from repro.faults import DropSchedule, make_fault_plan
+
+        self.faults = make_fault_plan(
+            self.K,
+            byzantine=cfg.byzantine,
+            fault_model=cfg.fault_model,
+            stale=cfg.stale,
+            seed=cfg.fault_seed,
+        )
+        if cfg.drop > 0.0:
+            # message drop is a schedule transform: wrap whatever graph
+            # sequence is in force (the static topology included) so the
+            # engines renormalize dropped edges exactly like churn
+            base = (
+                self.schedule
+                if self.schedule is not None
+                else StaticSchedule(mix_topo)
+            )
+            self.schedule = DropSchedule(base, cfg.drop, seed=cfg.fault_seed)
         self._C = jnp.asarray(mix_topo.c_matrix(), jnp.float32)
         self._metropolis = jnp.asarray(mix_topo.metropolis(), jnp.float32)
         self._mix_topo = mix_topo
@@ -254,6 +307,14 @@ class DecentralizedTrainer:
             use_kernels=self.cfg.use_kernels,
             momentum=self.cfg.consensus_momentum,
             round_tol=self._round_tol,
+            faults=(
+                self.faults.realize(state.step * rounds, rounds)
+                if self.faults is not None
+                else None
+            ),
+            trust_clip=self.cfg.trust_clip,
+            trust_temp=self.cfg.trust_temp,
+            combine=self.cfg.combine,
             obs=obs,
         )
         if obs is None:

@@ -1,0 +1,60 @@
+"""Byzantine fault injection and trust-robust consensus.
+
+Subpackages:
+
+- :mod:`repro.faults.models` — attack models (``FaultModel`` protocol:
+  sign_flip / gauss / cgauss / scale / constant)
+- :mod:`repro.faults.mask` — seeded Byzantine-membership tables with
+  bit-consistent traced/host views
+- :mod:`repro.faults.wire` — wire faults (per-edge message drop as a
+  ``TopologySchedule`` wrapper, per-agent stale-iterate delivery)
+- :mod:`repro.faults.robust` — trust clipping/temperature reweighting of
+  the DRT/Metropolis mixing weights plus trimmed-mean/median combines
+- :mod:`repro.faults.plan` — ``FaultPlan`` (host) → ``FaultRealization``
+  (traced) bridging into the consensus engines
+"""
+
+from repro.faults.mask import ByzantineMask
+from repro.faults.models import (
+    ConstantFault,
+    FaultModel,
+    GaussFault,
+    ScaleFault,
+    SignFlip,
+    apply_fault_regions,
+    apply_fault_tree,
+    make_fault_model,
+)
+from repro.faults.plan import FaultPlan, FaultRealization, make_fault_plan
+from repro.faults.robust import (
+    parse_combine,
+    reweight_dense,
+    reweight_edge,
+    reweight_local,
+    robust_combine,
+    support_uniform,
+)
+from repro.faults.wire import DropSchedule, StaleMask
+
+__all__ = [
+    "ByzantineMask",
+    "ConstantFault",
+    "DropSchedule",
+    "FaultModel",
+    "FaultPlan",
+    "FaultRealization",
+    "GaussFault",
+    "ScaleFault",
+    "SignFlip",
+    "StaleMask",
+    "apply_fault_regions",
+    "apply_fault_tree",
+    "make_fault_model",
+    "make_fault_plan",
+    "parse_combine",
+    "reweight_dense",
+    "reweight_edge",
+    "reweight_local",
+    "robust_combine",
+    "support_uniform",
+]

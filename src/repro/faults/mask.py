@@ -1,0 +1,78 @@
+"""Seeded Byzantine-membership tables with bit-consistent traced/host views.
+
+Follows the ``TopologySchedule`` host-table contract: realizations are drawn
+once on the host from ``np.random.SeedSequence(entropy=seed, spawn_key=(TAG, t))``
+into a cached numpy table, the traced view indexes ``jnp.asarray(table)`` by
+``t % cycle`` (works under tracing), and the host view slices the same table —
+so the mask an attack sees inside a scanned round-set is bit-identical to what
+benchmarks and tests read back on the host.
+
+Spawn-key tags keep the fault streams disjoint from the schedule streams:
+gossip uses ``(t,)``, churn ``(1, t)``; Byzantine membership takes ``(2, t)``
+(wire faults in ``repro.faults.wire`` take ``(3, t)`` / ``(4, t)``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ByzantineMask"]
+
+_BYZ_TAG = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class ByzantineMask:
+    """Static-or-scheduled Byzantine membership over K agents.
+
+    Exactly ``floor(fraction * K)`` agents are Byzantine at every round.
+    ``cycle=1`` (the default) freezes one membership for all time — the
+    static omnode-style scenario; ``cycle>1`` re-draws membership per round
+    index modulo the cycle (an adaptive adversary that migrates).
+    """
+
+    K: int
+    fraction: float
+    seed: int = 0
+    cycle: int = 1
+
+    def __post_init__(self):
+        if self.K < 1:
+            raise ValueError(f"ByzantineMask needs K >= 1, got {self.K}")
+        if not 0.0 <= self.fraction < 1.0:
+            raise ValueError(f"byzantine fraction must be in [0, 1), got {self.fraction}")
+        if self.cycle < 1:
+            raise ValueError(f"ByzantineMask cycle must be >= 1, got {self.cycle}")
+
+    @property
+    def n_byzantine(self) -> int:
+        return int(np.floor(self.fraction * self.K))
+
+    @cached_property
+    def _table(self) -> np.ndarray:
+        out = np.zeros((self.cycle, self.K), dtype=bool)
+        n = self.n_byzantine
+        for t in range(self.cycle):
+            rng = np.random.default_rng(
+                np.random.SeedSequence(entropy=self.seed, spawn_key=(_BYZ_TAG, t))
+            )
+            idx = rng.choice(self.K, size=n, replace=False)
+            out[t, idx] = True
+        return out
+
+    def mask_at(self, t: int) -> np.ndarray:
+        """Host view: (K,) bool membership at round index ``t``."""
+        return self._table[int(t) % self.cycle]
+
+    def mask_stacks(self, start, rounds: int) -> jnp.ndarray:
+        """Traced view: (rounds, K) bool stack for rounds ``start..start+rounds``.
+
+        ``start`` may be traced (e.g. ``step * rounds`` inside a scanned
+        training chunk); the modulo indexing keeps it shape-static.
+        """
+        t = jnp.asarray(start) + jnp.arange(rounds)
+        return jnp.asarray(self._table)[t % self.cycle]

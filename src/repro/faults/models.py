@@ -1,0 +1,179 @@
+"""Byzantine attack models: the ``FaultModel`` protocol and realizations.
+
+A fault model rewrites the *published* view of a masked agent's iterate
+before it is encoded onto the wire, so the poisoned traffic flows through
+every codec and both DRT phases exactly like honest traffic.  The agent's
+own self term in the combine always uses its true iterate — a Byzantine
+agent lies to its neighbours, not to itself.
+
+Models are applied to arrays with an explicit agent axis (slab regions are
+``(n_slots, K, s_pad)`` → ``axis=1``; tree leaves are ``(K, ...)`` →
+``axis=0``) under a ``(K,)`` boolean membership mask.  Stochastic models
+(``gauss`` / ``cgauss``) draw from a dedicated fault RNG key, folded per
+round and per region/leaf, so realizations are deterministic given
+``fault_seed`` and independent of the codec RNG stream.
+
+Spec grammar (``make_fault_model``):
+
+- ``sign_flip``        — publish ``-x`` (classic sign-flipping attack)
+- ``gauss:<sigma>``    — publish ``x + sigma * N(0, I)``, independent per agent
+- ``cgauss:<sigma>``   — colluding variant: all Byzantine agents add the
+  *same* noise draw (a coordinated push in one random direction)
+- ``scale:<c>``        — publish ``c * x`` (blow-up / wither attack)
+- ``constant[:<v>]``   — publish the constant ``v`` everywhere (the omnode
+  "lie"; colluding by construction, default ``v = 0``)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "FaultModel",
+    "SignFlip",
+    "GaussFault",
+    "ScaleFault",
+    "ConstantFault",
+    "make_fault_model",
+    "apply_fault_regions",
+    "apply_fault_tree",
+]
+
+
+def _agent_broadcast(mask: jax.Array, ndim: int, axis: int) -> jax.Array:
+    """Reshape a (K,) mask so it broadcasts along ``axis`` of an ndim array."""
+    shape = [1] * ndim
+    shape[axis] = mask.shape[0]
+    return jnp.reshape(mask, shape)
+
+
+@runtime_checkable
+class FaultModel(Protocol):
+    """Rewrites the published view of masked agents' iterates."""
+
+    name: str
+
+    def apply(self, x: jax.Array, mask: jax.Array, key: jax.Array, axis: int = 0) -> jax.Array:
+        """Return ``x`` with rows selected by ``mask`` (along ``axis``) replaced
+        by the faulted publication.  Must be a no-op where ``mask`` is False."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class SignFlip:
+    """Publish the negated iterate: the classic sign-flipping attack."""
+
+    name: str = dataclasses.field(default="sign_flip", init=False)
+
+    def apply(self, x, mask, key, axis=0):
+        del key
+        return jnp.where(_agent_broadcast(mask, x.ndim, axis), -x, x)
+
+
+@dataclasses.dataclass(frozen=True)
+class GaussFault:
+    """Publish ``x + sigma * N(0, I)``; ``collude=True`` shares one draw
+    across all Byzantine agents (a coordinated random push)."""
+
+    sigma: float
+    collude: bool = False
+
+    def __post_init__(self):
+        if not self.sigma > 0.0:
+            raise ValueError(f"gauss fault sigma must be > 0, got {self.sigma}")
+
+    @property
+    def name(self) -> str:
+        return f"{'cgauss' if self.collude else 'gauss'}:{self.sigma:g}"
+
+    def apply(self, x, mask, key, axis=0):
+        shape = list(x.shape)
+        if self.collude:
+            shape[axis] = 1
+        noise = self.sigma * jax.random.normal(key, tuple(shape), jnp.float32)
+        faulted = (x.astype(jnp.float32) + noise).astype(x.dtype)
+        return jnp.where(_agent_broadcast(mask, x.ndim, axis), faulted, x)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleFault:
+    """Publish ``c * x`` — blow-up (|c| > 1) or wither (|c| < 1) attack."""
+
+    c: float
+
+    @property
+    def name(self) -> str:
+        return f"scale:{self.c:g}"
+
+    def apply(self, x, mask, key, axis=0):
+        del key
+        faulted = (jnp.float32(self.c) * x.astype(jnp.float32)).astype(x.dtype)
+        return jnp.where(_agent_broadcast(mask, x.ndim, axis), faulted, x)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstantFault:
+    """Publish the constant ``value`` everywhere (the omnode "lie")."""
+
+    value: float = 0.0
+
+    @property
+    def name(self) -> str:
+        return f"constant:{self.value:g}"
+
+    def apply(self, x, mask, key, axis=0):
+        del key
+        faulted = jnp.full_like(x, self.value)
+        return jnp.where(_agent_broadcast(mask, x.ndim, axis), faulted, x)
+
+
+def make_fault_model(spec) -> FaultModel:
+    """Parse a fault-model spec (see module docstring) into a ``FaultModel``.
+
+    Accepts an already-built model (anything with ``.apply``) unchanged.
+    """
+    if hasattr(spec, "apply"):
+        return spec
+    if not isinstance(spec, str):
+        raise ValueError(f"fault model spec must be a string or FaultModel, got {spec!r}")
+    head, _, rest = spec.partition(":")
+    if head == "sign_flip":
+        return SignFlip()
+    if head in ("gauss", "cgauss"):
+        if not rest:
+            raise ValueError(f"'{head}' fault needs a sigma, e.g. '{head}:0.5'")
+        return GaussFault(sigma=float(rest), collude=head == "cgauss")
+    if head == "scale":
+        if not rest:
+            raise ValueError("'scale' fault needs a factor, e.g. 'scale:10'")
+        return ScaleFault(c=float(rest))
+    if head == "constant":
+        return ConstantFault(value=float(rest) if rest else 0.0)
+    raise ValueError(
+        f"unknown fault model {spec!r} "
+        "(expected sign_flip | gauss:<sigma> | cgauss:<sigma> | scale:<c> | constant[:<v>])"
+    )
+
+
+def apply_fault_regions(model: FaultModel, regions, mask: jax.Array, key: jax.Array):
+    """Apply ``model`` to every slab region (agent axis 1), one folded key each."""
+    return tuple(
+        model.apply(reg, mask, jax.random.fold_in(key, i), axis=1)
+        for i, reg in enumerate(regions)
+    )
+
+
+def apply_fault_tree(model: FaultModel, tree, mask: jax.Array, key: jax.Array):
+    """Apply ``model`` to every floating leaf of an agent-stacked tree (axis 0)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    out = []
+    for i, leaf in enumerate(leaves):
+        if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating):
+            out.append(model.apply(leaf, mask, jax.random.fold_in(key, i), axis=0))
+        else:
+            out.append(leaf)
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,102 @@
+"""Fault plans: the host-side bundle a trainer owns, and the traced
+per-round-set realization the consensus engines consume.
+
+A :class:`FaultPlan` is built once (from ``TrainerConfig`` fields or
+directly) and holds the seeded host tables; :meth:`FaultPlan.realize`
+slices them into a :class:`FaultRealization` — plain traced arrays indexed
+by round inside the scanned round-set — keyed on the global round counter
+so scanned training chunks stay deterministic and resumable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.faults.mask import ByzantineMask
+from repro.faults.models import FaultModel, make_fault_model
+from repro.faults.wire import StaleMask
+
+__all__ = ["FaultPlan", "FaultRealization", "make_fault_plan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultRealization:
+    """Per-round-set fault arrays consumed inside a consensus scan.
+
+    ``mask`` / ``stale`` are ``(rounds, K)`` bool stacks indexed by the
+    traced round counter ``r``; ``key`` seeds stochastic fault models
+    (folded per round and per region/leaf).
+    """
+
+    model: FaultModel | None
+    mask: jax.Array | None
+    stale: jax.Array | None
+    key: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Host-side fault configuration: attack model + membership + wire faults."""
+
+    model: FaultModel | None = None
+    mask: ByzantineMask | None = None
+    stale: StaleMask | None = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if (self.model is None) != (self.mask is None):
+            raise ValueError(
+                "FaultPlan needs model and mask together: a fault model without "
+                "Byzantine membership (or vice versa) is underspecified"
+            )
+
+    @property
+    def enabled(self) -> bool:
+        return self.mask is not None or self.stale is not None
+
+    def realize(self, start_round, rounds: int) -> FaultRealization | None:
+        """Traced realization for rounds ``start_round .. start_round+rounds``;
+        ``start_round`` may be traced.  Returns None when nothing is enabled,
+        so a disabled plan keeps the faults-off jaxpr."""
+        if not self.enabled:
+            return None
+        return FaultRealization(
+            model=self.model,
+            mask=self.mask.mask_stacks(start_round, rounds) if self.mask is not None else None,
+            stale=self.stale.mask_stacks(start_round, rounds) if self.stale is not None else None,
+            key=jax.random.key(self.seed),
+        )
+
+
+def make_fault_plan(
+    K: int,
+    *,
+    byzantine: float = 0.0,
+    fault_model=None,
+    stale: float = 0.0,
+    seed: int = 0,
+) -> FaultPlan | None:
+    """Build a :class:`FaultPlan` from trainer-level knobs (None if all off).
+
+    ``byzantine > 0`` requires a ``fault_model`` spec — there is no silent
+    default attack.
+    """
+    if byzantine <= 0.0 and stale <= 0.0 and fault_model is None:
+        return None
+    if byzantine > 0.0 and fault_model is None:
+        raise ValueError(
+            "byzantine > 0 needs a fault model (e.g. fault_model='sign_flip')"
+        )
+    if fault_model is not None and byzantine <= 0.0:
+        raise ValueError(
+            f"fault model {fault_model!r} needs byzantine > 0 to select victims"
+        )
+    model = make_fault_model(fault_model) if fault_model is not None else None
+    return FaultPlan(
+        model=model,
+        mask=ByzantineMask(K, byzantine, seed=seed) if byzantine > 0.0 else None,
+        stale=StaleMask(K, stale, seed=seed) if stale > 0.0 else None,
+        seed=seed,
+    )

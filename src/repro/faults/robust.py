@@ -1,0 +1,187 @@
+"""Robust-aggregation primitives: trust reweighting and non-DRT combines.
+
+Trust reweighting post-processes the eq.12-14 mixing weights (or the
+Metropolis weights) while keeping every column stochastic:
+
+- **temperature** (``temp`` in (0, 1] sharpens): each column's off-diagonal
+  entries are raised to ``1/temp`` and renormalized to the *same* total
+  off-diagonal mass — trust concentrates on the lowest-d2 (most similar)
+  neighbours without changing how much an agent listens overall.
+- **clipping** (``clip``): caps any single neighbour's column entry at
+  ``clip``; the excess mass moves to the agent's own diagonal entry.  This
+  is the Byzantine defense: eq.14's Lemma-1 floor guarantees every
+  neighbour — poisoned or not — at least ``1/((K-1)N+1)`` weight, and the
+  clip bounds how much a lying neighbour can inject on top of DRT's
+  natural down-weighting.
+
+The robust combines (coordinate-wise trimmed mean and median over the
+closed neighbourhood) are the classical non-DRT baselines; they ignore
+mixing weights entirely and operate on the decoded published values.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "parse_combine",
+    "validate_trust_knobs",
+    "reweight_dense",
+    "reweight_edge",
+    "reweight_local",
+    "robust_combine",
+    "support_uniform",
+]
+
+_TINY = 1e-12
+_BIG = 1e30  # masked-sort sentinel: finite so 0-weight products stay 0
+
+
+def parse_combine(spec) -> tuple:
+    """Parse a combine spec into ``(kind, frac)``.
+
+    Grammar: ``drt`` (default DRT/Metropolis weighted combine) |
+    ``trimmed:<f>`` (coordinate-wise trimmed mean, trimming the ``f``
+    fraction from each end of the neighbourhood) | ``median``.
+    """
+    if spec is None or spec == "drt":
+        return ("drt", None)
+    if spec == "median":
+        return ("median", None)
+    head, _, rest = str(spec).partition(":")
+    if head == "trimmed":
+        if not rest:
+            raise ValueError("'trimmed' combine needs a fraction, e.g. 'trimmed:0.25'")
+        f = float(rest)
+        if not 0.0 <= f < 0.5:
+            raise ValueError(f"trimmed fraction must be in [0, 0.5), got {f}")
+        return ("trimmed", f)
+    raise ValueError(
+        f"unknown combine {spec!r} (expected drt | trimmed:<f> | median)"
+    )
+
+
+def validate_trust_knobs(clip, temp):
+    if clip is not None and not 0.0 < clip <= 1.0:
+        raise ValueError(f"trust_clip must be in (0, 1], got {clip}")
+    if temp is not None and not temp > 0.0:
+        raise ValueError(f"trust_temp must be > 0, got {temp}")
+
+
+def reweight_dense(A: jax.Array, clip=None, temp=None) -> jax.Array:
+    """Temperature-sharpen then clip a column-stochastic (..., K, K) mixing
+    stack ``A[..., l, k]`` (weight agent k applies to agent l); clip excess
+    moves to the diagonal so columns stay stochastic."""
+    validate_trust_knobs(clip, temp)
+    K = A.shape[-1]
+    eye = jnp.eye(K, dtype=A.dtype)
+    off = A * (1.0 - eye)
+    diag = A * eye
+    if temp is not None:
+        mass = jnp.sum(off, axis=-2, keepdims=True)
+        p = off / jnp.maximum(mass, _TINY)
+        p = p ** (1.0 / temp)
+        p = p / jnp.maximum(jnp.sum(p, axis=-2, keepdims=True), _TINY)
+        off = p * mass
+    if clip is not None:
+        over = jnp.maximum(off - clip, 0.0)
+        off = jnp.minimum(off, clip)
+        diag = diag + eye * jnp.sum(over, axis=-2, keepdims=True)
+    return off + diag
+
+
+def reweight_edge(A_self, A_e, dst, K: int, clip=None, temp=None):
+    """Edge-factorized counterpart of :func:`reweight_dense`.
+
+    ``A_self`` is (L, K) diagonal weights, ``A_e`` is (L, E) directed edge
+    weights keyed by destination ``dst`` (E,); padding edges carry weight 0
+    and stay 0.  Returns reweighted ``(A_self, A_e)``.
+    """
+    validate_trust_knobs(clip, temp)
+    L = A_self.shape[0]
+    if temp is not None:
+        mass = jnp.zeros((L, K), A_e.dtype).at[:, dst].add(A_e)
+        p = A_e / jnp.maximum(mass[:, dst], _TINY)
+        p = p ** (1.0 / temp)
+        psum = jnp.zeros((L, K), A_e.dtype).at[:, dst].add(p)
+        A_e = p / jnp.maximum(psum[:, dst], _TINY) * mass[:, dst]
+    if clip is not None:
+        over = jnp.maximum(A_e - clip, 0.0)
+        A_e = jnp.minimum(A_e, clip)
+        A_self = A_self + jnp.zeros((L, K), A_e.dtype).at[:, dst].add(over)
+    return A_self, A_e
+
+
+def reweight_local(w_self, w_nbrs, clip=None, temp=None):
+    """Per-shard counterpart for the permute engine: ``w_self`` (L,) own
+    weight, ``w_nbrs`` (n, L) neighbour weights (zeros for phantom pairs,
+    which stay zero).  Returns reweighted ``(w_self, w_nbrs)``."""
+    validate_trust_knobs(clip, temp)
+    if temp is not None:
+        mass = jnp.sum(w_nbrs, axis=0)
+        p = w_nbrs / jnp.maximum(mass, _TINY)[None]
+        p = p ** (1.0 / temp)
+        p = p / jnp.maximum(jnp.sum(p, axis=0), _TINY)[None]
+        w_nbrs = p * mass[None]
+    if clip is not None:
+        over = jnp.maximum(w_nbrs - clip, 0.0)
+        w_nbrs = jnp.minimum(w_nbrs, clip)
+        w_self = w_self + jnp.sum(over, axis=0)
+    return w_self, w_nbrs
+
+
+def support_uniform(C: jax.Array, num_layers: int) -> jax.Array:
+    """(L, K, K) column-stochastic uniform weights over the support of ``C``
+    — the telemetry stand-in mixing matrix for the non-DRT combines."""
+    S = (jnp.asarray(C) > 0).astype(jnp.float32)
+    A = S / jnp.maximum(jnp.sum(S, axis=0, keepdims=True), 1.0)
+    return jnp.broadcast_to(A, (num_layers, *A.shape))
+
+
+def robust_combine(C: jax.Array, regions, kind: str, frac):
+    """Coordinate-wise trimmed-mean / median combine over slab regions.
+
+    For every destination agent ``k``, each coordinate is aggregated over
+    the *closed* neighbourhood ``{l : C[l, k] > 0}`` (the published —
+    decoded — values, own value included) by a masked sort along the agent
+    axis: non-members sort to the top under a finite sentinel and receive
+    zero rank weight.  ``kind='trimmed'`` drops ``floor(frac * n_k)`` values
+    from each end (guarded to keep at least one); ``kind='median'`` keeps
+    the middle rank(s).  Dense in K — the robust-baseline analysis path, not
+    a sparse hot path.
+    """
+    S = jnp.asarray(C) > 0
+    K = S.shape[0]
+    deg = jnp.sum(S, axis=0).astype(jnp.int32)
+    idx = jnp.arange(K)
+
+    def rank_weights(n_k):
+        if kind == "trimmed":
+            g = jnp.minimum(
+                jnp.floor(frac * n_k).astype(jnp.int32),
+                jnp.maximum((n_k - 1) // 2, 0),
+            )
+            w = ((idx >= g) & (idx < n_k - g)).astype(jnp.float32)
+        elif kind == "median":
+            lo = (n_k - 1) // 2
+            hi = n_k // 2
+            w = ((idx == lo) | (idx == hi)).astype(jnp.float32)
+        else:
+            raise ValueError(f"unknown robust combine kind {kind!r}")
+        return w / jnp.maximum(jnp.sum(w), 1.0)
+
+    W = jax.vmap(rank_weights)(deg)  # (K, K) rank weights per destination
+
+    out = []
+    for region in regions:
+        x = region.astype(jnp.float32)  # (n_slots, K, s_pad)
+
+        def per_dst(mask_col, w_col):
+            v = jnp.where(mask_col[None, :, None], x, _BIG)
+            v = jnp.sort(v, axis=1)
+            return jnp.tensordot(w_col, v, axes=([0], [1]))
+
+        y = jax.vmap(per_dst)(S.T, W)  # (K, n_slots, s_pad)
+        out.append(jnp.moveaxis(y, 0, 1).astype(region.dtype))
+    return tuple(out)

@@ -1,0 +1,129 @@
+"""Wire faults: per-edge message drop and stale-iterate delivery.
+
+Both are realized from seeded host tables following the
+``TopologySchedule`` bit-consistency contract (see ``repro.faults.mask``
+for the spawn-key tagging convention).
+
+``DropSchedule`` is a :class:`~repro.core.dynamic.TopologySchedule` wrapper:
+a dropped message removes the edge for the round (symmetrically — a detected
+loss downgrades the pair to their self weights, exactly the churn
+renormalization semantics), so the consensus engines need no drop-specific
+code: Metropolis/DRT weights renormalize through the ordinary schedule
+contract, and the sparse ``edge_stacks`` view stays bit-consistent with the
+dense ``mixing_stacks``.
+
+``StaleMask`` marks per-agent stale *senders*: a stale agent's neighbours
+receive its previous-round iterate (the network re-delivers old state — a
+lagging node / async gossip model) which then passes through the current
+round's fault model and codec like any fresh publication.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dynamic import TopologySchedule
+from repro.core.topology import Topology
+
+__all__ = ["DropSchedule", "StaleMask"]
+
+_DROP_TAG = 3
+_STALE_TAG = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class DropSchedule(TopologySchedule):
+    """Per-round symmetric message-drop injector wrapping a base schedule.
+
+    Each round, every realized edge independently drops its message with
+    probability ``drop``; the surviving graph renormalizes like churn.
+    Deterministic per ``(seed, t % cycle)`` on spawn-key stream ``(3, t)`` —
+    disjoint from gossip's ``(t,)`` and churn's ``(1, t)`` so wire faults
+    compose with either under one user-facing seed.
+    """
+
+    base: TopologySchedule
+    drop: float
+    seed: int = 0
+    cycle: int = 64
+
+    def __post_init__(self):
+        if not 0.0 <= self.drop < 1.0:
+            raise ValueError(f"drop probability must be in [0, 1), got {self.drop}")
+        if self.cycle < 1:
+            raise ValueError(f"DropSchedule cycle must be >= 1, got {self.cycle}")
+
+    @property
+    def num_agents(self) -> int:
+        return self.base.num_agents
+
+    @functools.cached_property
+    def _keep_table(self) -> np.ndarray:
+        """(cycle, K, K) bool symmetric message-survival masks (host canonical)."""
+        K = self.base.num_agents
+        out = np.zeros((self.cycle, K, K), dtype=bool)
+        for t in range(self.cycle):
+            rng = np.random.default_rng(
+                np.random.SeedSequence(entropy=self.seed, spawn_key=(_DROP_TAG, t))
+            )
+            keep_u = np.triu(rng.random((K, K)) >= self.drop, k=1)
+            out[t] = keep_u | keep_u.T
+        return out
+
+    def adjacency_at(self, t) -> jnp.ndarray:
+        adj = self.base.adjacency_at(t)
+        keep = jnp.asarray(self._keep_table, jnp.float32)
+        return adj * keep[jnp.asarray(t) % self.cycle]
+
+    def topology_at(self, t: int) -> Topology:
+        base_topo = self.base.topology_at(int(t))
+        adj = base_topo.adjacency & self._keep_table[int(t) % self.cycle]
+        return Topology(f"drop({base_topo.name})@{int(t)}", adj)
+
+    def _host_edge_period(self) -> int:
+        return math.lcm(self.base._host_edge_period(), self.cycle)
+
+
+@dataclasses.dataclass(frozen=True)
+class StaleMask:
+    """Per-agent stale-delivery table: at round ``t``, agent ``k`` is a stale
+    sender with probability ``p`` — its neighbours receive its previous-round
+    iterate instead of the fresh one.  Deterministic per ``(seed, t % cycle)``
+    on spawn-key stream ``(4, t)``."""
+
+    K: int
+    p: float
+    seed: int = 0
+    cycle: int = 64
+
+    def __post_init__(self):
+        if self.K < 1:
+            raise ValueError(f"StaleMask needs K >= 1, got {self.K}")
+        if not 0.0 <= self.p < 1.0:
+            raise ValueError(f"stale probability must be in [0, 1), got {self.p}")
+        if self.cycle < 1:
+            raise ValueError(f"StaleMask cycle must be >= 1, got {self.cycle}")
+
+    @functools.cached_property
+    def _table(self) -> np.ndarray:
+        out = np.zeros((self.cycle, self.K), dtype=bool)
+        for t in range(self.cycle):
+            rng = np.random.default_rng(
+                np.random.SeedSequence(entropy=self.seed, spawn_key=(_STALE_TAG, t))
+            )
+            out[t] = rng.random(self.K) < self.p
+        return out
+
+    def mask_at(self, t: int) -> np.ndarray:
+        """Host view: (K,) bool stale-sender mask at round index ``t``."""
+        return self._table[int(t) % self.cycle]
+
+    def mask_stacks(self, start, rounds: int) -> jnp.ndarray:
+        """Traced view: (rounds, K) bool stack; ``start`` may be traced."""
+        t = jnp.asarray(start) + jnp.arange(rounds)
+        return jnp.asarray(self._table)[t % self.cycle]

@@ -166,6 +166,31 @@ def make_train_step(
         # schedule-free (bit-identical) path on the schedule's graph
         topology = schedule.topology_at(0)
         schedule = None
+    from repro.faults import DropSchedule, make_fault_plan
+
+    fault_plan = make_fault_plan(
+        K,
+        byzantine=tcfg.byzantine,
+        fault_model=tcfg.fault_model,
+        stale=tcfg.stale,
+        seed=tcfg.fault_seed,
+    )
+    use_faults = fault_plan is not None or tcfg.drop > 0.0
+    if consensus_impl == "permute" and (use_faults or tcfg.combine != "drt"):
+        raise ValueError(
+            "fault injection and the robust combines are gather-engine "
+            "features (the permute engine never holds the (K, D) stack to "
+            "mask); use consensus_impl='gather' — trust_clip/trust_temp "
+            "work on either engine"
+        )
+    if tcfg.drop > 0.0:
+        from repro.core.dynamic import StaticSchedule
+
+        schedule = DropSchedule(
+            schedule if schedule is not None else StaticSchedule(topology),
+            tcfg.drop,
+            seed=tcfg.fault_seed,
+        )
     C = jnp.asarray(topology.c_matrix(), jnp.float32)
     metro = jnp.asarray(topology.metropolis(), jnp.float32)
     if codec is None:
@@ -212,6 +237,8 @@ def make_train_step(
             use_kernels=tcfg.use_kernels,
             momentum=tcfg.consensus_momentum,
             round_tol=round_tol,
+            trust_clip=tcfg.trust_clip,
+            trust_temp=tcfg.trust_temp,
         )
         # codec state mirrors the params leaf-for-leaf -> identical sharding
         comm_specs = (
@@ -347,6 +374,16 @@ def make_train_step(
                 use_kernels=tcfg.use_kernels,
                 momentum=tcfg.consensus_momentum,
                 round_tol=round_tol,
+                faults=(
+                    fault_plan.realize(
+                        step * consensus_rounds, consensus_rounds
+                    )
+                    if fault_plan is not None
+                    else None
+                ),
+                trust_clip=tcfg.trust_clip,
+                trust_temp=tcfg.trust_temp,
+                combine=tcfg.combine,
                 obs=obs,
             )
             if obs is None:
@@ -529,6 +566,49 @@ def main(argv=None) -> None:
     ap.add_argument("--schedule-seed", type=int, default=0,
                     help="seed for gossip draws and churn failures")
     ap.add_argument(
+        "--byzantine", type=float, default=0.0,
+        help="Byzantine agent fraction: floor(f * K) seeded agents publish "
+             "through --fault-model every consensus round (requires "
+             "--fault-model; 0.0 = off)",
+    )
+    ap.add_argument(
+        "--fault-model", default=None,
+        help="attack applied to Byzantine publications before encode: "
+             "sign_flip | gauss:<sigma> | cgauss:<sigma> (colluding: one "
+             "shared draw) | scale:<c> | constant[:<v>]",
+    )
+    ap.add_argument(
+        "--fault-seed", type=int, default=0,
+        help="seed for Byzantine membership, stochastic attacks and wire-"
+             "fault tables (independent of the codec rng)",
+    )
+    ap.add_argument(
+        "--drop", type=float, default=0.0,
+        help="per-round probability each edge drops its message (symmetric, "
+             "seeded by --fault-seed; composes with any --schedule)",
+    )
+    ap.add_argument(
+        "--stale", type=float, default=0.0,
+        help="per-round probability an agent's neighbours receive its "
+             "previous-round iterate instead of the fresh one",
+    )
+    ap.add_argument(
+        "--trust-clip", type=float, default=None,
+        help="cap any neighbour's mixing weight at this value (excess trust "
+             "moves to the agent's own iterate) — the DRT Byzantine defense",
+    )
+    ap.add_argument(
+        "--trust-temp", type=float, default=None,
+        help="temperature on the off-diagonal mixing weights (<1 sharpens "
+             "trust differences, >1 flattens them)",
+    )
+    ap.add_argument(
+        "--combine", default="drt",
+        help="combine rule: 'drt' (default, weighted eq.12-14 mixing) | "
+             "'trimmed:<f>' (coordinate-wise trimmed mean) | 'median' — the "
+             "robust non-DRT baselines",
+    )
+    ap.add_argument(
         "--metrics-jsonl", default=None,
         help="enable in-graph consensus telemetry (repro.obs) and append one "
              "JSON record per consensus round to this file: disagreement "
@@ -552,6 +632,12 @@ def main(argv=None) -> None:
             "the consensus engines refuse a zero-round exchange rather than "
             "silently no-op"
         )
+    if not 0.0 <= args.consensus_momentum < 1.0:
+        ap.error(
+            f"--consensus-momentum must be in [0, 1) (got "
+            f"{args.consensus_momentum}); the heavy-ball recurrence diverges "
+            "at beta >= 1"
+        )
 
     bundle = get_bundle(args.arch, num_agents=args.agents)
     topo = make_topology(args.topology, args.agents)
@@ -570,6 +656,14 @@ def main(argv=None) -> None:
         consensus_path=args.consensus_path,
         consensus_momentum=args.consensus_momentum,
         rounds_policy=args.rounds_policy,
+        byzantine=args.byzantine,
+        fault_model=args.fault_model,
+        fault_seed=args.fault_seed,
+        stale=args.stale,
+        drop=args.drop,
+        trust_clip=args.trust_clip,
+        trust_temp=args.trust_temp,
+        combine=args.combine,
     )
     state = init_train_state(bundle, opt, jax.random.key(0), codec=args.codec)
     stream = SyntheticTokenStream(

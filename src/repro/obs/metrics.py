@@ -57,6 +57,21 @@ Field semantics (all f32, leading ``(rounds,)`` axis after stacking):
     Undirected edge count of the round's REALIZED graph (from the support
     matrix C_t) — the schedule-density signal for gossip/churn runs;
     cross-checked against :meth:`TopologySchedule.edge_counts`.
+``suspicion``  (rounds, K)
+    Per-agent received-weight deficit vs the Metropolis baseline on the
+    same realized graph: ``(recv_M - recv_A) / recv_M`` where ``recv`` is
+    the off-diagonal trust mass other agents assign to the agent (mean over
+    layers).  0 = trusted exactly like Metropolis would, -> 1 = the network
+    has stopped listening to this agent (the DRT down-weighting signal
+    under attack), negative = over-trusted.  Zeros on the permute engine
+    (a gather-engine metric) and when telemetry is off.
+``byzantine_weight_mass``
+    Fraction of honest agents' off-diagonal trust mass that lands on
+    masked (Byzantine) sources, averaged over honest receivers and layers
+    — the headline robustness signal.  Under undefended Metropolis this
+    sits at the Byzantine neighbour fraction (~ the Byzantine fraction);
+    a robust combine should push it well below.  0 when no fault mask is
+    active.
 """
 from __future__ import annotations
 
@@ -115,13 +130,20 @@ class ConsensusMetrics(NamedTuple):
     # gated off)
     effective_rounds: jax.Array
     momentum_norm: jax.Array
+    # robustness fields (PR 10): per-agent received-weight deficit vs the
+    # Metropolis baseline ((rounds, K) — zeros on the permute engine) and the
+    # honest trust mass landing on masked Byzantine sources (0 when no fault
+    # mask is active)
+    suspicion: jax.Array
+    byzantine_weight_mass: jax.Array
 
 
-def empty_metrics(num_layers: int) -> ConsensusMetrics:
+def empty_metrics(num_layers: int, num_agents: int) -> ConsensusMetrics:
     """A zero-round metric stack (degenerate engines with no rounds to log)."""
     z = jnp.zeros((0,), F32)
     zl = jnp.zeros((0, num_layers), F32)
-    return ConsensusMetrics(z, zl, zl, z, z, z, z, z, z, z, z)
+    zk = jnp.zeros((0, num_agents), F32)
+    return ConsensusMetrics(z, zl, zl, z, z, z, z, z, z, z, z, zk, z)
 
 
 def stack_metrics(per_round: list) -> ConsensusMetrics:
@@ -207,6 +229,54 @@ def tree_mean_sq_norm(tree_K) -> jax.Array:
     for l in leaves:
         total = total + jnp.sum(jnp.square(l.astype(F32)))
     return total / float(K)
+
+
+def suspicion_from_A(A: jax.Array, support: jax.Array) -> jax.Array:
+    """Per-agent received-weight deficit of realized mixing weights vs the
+    Metropolis baseline on the same graph.
+
+    ``A``: (L, K, K) column-stochastic mixing (``A[p, l, k]`` = weight agent
+    k applies to agent l); ``support``: (K, K) realized support (> 0 where an
+    edge exists this round).  Returns (K,): 0 where the network trusts the
+    agent exactly as Metropolis would, -> 1 where it has stopped listening,
+    negative where the agent is over-trusted.  Isolated agents report 0.
+
+    The Metropolis baseline is rebuilt locally from the support (a 6-line
+    closed form) rather than imported from :mod:`repro.core.dynamic`, keeping
+    this module free of core imports per the zero-cost-disable design rule.
+    """
+    K = support.shape[-1]
+    eye = jnp.eye(K, dtype=bool)
+    adj = ((support > 0.0) & ~eye).astype(F32)
+    deg = jnp.sum(adj, axis=0) + 1.0
+    M0 = adj / jnp.maximum(deg[:, None], deg[None, :])
+    recv_m = jnp.sum(M0, axis=1)  # (K,) off-diagonal mass received per agent
+    a_off = A.astype(F32) * (~eye).astype(F32)
+    recv_a = jnp.mean(jnp.sum(a_off, axis=2), axis=0)
+    return jnp.where(recv_m > 1e-12, (recv_m - recv_a) / jnp.maximum(recv_m, 1e-12), 0.0)
+
+
+def byzantine_weight_mass(A: jax.Array, byz_mask: jax.Array) -> jax.Array:
+    """Fraction of honest agents' TOTAL trust mass (self weight included)
+    landing on masked Byzantine sources, averaged over honest receivers and
+    layers.
+
+    ``A``: (L, K, K) column-stochastic mixing; ``byz_mask``: (K,) bool.
+    The denominator is the full column, not just its off-diagonal part —
+    trust clipping defends precisely by moving neighbour mass onto the
+    diagonal, which must REDUCE this number.  Under undefended Metropolis it
+    sits at the Byzantine neighbour fraction of the graph; clipping bounds
+    it at ``clip * max_byz_neighbours``.
+    """
+    K = byz_mask.shape[0]
+    eye = jnp.eye(K, dtype=A.dtype)
+    a_off = A.astype(F32) * (1.0 - eye)
+    byz = byz_mask.astype(F32)
+    num = jnp.sum(a_off * byz[None, :, None], axis=1)  # (L, K) byz mass into k
+    den = jnp.sum(A.astype(F32), axis=1)  # full column mass (== 1 when stochastic)
+    frac = jnp.mean(num / jnp.maximum(den, 1e-12), axis=0)  # (K,) layer mean
+    w = 1.0 - byz  # average over honest receivers only
+    return jnp.sum(frac * w) / jnp.maximum(jnp.sum(w), 1.0)
 
 
 # ---------------------------------------------------------------------------

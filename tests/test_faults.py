@@ -1,0 +1,484 @@
+"""Byzantine fault injection + trust-robust consensus (repro.faults).
+
+Contract under test:
+
+* seeded fault realizations are DETERMINISTIC and bit-consistent between
+  the host view (``mask_at`` / ``topology_at``) and the traced view
+  (``mask_stacks`` / ``adjacency_at``) — same SeedSequence spawn streams;
+* every fault knob defaults OFF with jaxpr equality (not just numerics) to
+  the pre-fault program, on the slab, tree, and edge paths, with and
+  without codecs/telemetry;
+* an injected attack flows through every consensus path identically: the
+  slab and per-leaf tree oracles agree bit-for-bit, the edge path within
+  float tolerance;
+* trust reweighting keeps mixing columns stochastic and strictly reduces
+  the trust mass a Byzantine cohort captures; trimmed-mean/median combines
+  match hand-built coordinate-wise references;
+* invalid knobs are refused loudly on every surface (plan, trainer config,
+  both engines, launch CLI).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DRTConfig
+from repro.core.consensus import gather_consensus_rounds
+from repro.core.dynamic import StaticSchedule, edge_stacks_from_topology
+from repro.core.packing import build_slab_layout
+from repro.core.topology import ring
+from repro.faults import (
+    ByzantineMask,
+    DropSchedule,
+    FaultPlan,
+    StaleMask,
+    make_fault_model,
+    make_fault_plan,
+)
+from repro.faults.models import apply_fault_regions
+from repro.faults.robust import (
+    parse_combine,
+    reweight_dense,
+    reweight_edge,
+    reweight_local,
+    robust_combine,
+)
+from repro.obs.metrics import ObsConfig, byzantine_weight_mass
+from repro.utils.pytree import LayerPartition
+
+
+def _tree_K(K, scale=1.0, seed=0):
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "embed": {"w": jax.random.normal(k1, (6, 8)) * scale},
+            "out": {"b": jax.random.normal(k2, (8,)) * scale},
+        }
+
+    return jax.vmap(one)(jax.random.split(jax.random.key(seed), K))
+
+
+def _setup(K=8):
+    pK = _tree_K(K)
+    template = jax.tree.map(lambda x: x[0], pK)
+    part = LayerPartition.build(template)
+    layout = build_slab_layout(part, template)
+    return pK, part, layout
+
+
+# ---------------------------------------------------------------------------
+# seeded realizations: host/traced bit identity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7])
+def test_byzantine_mask_traced_matches_host(seed):
+    m = ByzantineMask(8, 0.25, seed=seed, cycle=3)
+    assert m.n_byzantine == 2
+    traced = np.asarray(m.mask_stacks(jnp.asarray(2), 7))
+    host = np.stack([m.mask_at(2 + i) for i in range(7)])
+    np.testing.assert_array_equal(traced, host)
+    # every round has exactly floor(fraction * K) Byzantine agents
+    assert (host.sum(axis=1) == 2).all()
+    # cycle=1 freezes membership for all time
+    s = ByzantineMask(8, 0.25, seed=seed)
+    np.testing.assert_array_equal(s.mask_at(0), s.mask_at(123))
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_stale_mask_traced_matches_host(seed):
+    m = StaleMask(8, 0.3, seed=seed, cycle=5)
+    traced = np.asarray(m.mask_stacks(jnp.asarray(4), 9))
+    host = np.stack([m.mask_at(4 + i) for i in range(9)])
+    np.testing.assert_array_equal(traced, host)
+
+
+def test_mask_streams_disjoint_across_seeds_and_kinds():
+    byz = ByzantineMask(16, 0.25, seed=0, cycle=4)._table
+    assert not np.array_equal(byz, ByzantineMask(16, 0.25, seed=1, cycle=4)._table)
+    # Byzantine membership and stale delivery draw from disjoint spawn
+    # streams under the SAME seed (tags (2, t) vs (4, t))
+    st = StaleMask(16, 0.25, seed=0, cycle=4)._table
+    assert not np.array_equal(byz, st)
+
+
+@pytest.mark.parametrize("seed", [0, 2])
+def test_drop_schedule_traced_matches_host_and_is_symmetric(seed):
+    base = StaticSchedule(ring(8))
+    ds = DropSchedule(base, 0.4, seed=seed, cycle=6)
+    assert ds.num_agents == 8
+    for t in (0, 3, 11):
+        host = ds.topology_at(t).adjacency.astype(np.float32)
+        traced = np.asarray(ds.adjacency_at(jnp.asarray(t)))
+        np.testing.assert_array_equal(traced, host)
+        np.testing.assert_array_equal(host, host.T)  # symmetric drops
+        assert (np.diag(host) == 0).all()
+    # drops are a subgraph of the base topology
+    assert (ds.topology_at(0).adjacency <= base.topology_at(0).adjacency).all()
+
+
+def test_drop_schedule_zero_drop_is_base_graph():
+    base = StaticSchedule(ring(8))
+    ds = DropSchedule(base, 0.0, seed=0)
+    np.testing.assert_array_equal(
+        ds.topology_at(5).adjacency, base.topology_at(5).adjacency
+    )
+
+
+# ---------------------------------------------------------------------------
+# fault models + plans
+# ---------------------------------------------------------------------------
+
+
+def test_make_fault_model_parses_specs():
+    assert make_fault_model("sign_flip").name == "sign_flip"
+    assert make_fault_model("gauss:0.5").sigma == 0.5
+    assert make_fault_model("cgauss:2.0").sigma == 2.0
+    assert make_fault_model("scale:3.0").c == 3.0
+    assert make_fault_model("constant:1.5").value == 1.5
+    m = make_fault_model("sign_flip")
+    assert make_fault_model(m) is m
+    with pytest.raises(ValueError, match="unknown fault model"):
+        make_fault_model("nope")
+
+
+def test_fault_application_is_seeded_and_masked():
+    x = jnp.ones((3, 4, 5))  # (slots, K, s)
+    mask = jnp.asarray([False, True, False, True])
+    key = jax.random.key(0)
+    g = make_fault_model("gauss:1.0")
+    a = apply_fault_regions(g, (x,), mask, key)[0]
+    b = apply_fault_regions(g, (x,), mask, key)[0]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))  # deterministic
+    # honest rows untouched, Byzantine rows perturbed
+    np.testing.assert_array_equal(np.asarray(a[:, 0]), np.asarray(x[:, 0]))
+    assert not np.allclose(np.asarray(a[:, 1]), np.asarray(x[:, 1]))
+    # sign flip is exact on masked rows
+    s = apply_fault_regions(make_fault_model("sign_flip"), (x,), mask, key)[0]
+    np.testing.assert_array_equal(np.asarray(s[:, 1]), -np.ones((3, 5)))
+    np.testing.assert_array_equal(np.asarray(s[:, 0]), np.ones((3, 5)))
+
+
+def test_colluding_gauss_shares_one_draw():
+    x = jnp.zeros((2, 6, 4))
+    mask = jnp.asarray([True, True, False, False, True, False])
+    key = jax.random.key(1)
+    c = apply_fault_regions(make_fault_model("cgauss:1.0"), (x,), mask, key)[0]
+    c = np.asarray(c)
+    # colluders publish the SAME corrupted point
+    np.testing.assert_array_equal(c[:, 0], c[:, 1])
+    np.testing.assert_array_equal(c[:, 0], c[:, 4])
+    # independent gauss does not
+    g = np.asarray(apply_fault_regions(make_fault_model("gauss:1.0"), (x,), mask, key)[0])
+    assert not np.allclose(g[:, 0], g[:, 1])
+
+
+def test_make_fault_plan_validation():
+    assert make_fault_plan(8) is None
+    with pytest.raises(ValueError, match="needs a fault model"):
+        make_fault_plan(8, byzantine=0.25)
+    with pytest.raises(ValueError, match="needs byzantine > 0"):
+        make_fault_plan(8, fault_model="sign_flip")
+    with pytest.raises(ValueError, match="model and mask together"):
+        FaultPlan(model=make_fault_model("sign_flip"))
+    plan = make_fault_plan(8, byzantine=0.25, fault_model="sign_flip")
+    assert plan.enabled and plan.realize(0, 4).mask.shape == (4, 8)
+    stale_only = make_fault_plan(8, stale=0.5)
+    assert stale_only.enabled and stale_only.realize(0, 3).model is None
+
+
+def test_gather_rejects_mismatched_realization():
+    pK, part, layout = _setup()
+    C = jnp.asarray(ring(8).c_matrix(), jnp.float32)
+    plan = make_fault_plan(8, byzantine=0.25, fault_model="sign_flip")
+    with pytest.raises(ValueError, match="realize the plan"):
+        gather_consensus_rounds(
+            part, pK, C, DRTConfig(), rounds=2, layout=layout,
+            faults=plan.realize(0, 3),
+        )
+
+
+# ---------------------------------------------------------------------------
+# faults-off jaxpr identity (zero-cost disable)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("path,codec", [
+    ("slab", None),
+    ("slab", "int8"),
+    ("tree", None),
+    ("edge", "int8"),
+])
+def test_faults_off_is_jaxpr_identical(path, codec):
+    pK, part, layout = _setup()
+    topo = ring(8)
+    C = jnp.asarray(topo.c_matrix(), jnp.float32)
+    kw = dict(rounds=3, layout=layout, path=path, obs=ObsConfig())
+    if path == "edge":
+        kw["edges"] = edge_stacks_from_topology(topo, 3)
+        kw["max_in_degree"] = 2
+    if codec is not None:
+        kw["codec"] = codec
+        kw["rng"] = jax.random.key(0)
+
+    def base(p):
+        return gather_consensus_rounds(part, p, C, DRTConfig(), **kw)
+
+    def with_defaults(p):
+        return gather_consensus_rounds(
+            part, p, C, DRTConfig(), faults=None, trust_clip=None,
+            trust_temp=None, combine="drt", **kw,
+        )
+
+    assert str(jax.make_jaxpr(base)(pK)) == str(jax.make_jaxpr(with_defaults)(pK))
+
+
+# ---------------------------------------------------------------------------
+# attacked consensus: cross-path parity
+# ---------------------------------------------------------------------------
+
+
+def test_slab_tree_edge_fault_parity():
+    pK, part, layout = _setup()
+    topo = ring(8)
+    C = jnp.asarray(topo.c_matrix(), jnp.float32)
+    plan = make_fault_plan(8, byzantine=0.25, fault_model="sign_flip", seed=3)
+    kw = dict(rounds=3, obs=ObsConfig())
+
+    def run(path, **extra):
+        out = gather_consensus_rounds(
+            part, pK, C, DRTConfig(), layout=layout, path=path,
+            faults=plan.realize(0, 3), **kw, **extra,
+        )
+        return out[0], out[3]
+
+    slab, ms = run("slab")
+    tree, mt = run("tree")
+    edge, me = run("edge", edges=edge_stacks_from_topology(topo, 3), max_in_degree=2)
+    for a, b in zip(jax.tree.leaves(slab), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(slab), jax.tree.leaves(edge)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-6, rtol=2e-6)
+    # telemetry agrees too: attacked agents draw suspicion on every path
+    np.testing.assert_allclose(
+        np.asarray(ms.byzantine_weight_mass), np.asarray(mt.byzantine_weight_mass),
+        atol=1e-6,
+    )
+    assert np.asarray(ms.suspicion).shape == (3, 8)  # per-round stacks
+    assert float(np.asarray(ms.byzantine_weight_mass)[-1]) > 0.0
+
+
+def test_attack_changes_output_and_honest_rows_only_prepublish():
+    pK, part, layout = _setup()
+    C = jnp.asarray(ring(8).c_matrix(), jnp.float32)
+    plan = make_fault_plan(8, byzantine=0.25, fault_model="sign_flip")
+    clean = gather_consensus_rounds(
+        part, pK, C, DRTConfig(), rounds=2, layout=layout,
+    )[0]
+    hit = gather_consensus_rounds(
+        part, pK, C, DRTConfig(), rounds=2, layout=layout,
+        faults=plan.realize(0, 2),
+    )[0]
+    diff = sum(
+        float(np.abs(np.asarray(a) - np.asarray(b)).sum())
+        for a, b in zip(jax.tree.leaves(clean), jax.tree.leaves(hit))
+    )
+    assert diff > 0.0
+
+
+# ---------------------------------------------------------------------------
+# trust reweighting + robust combines
+# ---------------------------------------------------------------------------
+
+
+def _col_stochastic(L, K, seed=0):
+    A = jax.random.uniform(jax.random.key(seed), (L, K, K)) + 0.1
+    return A / jnp.sum(A, axis=1, keepdims=True)
+
+
+@pytest.mark.parametrize("clip,temp", [(0.15, None), (None, 0.5), (0.2, 0.7)])
+def test_reweight_dense_keeps_columns_stochastic(clip, temp):
+    A = _col_stochastic(3, 6)
+    R = reweight_dense(A, clip=clip, temp=temp)
+    np.testing.assert_allclose(np.asarray(jnp.sum(R, axis=1)), 1.0, atol=1e-5)
+    if clip is not None:
+        off = np.asarray(R * (1.0 - jnp.eye(6)))
+        assert off.max() <= clip + 1e-6
+
+
+def test_reweight_identity_when_off():
+    A = _col_stochastic(2, 5)
+    np.testing.assert_array_equal(
+        np.asarray(reweight_dense(A, clip=None, temp=None)), np.asarray(A)
+    )
+
+
+def test_reweight_edge_matches_dense():
+    K = 6
+    topo = ring(K)
+    A = _col_stochastic(2, K) * jnp.asarray(
+        topo.adjacency | np.eye(K, dtype=bool), jnp.float32
+    )[None]
+    A = A / jnp.sum(A, axis=1, keepdims=True)
+    src, dst = np.nonzero(np.asarray(topo.adjacency))
+    A_self = A[:, jnp.arange(K), jnp.arange(K)]
+    A_e = A[:, src, dst]
+    rs, re = reweight_edge(A_self, A_e, jnp.asarray(dst), K, clip=0.2, temp=0.8)
+    D = reweight_dense(A, clip=0.2, temp=0.8)
+    np.testing.assert_allclose(
+        np.asarray(rs), np.asarray(D[:, jnp.arange(K), jnp.arange(K)]), atol=1e-5
+    )
+    np.testing.assert_allclose(np.asarray(re), np.asarray(D[:, src, dst]), atol=1e-5)
+
+
+def test_reweight_local_matches_dense_column():
+    # one destination's column: self weight + 3 neighbour weights
+    w = jnp.asarray([[0.4, 0.3, 0.25, 0.05]], jnp.float32).T  # (4, 1) col
+    w_self, w_nbrs = reweight_local(w[0], w[1:], clip=0.2)
+    np.testing.assert_allclose(
+        float(w_self[0]) + float(jnp.sum(w_nbrs)), 1.0, atol=1e-6
+    )
+    assert float(jnp.max(w_nbrs)) <= 0.2 + 1e-6
+    np.testing.assert_allclose(float(w_self[0]), 0.4 + 0.1 + 0.05, atol=1e-6)
+
+
+def test_clip_reduces_byzantine_weight_mass():
+    K = 8
+    byz = jnp.zeros((K,), bool).at[2].set(True).at[5].set(True)
+    A = _col_stochastic(2, K, seed=1)
+    clipped = reweight_dense(A, clip=0.05)
+    before = float(byzantine_weight_mass(A, byz))
+    after = float(byzantine_weight_mass(clipped, byz))
+    assert after < before
+
+
+def test_parse_combine():
+    assert parse_combine("drt") == ("drt", None)
+    assert parse_combine("median") == ("median", None)
+    assert parse_combine("trimmed:0.25") == ("trimmed", 0.25)
+    with pytest.raises(ValueError, match="combine"):
+        parse_combine("nope")
+    with pytest.raises(ValueError, match="trim"):
+        parse_combine("trimmed:0.75")
+
+
+def test_robust_combine_median_matches_hand_reference():
+    # K=4 line graph: agent 1's closed neighbourhood is {0, 1, 2}
+    adj = np.zeros((4, 4), bool)
+    for i in range(3):
+        adj[i, i + 1] = adj[i + 1, i] = True
+    C = jnp.asarray(adj | np.eye(4, dtype=bool), jnp.float32)
+    x = jnp.asarray(
+        [[[1.0, 10.0], [2.0, -5.0], [3.0, 0.0], [100.0, 7.0]]], jnp.float32
+    )  # (1 slot, K=4, s=2)
+    (med,) = robust_combine(C, (x,), "median", None)
+    med = np.asarray(med)
+    # per coordinate over {1,2,3,100}-style neighbourhoods
+    np.testing.assert_allclose(med[0, 1], [2.0, 0.0])  # median of {1,2,3},{10,-5,0}
+    np.testing.assert_allclose(med[0, 0], [1.5, 2.5])  # even nbhd {0,1}: mid-pair mean
+    (trim,) = robust_combine(C, (x,), "trimmed", 0.34)
+    trim = np.asarray(trim)
+    # n=3, g=1: drop min+max, keep middle == median
+    np.testing.assert_allclose(trim[0, 1], [2.0, 0.0])
+    # trimming never mixes in values from outside the neighbourhood
+    assert abs(float(med[0, 0, 0])) < 50.0
+
+
+def test_gather_median_combine_resists_outlier():
+    pK, part, layout = _setup()
+    # clustered honest agents + one wild fault
+    pK = jax.tree.map(lambda x: x[:1] + 0.01 * (x - x[:1]), pK)
+    C = jnp.asarray(ring(8).c_matrix(), jnp.float32)
+    plan = make_fault_plan(8, byzantine=0.125, fault_model="scale:50.0")
+
+    def dis(out):
+        return sum(
+            float(np.square(np.asarray(a) - np.asarray(a).mean(0)).sum())
+            for a in jax.tree.leaves(out)
+        )
+
+    base = gather_consensus_rounds(
+        part, pK, C, DRTConfig(), rounds=4, layout=layout,
+        algorithm="classical", metropolis=jnp.asarray(ring(8).metropolis(), jnp.float32),
+        faults=plan.realize(0, 4),
+    )[0]
+    med = gather_consensus_rounds(
+        part, pK, C, DRTConfig(), rounds=4, layout=layout, combine="median",
+        faults=plan.realize(0, 4),
+    )[0]
+    assert dis(med) < dis(base)
+
+
+# ---------------------------------------------------------------------------
+# loud validation on every surface
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("beta", [-0.1, 1.0, 1.5])
+def test_gather_rejects_bad_momentum(beta):
+    pK, part, layout = _setup()
+    C = jnp.asarray(ring(8).c_matrix(), jnp.float32)
+    with pytest.raises(ValueError, match="momentum"):
+        gather_consensus_rounds(
+            part, pK, C, DRTConfig(), rounds=2, layout=layout, momentum=beta,
+        )
+
+
+@pytest.mark.parametrize("beta", [-0.1, 1.0])
+def test_permute_engine_rejects_bad_momentum(beta):
+    from repro.core.consensus import PermuteConsensus
+
+    pK, part, _ = _setup()
+    local = jax.tree.map(lambda x: x[0], pK)
+    with pytest.raises(ValueError, match="momentum"):
+        PermuteConsensus(
+            part, ring(8), DRTConfig(), axis_name="data", momentum=beta
+        )(local, rounds=2)
+
+
+def test_trainer_config_rejects_bad_momentum():
+    from repro.core.decentralized import TrainerConfig
+
+    with pytest.raises(ValueError, match="momentum"):
+        TrainerConfig(consensus_momentum=1.0)
+    with pytest.raises(ValueError, match="momentum"):
+        TrainerConfig(consensus_momentum=-0.2)
+
+
+def test_train_cli_rejects_bad_momentum_and_fault_specs():
+    from repro.launch.train import main
+
+    with pytest.raises(SystemExit):
+        main(["--consensus-momentum", "1.5", "--steps", "1"])
+    with pytest.raises(SystemExit):
+        main(["--consensus-momentum", "-0.1", "--steps", "1"])
+
+
+def test_trust_knob_validation():
+    from repro.faults.robust import validate_trust_knobs
+
+    validate_trust_knobs(None, None)
+    validate_trust_knobs(0.3, 0.5)
+    with pytest.raises(ValueError, match="clip"):
+        validate_trust_knobs(0.0, None)
+    with pytest.raises(ValueError, match="clip"):
+        validate_trust_knobs(1.5, None)
+    with pytest.raises(ValueError, match="temp"):
+        validate_trust_knobs(None, 0.0)
+
+
+def test_permute_engine_refuses_fault_injection():
+    from repro.core.decentralized import TrainerConfig
+    from repro.launch.train import make_train_step
+    from repro.models import get_bundle
+    from repro.optim import adamw
+
+    bundle = get_bundle("qwen3-4b-smoke", num_agents=4)
+    with pytest.raises(ValueError, match="gather-engine"):
+        make_train_step(
+            bundle, ring(4), adamw(3e-3),
+            TrainerConfig(byzantine=0.25, fault_model="sign_flip"),
+            consensus_impl="permute",
+        )

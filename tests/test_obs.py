@@ -320,10 +320,12 @@ def test_zero_rounds_rejected_with_obs():
     with pytest.raises(ValueError, match="rounds >= 1"):
         gather_consensus_rounds(
             part, pK, C, DRTConfig(), rounds=0, layout=layout, obs=ObsConfig())
-    em = empty_metrics(part.num_layers)
+    em = empty_metrics(part.num_layers, 8)
     assert em.wire_send_bytes.shape == (0,)
     assert em.effective_rounds.shape == (0,)
     assert em.momentum_norm.shape == (0,)
+    assert em.suspicion.shape == (0, 8)
+    assert em.byzantine_weight_mass.shape == (0,)
 
 
 # ---------------------------------------------------------------------------
@@ -364,7 +366,7 @@ def test_jsonl_sink_round_trip(tmp_path):
 def test_consensus_records_many_step_stacks():
     """Slicing a make_train_many_steps (n_steps, rounds, ...) stack per step
     produces per-round records with the right step keys."""
-    cm = empty_metrics(2)
+    cm = empty_metrics(2, 8)
     stacked = jax.tree.map(
         lambda x: jnp.zeros((4, 3) + x.shape[1:], x.dtype), cm)
     recs = []
@@ -421,6 +423,8 @@ def test_jsonl_sink_serializes_bf16_metrics(tmp_path):
         edges=z16 + 8.0,
         effective_rounds=z16 + 3.0,
         momentum_norm=z16,
+        suspicion=jnp.zeros((3, 4), jnp.bfloat16),
+        byzantine_weight_mass=z16,
     )
     path = tmp_path / "bf16.jsonl"
     with obs_sink.JsonlSink(path) as sink:
